@@ -1,0 +1,32 @@
+"""§3 (ref 41) DiLoCo: pod-axis (ISL) traffic vs synchronous DP, and what
+the §2.1 link budget supports at formation distances."""
+import time
+
+from repro.core.isl import OpticalTerminal
+from repro.models import registry
+from repro.train.diloco import isl_bytes_per_step
+
+
+def run():
+    t0 = time.time()
+    rows = []
+    for arch in ("command-r-35b", "qwen3-moe-30b-a3b", "suncatcher-lm-100m"):
+        n = registry.get_config(arch).param_count()
+        for h in (1, 50, 500):
+            acct = isl_bytes_per_step(n, h, compress="int8" if h > 1
+                                      else None)
+            rows.append({"arch": arch, "inner_steps": h, **acct})
+    term = OpticalTerminal()
+    isl_bps = float(term.aggregate_bandwidth_bps(150.0))  # formation dist
+    us = (time.time() - t0) * 1e6 / len(rows)
+    cr = [r for r in rows if r["arch"] == "command-r-35b"]
+    sync_s = cr[0]["sync_bytes_per_step"] * 8 / isl_bps
+    diloco_s = cr[2]["diloco_bytes_per_step"] * 8 / isl_bps
+    derived = (f"ISL@150m={isl_bps/1e12:.0f}Tbps; command-r sync sync-DP"
+               f" {sync_s*1e3:.1f}ms/step vs DiLoCo(H=500,int8)"
+               f" {diloco_s*1e3:.3f}ms/step ({cr[2]['reduction']:.0f}x)")
+    return [("diloco_isl_traffic", us, derived)], rows
+
+
+if __name__ == "__main__":
+    print(run()[0][0][2])

@@ -1,0 +1,32 @@
+"""Figures 2+3: 81-satellite free-fall constellation over one orbit under
+gravity + J2: bounded 2:1 cluster, two shape-cycles, 100-200 m neighbors."""
+import time
+
+import jax
+
+jax.config.update("jax_enable_x64", True)
+import jax.numpy as jnp
+
+from repro.core.orbital import (ClusterDesign, neighbor_distances,
+                                simulate_cluster)
+
+
+def run():
+    t0 = time.time()
+    d = ClusterDesign()
+    ts, hill, rel_inertial = simulate_cluster(d, n_orbits=1.0, dt=5.0)
+    direct, diag = neighbor_distances(hill)
+    ymax = float(jnp.abs(hill[..., 1]).max())
+    xmax = float(jnp.abs(hill[..., 0]).max())
+    us = (time.time() - t0) * 1e6
+    derived = (f"81 sats; ellipse {ymax:.0f}x{xmax:.0f}m (ratio "
+               f"{ymax/xmax:.2f}:1); direct-neighbor "
+               f"{float(direct.min()):.0f}-{float(direct.max()):.0f}m; "
+               f"diag {float(diag.min()):.0f}-{float(diag.max()):.0f}m; "
+               f"sun-sync incl {jnp.degrees(d.inclination()):.2f}deg")
+    return [("fig2_fig3_constellation", us, derived)], {
+        "ts": ts, "hill": hill, "direct": direct, "diag": diag}
+
+
+if __name__ == "__main__":
+    print(run()[0][0][2])

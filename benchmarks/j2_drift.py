@@ -1,0 +1,26 @@
+"""§2.2 J2-drift compensation: numerically tuned in-plane axis ratio."""
+import time
+
+import jax
+
+jax.config.update("jax_enable_x64", True)
+
+from repro.core.orbital import ClusterDesign, j2_drift_rate
+
+
+def run(fast: bool = True):
+    t0 = time.time()
+    kappas = (1.0, 0.999) if fast else (1.0, 0.9995, 0.999, 0.9985, 1.0037)
+    rates = {k: j2_drift_rate(ClusterDesign(kappa=k), n_orbits=6.0)
+             for k in kappas}
+    us = (time.time() - t0) * 1e6 / len(kappas)
+    base, best_k = rates[1.0], min(rates, key=rates.get)
+    derived = (f"uncompensated {base:.1f} m/s/yr/km; tuned kappa={best_k}"
+               f" -> {rates[best_k]:.1f} m/s/yr/km"
+               f" ({base/max(rates[best_k],1e-9):.1f}x reduction; paper: <3"
+               f" at its 2:1.0037 convention)")
+    return [("j2_drift_compensation", us, derived)], rates
+
+
+if __name__ == "__main__":
+    print(run(fast=False)[0][0][2])

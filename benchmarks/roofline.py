@@ -1,0 +1,49 @@
+"""Roofline table from the dry-run JSONs (benchmarks/results/dryrun)."""
+import glob
+import json
+import os
+import time
+
+RESULTS = os.path.join(os.path.dirname(__file__), "results", "dryrun")
+
+
+def load(mesh="single"):
+    rows = []
+    for p in sorted(glob.glob(os.path.join(RESULTS, f"*_{mesh}.json"))):
+        r = json.load(open(p))
+        a = r.get("analytic", r["roofline"])
+        mem = r["memory"]
+        rows.append({
+            "arch": r["arch"], "shape": r["shape"], "mesh": mesh,
+            "chips": r["chips"],
+            "hbm_GiB": round((mem["argument_size_in_bytes"]
+                              + mem["temp_size_in_bytes"]) / 2**30, 2),
+            "compute_s": a["compute_s"], "memory_s": a["memory_s"],
+            "collective_s": a["collective_s"], "dominant": a["dominant"],
+            "mfu": a["mfu"],
+            "hlo_flops_dev": r["cost_analysis"].get("flops", 0),
+            "wire_GB_loop_aware": round(
+                r.get("collectives_loop_aware", {}).get("wire_bytes", 0)
+                / 1e9, 1),
+        })
+    return rows
+
+
+def run():
+    t0 = time.time()
+    rows = load("single") + load("multi")
+    us = (time.time() - t0) * 1e6 / max(len(rows), 1)
+    n_fit = sum(1 for r in rows if r["hbm_GiB"] <= 16.0)
+    derived = (f"{len(rows)} compiled cells; {n_fit} fit 16GiB HBM; "
+               f"dominant terms: "
+               + ",".join(sorted({r['dominant'] for r in rows})))
+    return [("roofline_dryrun_table", us, derived)], rows
+
+
+if __name__ == "__main__":
+    out, rows = run()
+    print(out[0][2])
+    for r in rows:
+        print(f"{r['arch']:24s} {r['shape']:12s} {r['mesh']:6s} "
+              f"{r['hbm_GiB']:7.2f}GiB {r['dominant']:>10s} "
+              f"mfu={r['mfu']:.1%}")

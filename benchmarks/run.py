@@ -1,0 +1,23 @@
+"""Benchmark harness: one entry per paper table/figure + the dry-run
+roofline. Prints ``name,us_per_call,derived`` CSV (assignment format)."""
+
+
+def main() -> None:
+    from benchmarks import (diloco_traffic, fig1_isl, fig2_constellation,
+                            fig4_launch, j2_drift, radiation_table,
+                            roofline, table1_power, train_throughput)
+    mods = [fig1_isl, fig2_constellation, j2_drift, radiation_table,
+            fig4_launch, table1_power, diloco_traffic, roofline,
+            train_throughput]
+    print("name,us_per_call,derived")
+    for mod in mods:
+        try:
+            out, _ = mod.run()
+            for name, us, derived in out:
+                print(f'{name},{us:.1f},"{derived}"')
+        except Exception as e:  # keep the harness running
+            print(f'{mod.__name__},-1,"FAILED: {e!r}"')
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,34 @@
+"""Measured CPU micro-benchmark: train/serve step wall time for the demo
+model (the only cell actually executable in this container)."""
+import time
+
+import jax
+
+from repro.models import registry
+from repro.train import (AdamWConfig, DataConfig, SyntheticLM, TrainConfig,
+                         init_train_state, make_train_step)
+
+
+def run():
+    cfg = registry.get_reduced_config("suncatcher-lm-100m")
+    fns = registry.model_fns(cfg)
+    tcfg = TrainConfig(adamw=AdamWConfig())
+    state = init_train_state(jax.random.PRNGKey(0), cfg, fns)
+    data = SyntheticLM(DataConfig(vocab_size=cfg.vocab_size, seq_len=64,
+                                  global_batch=8))
+    step = jax.jit(make_train_step(cfg, fns, tcfg))
+    batch = data.batch_at(0)
+    state, _ = step(state, batch)          # compile
+    t0 = time.time()
+    n = 10
+    for i in range(n):
+        state, m = step(state, data.batch_at(i + 1))
+    jax.block_until_ready(m["loss"])
+    us = (time.time() - t0) * 1e6 / n
+    tokens = 8 * 64
+    derived = f"{tokens/ (us/1e6):.0f} tokens/s on 1 CPU core (smoke cfg)"
+    return [("train_step_cpu_micro", us, derived)], None
+
+
+if __name__ == "__main__":
+    print(run()[0][0])

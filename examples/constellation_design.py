@@ -1,0 +1,39 @@
+"""Design studio: size a space datacenter — formation, ISL bandwidths,
+radiation-driven checkpoint cadence, launch economics (paper §1.2 pipeline).
+
+    PYTHONPATH=src python examples/constellation_design.py
+"""
+import jax
+
+jax.config.update("jax_enable_x64", True)
+import numpy as np
+
+from repro.core import SpaceCluster
+from repro.core.isl import ISLNetwork
+from repro.core.orbital import ClusterDesign, hcw_state
+
+
+def main():
+    cluster = SpaceCluster()
+    print("== SpaceCluster summary ==")
+    for k, v in cluster.summary().items():
+        print(f"  {k}: {v:,.2f}" if isinstance(v, float) else
+              f"  {k}: {v}")
+
+    design = ClusterDesign()
+    pos = np.asarray(hcw_state(design.alpha_beta(), design.n, 0.0)[..., :3])
+    net = ISLNetwork()
+    edges, caps = net.neighbor_graph(pos, k=8)
+    print(f"\n== ISL topology at t=0 ({len(edges)} links) ==")
+    print(f"  min link {caps.min()/1e12:.1f} Tbps, "
+          f"median {np.median(caps)/1e12:.1f} Tbps")
+
+    print("\n== launch economics ==")
+    for price in (3600.0, 200.0):
+        print(f"  at ${price:.0f}/kg: cluster launch "
+              f"${cluster.launch_cost_usd(price)/1e6:.0f}M, power price "
+              f"${cluster.launched_power_price(price):,.0f}/kW/y")
+
+
+if __name__ == "__main__":
+    main()

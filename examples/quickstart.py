@@ -1,0 +1,45 @@
+"""Quickstart: train a small LM under the full space-runtime — synthetic
+data, AdamW + cosine, SDC fault injection at (an accelerated multiple of)
+the paper's measured orbital rate, detection screens, checkpoint/rollback.
+
+    PYTHONPATH=src python examples/quickstart.py
+"""
+import tempfile
+
+import jax
+
+from repro.core.radiation import RadiationEnvironment, SDCInjector
+from repro.models import registry
+from repro.train import (AdamWConfig, DataConfig, FTConfig,
+                         FaultTolerantTrainer, SyntheticLM, TrainConfig,
+                         init_train_state, make_train_step)
+
+
+def main():
+    cfg = registry.get_reduced_config("suncatcher-lm-100m")
+    fns = registry.model_fns(cfg)
+    tcfg = TrainConfig(adamw=AdamWConfig(lr=3e-3), warmup_steps=5,
+                       total_steps=100)
+    state = init_train_state(jax.random.PRNGKey(0), cfg, fns)
+    data = SyntheticLM(DataConfig(vocab_size=cfg.vocab_size, seq_len=64,
+                                  global_batch=8))
+    step = jax.jit(make_train_step(cfg, fns, tcfg))
+
+    env = RadiationEnvironment()
+    # accelerate the orbital SEE rate so a short demo actually sees events
+    injector = SDCInjector(env, n_chips=256 * 81, step_time_s=1.0,
+                           rate_multiplier=50.0, seed=42)
+    with tempfile.TemporaryDirectory() as d:
+        ft = FTConfig(checkpoint_dirs=(d,), checkpoint_every=20)
+        trainer = FaultTolerantTrainer(step, state, data, ft,
+                                       injector=injector)
+        hist = trainer.run(60)
+    print(f"steps: {len(hist)}  first loss {hist[0]['loss']:.3f}  "
+          f"last loss {hist[-1]['loss']:.3f}")
+    print(f"fault-tolerance stats: {trainer.stats}")
+    assert hist[-1]["loss"] < hist[0]["loss"]
+    print("OK: loss decreased under injected radiation faults")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,77 @@
+"""End-to-end driver: train the ~100M-param demo LM for a few hundred steps
+with DiLoCo across (emulated) satellite pods + fault tolerance.
+
+    PYTHONPATH=src python examples/train_100m.py [--steps 300] [--full]
+
+--full uses the real 100M config (slow on 1 CPU core); default uses a
+reduced config so the example finishes in minutes while exercising every
+layer of the stack (DiLoCo outer loop, int8 delta compression accounting,
+checkpointing, SDC screens).
+"""
+import argparse
+import tempfile
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import registry
+from repro.train import (AdamWConfig, DataConfig, DiLoCoConfig, SyntheticLM,
+                         TrainConfig, diloco_init, make_inner_steps,
+                         outer_step)
+from repro.train import checkpoint as ckpt
+from repro.train.diloco import isl_bytes_per_step
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=200)
+    ap.add_argument("--full", action="store_true")
+    ap.add_argument("--pods", type=int, default=2)
+    ap.add_argument("--inner", type=int, default=10)
+    args = ap.parse_args()
+
+    arch = "suncatcher-lm-100m"
+    cfg = (registry.get_config(arch) if args.full
+           else registry.get_reduced_config(arch))
+    fns = registry.model_fns(cfg)
+    tcfg = TrainConfig(adamw=AdamWConfig(lr=3e-3), warmup_steps=10,
+                       total_steps=args.steps)
+    dcfg = DiLoCoConfig(n_pods=args.pods, inner_steps=args.inner)
+    data = SyntheticLM(DataConfig(vocab_size=cfg.vocab_size, seq_len=64,
+                                  global_batch=8))
+
+    params = fns.init(jax.random.PRNGKey(0), cfg)
+    n_params = cfg.param_count()
+    print(f"arch={cfg.name} params={n_params/1e6:.1f}M pods={args.pods} "
+          f"H={args.inner}")
+    acct = isl_bytes_per_step(n_params, args.inner, compress="int8")
+    print(f"ISL traffic: sync {acct['sync_bytes_per_step']/1e6:.1f} MB/step"
+          f" -> DiLoCo+int8 {acct['diloco_bytes_per_step']/1e6:.3f} MB/step"
+          f" ({acct['reduction']:.0f}x reduction)")
+
+    d_state = diloco_init(params, dcfg)
+    inner = jax.jit(make_inner_steps(cfg, fns, tcfg, dcfg))
+
+    with tempfile.TemporaryDirectory() as ckdir:
+        s = 0
+        outer_rounds = max(1, args.steps // args.inner)
+        for r in range(outer_rounds):
+            batches = jax.tree.map(
+                lambda *xs: jnp.stack(xs),
+                *[jax.tree.map(lambda *hh: jnp.stack(hh),
+                               *[data.batch_at(s + p * 100000 + i)
+                                 for i in range(dcfg.inner_steps)])
+                  for p in range(dcfg.n_pods)])
+            d_state, loss = inner(d_state, batches)
+            d_state = outer_step(d_state, dcfg)
+            s += dcfg.inner_steps
+            if r % 2 == 0:
+                ckpt.save({"params": d_state["global_params"],
+                           "step": jnp.asarray(s)}, ckdir, s, keep=2)
+            print(f"outer {r:3d} step {s:4d} loss/pod "
+                  f"{[f'{x:.3f}' for x in jax.device_get(loss)]}")
+    print("OK: DiLoCo training complete")
+
+
+if __name__ == "__main__":
+    main()

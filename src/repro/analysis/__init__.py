@@ -1,0 +1,3 @@
+"""Compiled-artifact analysis: HLO collective accounting + roofline terms."""
+from .hlo import collective_bytes
+from .roofline import RooflineTerms, model_flops_for, roofline

@@ -1,0 +1,140 @@
+"""Post-SPMD HLO text analysis: collective operand byte accounting.
+
+`compiled.cost_analysis()` has no collective-bytes entry, so the roofline's
+collective term is derived by parsing the partitioned HLO: every
+all-reduce / all-gather / reduce-scatter / all-to-all / collective-permute
+result shape is summed (the compiled module is the per-device program, so
+these are per-device bytes).
+
+Wire-byte factors (ring algorithms, N = participants): all-reduce moves
+~2x its buffer per device; all-gather / reduce-scatter / all-to-all move
+~(N-1)/N ~ 1x; collective-permute exactly 1x.
+"""
+from __future__ import annotations
+
+import re
+from collections import defaultdict
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "c128": 16,
+}
+
+COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+               "collective-permute")
+
+# e.g. "f32[128,1024]{1,0}" — dims optional (scalar "f32[]")
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+# HLO line: "  %name = <shape-or-tuple> all-reduce(...)" (also "all-reduce-start")
+_OP_RE = re.compile(
+    r"=\s+((?:\([^)]*\))|(?:\S+))\s+(" + "|".join(COLLECTIVES)
+    + r")(?:-start|-done)?\(")
+
+WIRE_FACTOR = {"all-reduce": 2.0, "all-gather": 1.0, "reduce-scatter": 1.0,
+               "all-to-all": 1.0, "collective-permute": 1.0}
+
+
+def _shape_bytes(shape_str: str) -> int:
+    total = 0
+    for dtype, dims in _SHAPE_RE.findall(shape_str):
+        if dtype not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dtype]
+    return total
+
+
+def collective_bytes(hlo_text: str) -> dict:
+    """Per-collective-kind result bytes (per device) from partitioned HLO."""
+    out = defaultdict(int)
+    counts = defaultdict(int)
+    for m in _OP_RE.finditer(hlo_text):
+        shape_str, kind = m.group(1), m.group(2)
+        if "-done(" in m.group(0):
+            continue  # avoid double counting async start/done pairs
+        out[kind] += _shape_bytes(shape_str)
+        counts[kind] += 1
+    return {"bytes": dict(out), "counts": dict(counts),
+            "wire_bytes": sum(WIRE_FACTOR[k] * v for k, v in out.items())}
+
+
+# --------------------------------------------------------------------------
+# Loop-aware accounting: XLA prints each while body once, but it executes
+# trip_count times. Collectives inside scan-over-layers / kv-chunk / loss-
+# chunk loops must be multiplied out, or the collective roofline term is
+# undercounted by up to the layer count.
+# --------------------------------------------------------------------------
+# computation definitions start at column 0: "%name (args...) -> type {"
+# (argument lists may contain nested tuple parens, so don't try to span them)
+_COMP_RE = re.compile(r"^(?:ENTRY )?%([\w.\-]+) \(", re.M)
+_WHILE_RE = re.compile(
+    r"while\([^)]*\), condition=%?([\w.\-]+), body=%?([\w.\-]+)"
+    r"(?:[^\n]*?\"known_trip_count\":\{\"n\":\"(\d+)\"\})?")
+
+
+def _split_computations(hlo_text: str):
+    """name -> body text, using the '%name (args) -> type {' headers."""
+    headers = [(m.start(), m.group(1)) for m in _COMP_RE.finditer(hlo_text)]
+    comps = {}
+    for i, (pos, name) in enumerate(headers):
+        end = headers[i + 1][0] if i + 1 < len(headers) else len(hlo_text)
+        comps[name] = hlo_text[pos:end]
+    return comps
+
+
+def collective_bytes_loop_aware(hlo_text: str,
+                                default_trip: int = 1) -> dict:
+    """Collective bytes with while-body contributions x known_trip_count.
+
+    Loops without a known_trip_count annotation are charged x default_trip
+    and reported in `unknown_loops`.
+    """
+    comps = _split_computations(hlo_text)
+    unknown = []
+
+    def direct_bytes(body: str):
+        b = defaultdict(int)
+        for m in _OP_RE.finditer(body):
+            if "-done(" in m.group(0):
+                continue
+            b[m.group(2)] += _shape_bytes(m.group(1))
+        return b
+
+    memo = {}
+
+    def total(name: str, stack=()):
+        if name in memo:
+            return memo[name]
+        if name not in comps or name in stack:
+            return {}
+        body = comps[name]
+        acc = direct_bytes(body)
+        for m in _WHILE_RE.finditer(body):
+            _, body_name, trip = m.group(1), m.group(2), m.group(3)
+            if trip is None:
+                unknown.append(body_name)
+                mult = default_trip
+            else:
+                mult = int(trip)
+            sub = total(body_name, stack + (name,))
+            for k, v in sub.items():
+                acc[k] += mult * v
+        memo[name] = dict(acc)
+        return memo[name]
+
+    # entry computation: the one containing a while whose body we never saw
+    # referenced — simplest robust choice: the computation named in ENTRY
+    entry = None
+    m = re.search(r"ENTRY %?([\w.\-]+)", hlo_text)
+    if m:
+        entry = m.group(1)
+    if entry is None or entry not in comps:
+        entry = max(comps, key=lambda n: len(comps[n]))
+    out = total(entry)
+    return {"bytes": out, "unknown_loops": sorted(set(unknown)),
+            "wire_bytes": sum(WIRE_FACTOR.get(k, 1.0) * v
+                              for k, v in out.items())}

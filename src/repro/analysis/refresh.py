@@ -1,0 +1,35 @@
+"""Recompute the `analytic` block of existing dry-run JSONs in place
+(no recompilation — pure formula refresh)."""
+import glob
+import json
+import os
+import sys
+
+from repro.analysis.analytic import analytic_roofline
+from repro.models import registry
+
+
+def refresh(results_dir):
+    for p in sorted(glob.glob(os.path.join(results_dir, "*.json"))):
+        r = json.load(open(p))
+        cfg = registry.get_config(r["arch"])
+        multi = r["multi_pod"]
+        sizes = {"pod": 2, "data": 16, "model": 16} if multi else \
+            {"data": 16, "model": 16}
+        a = analytic_roofline(
+            cfg, r["kind"], r["global_batch"], r["seq_len"],
+            chips=r["chips"],
+            data_shards=sizes.get("data", 1) * sizes.get("pod", 1),
+            model_shards=sizes["model"],
+            wire_bytes_per_device=r.get("collectives_loop_aware", {}).get(
+                "wire_bytes", 0.0),
+            microbatches=r.get("microbatches", 1))
+        r["analytic"] = a
+        json.dump(r, open(p, "w"), indent=1)
+    print("refreshed", results_dir)
+
+
+if __name__ == "__main__":
+    refresh(sys.argv[1] if len(sys.argv) > 1 else
+            os.path.join(os.path.dirname(__file__), "..", "..", "..",
+                         "benchmarks", "results", "dryrun"))

@@ -1,0 +1,86 @@
+"""Three-term roofline from the compiled dry-run artifact.
+
+    compute    = HLO_FLOPs_per_device / peak_FLOPs_per_chip
+    memory     = HLO_bytes_per_device / HBM_bw_per_chip
+    collective = wire_bytes_per_device / link_bw
+
+`compiled.cost_analysis()` reports the per-partition (per-device) module, so
+no further division by chip count is needed. The collective term uses ICI
+bandwidth for intra-pod axes; the `pod` hop instead has the FSO ISL budget
+from repro.core.isl (1.2 TB/s per satellite at the formation distances —
+much faster than ICI per the §2.1 link budget, so ICI remains the binding
+constraint whenever both carry traffic).
+
+MODEL_FLOPS utility: 6*N*D (train) or 2*N*D (forward-only) with N = active
+params — the ratio MODEL_FLOPS / (HLO_FLOPs * chips) exposes remat/dispatch
+waste.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+from repro.core.system import ChipSpec
+
+
+@dataclass(frozen=True)
+class RooflineTerms:
+    compute_s: float
+    memory_s: float
+    collective_s: float
+    flops_per_device: float
+    bytes_per_device: float
+    wire_bytes_per_device: float
+    model_flops: float
+    chips: int
+
+    @property
+    def dominant(self) -> str:
+        terms = {"compute": self.compute_s, "memory": self.memory_s,
+                 "collective": self.collective_s}
+        return max(terms, key=terms.get)
+
+    @property
+    def step_time_s(self) -> float:
+        """No-overlap upper bound; perfect overlap would be max(terms)."""
+        return max(self.compute_s, self.memory_s, self.collective_s)
+
+    @property
+    def utility_ratio(self) -> float:
+        total_hlo = self.flops_per_device * self.chips
+        return self.model_flops / total_hlo if total_hlo else 0.0
+
+    @property
+    def mfu(self) -> float:
+        """Model-FLOPs utilization at the roofline-bound step time."""
+        if self.step_time_s == 0:
+            return 0.0
+        peak = ChipSpec().peak_bf16_flops * self.chips
+        return self.model_flops / (self.step_time_s * peak)
+
+
+def roofline(cost_analysis: dict, wire_bytes: float, *, chips: int,
+             model_flops: float, chip: ChipSpec = ChipSpec(),
+             pod_axis_bytes: float = 0.0,
+             isl_bytes_per_s: float = 1.2e12) -> RooflineTerms:
+    flops = float(cost_analysis.get("flops", 0.0))
+    bytes_ = float(cost_analysis.get("bytes accessed", 0.0))
+    coll = wire_bytes / chip.ici_bytes_per_s
+    if pod_axis_bytes:
+        coll += pod_axis_bytes / isl_bytes_per_s
+    return RooflineTerms(
+        compute_s=flops / chip.peak_bf16_flops,
+        memory_s=bytes_ / chip.hbm_bytes_per_s,
+        collective_s=coll,
+        flops_per_device=flops,
+        bytes_per_device=bytes_,
+        wire_bytes_per_device=wire_bytes,
+        model_flops=model_flops,
+        chips=chips,
+    )
+
+
+def model_flops_for(arch_cfg, shape_kind: str, tokens: int) -> float:
+    n = arch_cfg.active_param_count()
+    if shape_kind == "train":
+        return 6.0 * n * tokens
+    return 2.0 * n * tokens   # prefill / decode forward-only

@@ -1,0 +1,6 @@
+"""The paper's contributions: orbital formation flight, FSO inter-satellite
+links, TPU radiation effects, launch economics — and their composition into
+a space-datacenter system spec."""
+from .system import ChipSpec, SatelliteSpec, SpaceCluster
+
+__all__ = ["ChipSpec", "SatelliteSpec", "SpaceCluster"]

@@ -1,0 +1,20 @@
+"""Orbital dynamics, formation design, and differentiable formation control."""
+from . import constants
+from .cluster import (ClusterDesign, j2_drift_rate, neighbor_distances,
+                      secular_drift_rates, simulate_cluster,
+                      sun_sync_inclination, tune_axis_ratio)
+from .control import ControlProblem, rollout, train_controller
+from .dynamics import (accel_j2, accel_point_mass, make_rhs, mean_motion,
+                       specific_energy)
+from .frames import eci_to_hill, hill_basis, hill_to_eci
+from .hcw import hcw_propagate, hcw_state, lattice_alpha_beta
+from .integrators import dopri5_step, integrate, integrate_dense, rk4_step
+
+__all__ = [
+    "constants", "ClusterDesign", "j2_drift_rate", "neighbor_distances",
+    "simulate_cluster", "sun_sync_inclination", "ControlProblem", "rollout",
+    "train_controller", "accel_j2", "accel_point_mass", "make_rhs",
+    "mean_motion", "specific_energy", "eci_to_hill", "hill_basis",
+    "hill_to_eci", "hcw_propagate", "hcw_state", "lattice_alpha_beta",
+    "dopri5_step", "integrate", "integrate_dense", "rk4_step",
+]

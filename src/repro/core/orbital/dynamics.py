@@ -1,0 +1,74 @@
+"""Orbital dynamics right-hand sides: point-mass gravity + J2, optional drag.
+
+State convention: y = concat([r, v]) with r, v in ECI coordinates [m, m/s].
+All functions are pure JAX and differentiable (used by the backprop-through-ODE
+formation controller per the paper's supplementary material).
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from .constants import J2_EARTH, MU_EARTH, R_EARTH
+
+
+def accel_point_mass(r: jnp.ndarray, mu: float = MU_EARTH) -> jnp.ndarray:
+    """Newtonian two-body acceleration. r: (..., 3)."""
+    rn = jnp.linalg.norm(r, axis=-1, keepdims=True)
+    return -mu * r / rn**3
+
+
+def accel_j2(r: jnp.ndarray, mu: float = MU_EARTH, j2: float = J2_EARTH,
+             r_eq: float = R_EARTH) -> jnp.ndarray:
+    """J2 (oblateness) perturbation acceleration in ECI. r: (..., 3).
+
+    a_xy = -(3/2) J2 (mu/r^2)(Re/r)^2 (x/r) (1 - 5 z^2/r^2)
+    a_z  = -(3/2) J2 (mu/r^2)(Re/r)^2 (z/r) (3 - 5 z^2/r^2)
+    """
+    x, y, z = r[..., 0], r[..., 1], r[..., 2]
+    rn = jnp.linalg.norm(r, axis=-1)
+    k = -1.5 * j2 * mu * r_eq**2 / rn**5
+    z2_r2 = (z / rn) ** 2
+    ax = k * x * (1.0 - 5.0 * z2_r2)
+    ay = k * y * (1.0 - 5.0 * z2_r2)
+    az = k * z * (3.0 - 5.0 * z2_r2)
+    return jnp.stack([ax, ay, az], axis=-1)
+
+
+def accel_drag(r: jnp.ndarray, v: jnp.ndarray, bc: float = 0.0,
+               rho0: float = 2.0e-13, h0: float = 650e3,
+               scale_h: float = 70e3) -> jnp.ndarray:
+    """Simple exponential-atmosphere drag, a = -1/2 rho v |v| / BC.
+
+    bc is the inverse ballistic coefficient [m^2/kg * Cd]; bc=0 disables drag.
+    Used only for the control experiments (differential drag disturbance).
+    """
+    if isinstance(bc, float) and bc == 0.0:
+        return jnp.zeros_like(v)
+    alt = jnp.linalg.norm(r, axis=-1, keepdims=True) - R_EARTH
+    rho = rho0 * jnp.exp(-(alt - h0) / scale_h)
+    return -0.5 * rho * bc * jnp.linalg.norm(v, axis=-1, keepdims=True) * v
+
+
+def make_rhs(j2: bool = True, mu: float = MU_EARTH, drag_bc: float = 0.0):
+    """Return f(t, y) -> dy/dt for y = (..., 6) = [r, v]."""
+
+    def rhs(t, y):
+        r, v = y[..., :3], y[..., 3:]
+        a = accel_point_mass(r, mu)
+        if j2:
+            a = a + accel_j2(r, mu)
+        if drag_bc:
+            a = a + accel_drag(r, v, drag_bc)
+        return jnp.concatenate([v, a], axis=-1)
+
+    return rhs
+
+
+def specific_energy(y: jnp.ndarray, mu: float = MU_EARTH) -> jnp.ndarray:
+    """Keplerian specific orbital energy (conserved without J2/drag)."""
+    r, v = y[..., :3], y[..., 3:]
+    return 0.5 * jnp.sum(v * v, axis=-1) - mu / jnp.linalg.norm(r, axis=-1)
+
+
+def mean_motion(a: float, mu: float = MU_EARTH) -> float:
+    return (mu / a**3) ** 0.5

@@ -1,0 +1,44 @@
+"""Hill (LVLH) <-> ECI frame conversions for formation initialization/analysis."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def hill_basis(r_ref: jnp.ndarray, v_ref: jnp.ndarray) -> jnp.ndarray:
+    """Rotation matrix R whose columns are the Hill axes expressed in ECI.
+
+    x: radial, z: orbit normal, y: z cross x (approximately along-track).
+    """
+    xh = r_ref / jnp.linalg.norm(r_ref)
+    h = jnp.cross(r_ref, v_ref)
+    zh = h / jnp.linalg.norm(h)
+    yh = jnp.cross(zh, xh)
+    return jnp.stack([xh, yh, zh], axis=-1)  # (3,3), columns = axes
+
+
+def hill_to_eci(ref_state: jnp.ndarray, rel_state: jnp.ndarray) -> jnp.ndarray:
+    """Convert Hill-frame relative states to absolute ECI states.
+
+    ref_state: (6,) reference ECI state; rel_state: (..., 6) Hill states.
+    Accounts for the rotating frame: v_eci = v_ref + R v_rel + omega x (R r_rel).
+    """
+    r0, v0 = ref_state[:3], ref_state[3:]
+    rot = hill_basis(r0, v0)
+    h = jnp.cross(r0, v0)
+    omega = h / jnp.dot(r0, r0)  # instantaneous orbital angular velocity (ECI)
+    dr = rel_state[..., :3] @ rot.T
+    dv = rel_state[..., 3:] @ rot.T
+    r = r0 + dr
+    v = v0 + dv + jnp.cross(jnp.broadcast_to(omega, dr.shape), dr)
+    return jnp.concatenate([r, v], axis=-1)
+
+
+def eci_to_hill(ref_state: jnp.ndarray, abs_state: jnp.ndarray) -> jnp.ndarray:
+    """Convert absolute ECI states to Hill-frame states relative to ref."""
+    r0, v0 = ref_state[..., :3], ref_state[..., 3:]
+    rot = hill_basis(r0, v0)  # (3,3)
+    h = jnp.cross(r0, v0)
+    omega = h / jnp.sum(r0 * r0, axis=-1, keepdims=True)
+    dr = abs_state[..., :3] - r0
+    dv = abs_state[..., 3:] - v0 - jnp.cross(jnp.broadcast_to(omega, dr.shape), dr)
+    return jnp.concatenate([dr @ rot, dv @ rot], axis=-1)

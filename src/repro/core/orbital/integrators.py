@@ -1,0 +1,127 @@
+"""Differentiable explicit Runge-Kutta integrators in JAX.
+
+The paper's Methods (§4.1) integrate with SciPy's 8th-order DOP853 and stress
+that, in binary64, cm-accuracy against 1e7 m orbital scales needs a high-order
+scheme. SciPy is unavailable here and — more importantly — the supplementary
+material proposes *backpropagating through the ODE integration* for formation
+control, so we implement the integrators natively in JAX:
+
+- `rk4_step`        : classic 4th order (cheap baseline)
+- `dopri5_step`     : Dormand-Prince 5(4) (the DOP853 family's smaller sibling;
+                      coefficients verified by an order-convergence test)
+- `integrate`       : fixed-step `lax.scan` driver -> fully reverse-mode
+                      differentiable trajectories
+- `integrate_dense` : returns the full strided trajectory for plotting/analysis
+
+Fixed-step dopri5 at dt ~= 2 s achieves << 1 cm error per orbit for the 650 km
+reference orbit (verified in tests/test_orbital.py::test_convergence_order and
+::test_circular_orbit_cm_accuracy), which meets the paper's accuracy target;
+adaptivity is unnecessary for near-circular cluster orbits and would break
+reverse-mode AD through `lax.while_loop`.
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+
+# Dormand-Prince 5(4) Butcher tableau (RK45, "dopri5").
+_DP_C = (0.0, 1.0 / 5.0, 3.0 / 10.0, 4.0 / 5.0, 8.0 / 9.0, 1.0, 1.0)
+_DP_A = (
+    (),
+    (1.0 / 5.0,),
+    (3.0 / 40.0, 9.0 / 40.0),
+    (44.0 / 45.0, -56.0 / 15.0, 32.0 / 9.0),
+    (19372.0 / 6561.0, -25360.0 / 2187.0, 64448.0 / 6561.0, -212.0 / 729.0),
+    (9017.0 / 3168.0, -355.0 / 33.0, 46732.0 / 5247.0, 49.0 / 176.0,
+     -5103.0 / 18656.0),
+    (35.0 / 384.0, 0.0, 500.0 / 1113.0, 125.0 / 192.0, -2187.0 / 6784.0,
+     11.0 / 84.0),
+)
+_DP_B5 = (35.0 / 384.0, 0.0, 500.0 / 1113.0, 125.0 / 192.0, -2187.0 / 6784.0,
+          11.0 / 84.0, 0.0)
+_DP_B4 = (5179.0 / 57600.0, 0.0, 7571.0 / 16695.0, 393.0 / 640.0,
+          -92097.0 / 339200.0, 187.0 / 2100.0, 1.0 / 40.0)
+
+
+def rk4_step(f: Callable, t, y, dt):
+    k1 = f(t, y)
+    k2 = f(t + 0.5 * dt, y + 0.5 * dt * k1)
+    k3 = f(t + 0.5 * dt, y + 0.5 * dt * k2)
+    k4 = f(t + dt, y + dt * k3)
+    return y + (dt / 6.0) * (k1 + 2.0 * k2 + 2.0 * k3 + k4)
+
+
+def dopri5_step(f: Callable, t, y, dt):
+    """One 5th-order Dormand-Prince step (no error estimate)."""
+    ks = []
+    for i in range(7):
+        yi = y
+        for aij, kj in zip(_DP_A[i], ks):
+            yi = yi + dt * aij * kj
+        ks.append(f(t + _DP_C[i] * dt, yi))
+    out = y
+    for bi, ki in zip(_DP_B5, ks):
+        out = out + dt * bi * ki
+    return out
+
+
+def dopri5_step_err(f: Callable, t, y, dt):
+    """dopri5 step plus embedded 4th-order error estimate."""
+    ks = []
+    for i in range(7):
+        yi = y
+        for aij, kj in zip(_DP_A[i], ks):
+            yi = yi + dt * aij * kj
+        ks.append(f(t + _DP_C[i] * dt, yi))
+    out, err = y, jnp.zeros_like(y)
+    for b5, b4, ki in zip(_DP_B5, _DP_B4, ks):
+        out = out + dt * b5 * ki
+        err = err + dt * (b5 - b4) * ki
+    return out, err
+
+
+_STEPPERS = {"rk4": rk4_step, "dopri5": dopri5_step}
+
+
+@partial(jax.jit, static_argnames=("f", "n_steps", "method"))
+def integrate(f: Callable, y0: jnp.ndarray, t0: float, dt: float,
+              n_steps: int, method: str = "dopri5") -> jnp.ndarray:
+    """Integrate to t0 + n_steps*dt, returning only the final state."""
+    step = _STEPPERS[method]
+
+    def body(carry, i):
+        t, y = carry
+        y = step(f, t, y, dt)
+        return (t + dt, y), None
+
+    (_, yf), _ = jax.lax.scan(body, (jnp.asarray(t0, y0.dtype), y0),
+                              jnp.arange(n_steps))
+    return yf
+
+
+@partial(jax.jit, static_argnames=("f", "n_steps", "method", "stride"))
+def integrate_dense(f: Callable, y0: jnp.ndarray, t0: float, dt: float,
+                    n_steps: int, method: str = "dopri5",
+                    stride: int = 1) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Integrate and return (times, trajectory) sampled every `stride` steps.
+
+    trajectory[0] is y0; shape (n_steps//stride + 1, *y0.shape).
+    """
+    step = _STEPPERS[method]
+
+    def inner(carry, i):
+        t, y = carry
+        def one(c, _):
+            tt, yy = c
+            yy = step(f, tt, yy, dt)
+            return (tt + dt, yy), None
+        (t, y), _ = jax.lax.scan(one, (t, y), jnp.arange(stride))
+        return (t, y), y
+
+    (_, _), ys = jax.lax.scan(inner, (jnp.asarray(t0, y0.dtype), y0),
+                              jnp.arange(n_steps // stride))
+    ts = t0 + dt * stride * jnp.arange(n_steps // stride + 1)
+    return ts, jnp.concatenate([y0[None], ys], axis=0)

@@ -1,0 +1,107 @@
+"""SEE bit-flip (SDC) injection for fault-tolerance testing, in pure JAX.
+
+Simulates the paper's measured single-event effects by flipping random bits
+in live tensors (params, activations, gradients) at the orbital event rate.
+Undetected bit-flips are exactly the Silent Data Corruption failure mode the
+paper flags as the open problem for training (§2.3); the training loop's
+detection screens are validated against this injector.
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+_UINT_FOR = {
+    jnp.dtype(jnp.float32): (jnp.uint32, 32),
+    jnp.dtype(jnp.bfloat16): (jnp.uint16, 16),
+    jnp.dtype(jnp.float16): (jnp.uint16, 16),
+    jnp.dtype(jnp.float64): (jnp.uint64, 64),
+}
+
+
+@partial(jax.jit, static_argnames=("n_flips",))
+def flip_bits(key: jax.Array, x: jnp.ndarray, n_flips: int = 1) -> jnp.ndarray:
+    """Flip `n_flips` uniformly-random bits of uniformly-random elements."""
+    if n_flips == 0:
+        return x
+    uint_dtype, nbits = _UINT_FOR[jnp.dtype(x.dtype)]
+    flat = x.reshape(-1)
+    ki, kb = jax.random.split(key)
+    idx = jax.random.randint(ki, (n_flips,), 0, flat.shape[0])
+    bit = jax.random.randint(kb, (n_flips,), 0, nbits).astype(uint_dtype)
+    bits = jax.lax.bitcast_convert_type(flat, uint_dtype)
+    mask = (jnp.ones((), uint_dtype) << bit)
+    bits = bits.at[idx].set(bits[idx] ^ mask)
+    return jax.lax.bitcast_convert_type(bits, x.dtype).reshape(x.shape)
+
+
+def count_changed_elements(a: jnp.ndarray, b: jnp.ndarray) -> int:
+    """Number of elements whose *bit pattern* differs.
+
+    Float comparison is the wrong detector: XLA CPU flushes denormals to
+    zero in comparisons, so a bit-flip that turns 0.0 into a denormal is
+    invisible to `!=`. Fault-tolerance checks must compare bit patterns.
+    """
+    uint_dtype, _ = _UINT_FOR[jnp.dtype(a.dtype)]
+    ba = jax.lax.bitcast_convert_type(a, uint_dtype)
+    bb = jax.lax.bitcast_convert_type(b, uint_dtype)
+    return int(jnp.sum(ba != bb))
+
+
+def inject_tree(key: jax.Array, tree, n_events: int):
+    """Flip `n_events` bits across a pytree, leaves weighted by element count.
+
+    Host-side orchestration (leaf choice) + jitted per-leaf flips; the same
+    key always corrupts the same locations, so failures are replayable.
+    """
+    if n_events == 0:
+        return tree
+    leaves, treedef = jax.tree.flatten(tree)
+    float_ix = [i for i, l in enumerate(leaves)
+                if jnp.dtype(l.dtype) in _UINT_FOR]
+    if not float_ix:
+        return tree
+    sizes = np.array([leaves[i].size for i in float_ix], dtype=float)
+    probs = sizes / sizes.sum()
+    rng = np.random.default_rng(np.asarray(jax.random.key_data(key))[-1])
+    counts = rng.multinomial(n_events, probs)
+    for j, (i, c) in enumerate(zip(float_ix, counts)):
+        if c:
+            key, sub = jax.random.split(key)
+            leaves[i] = flip_bits(sub, leaves[i], int(c))
+    return jax.tree.unflatten(treedef, leaves)
+
+
+class SDCInjector:
+    """Stateful per-step injector driven by the RadiationEnvironment rates.
+
+    Each `maybe_inject(step, tree)` call draws a Poisson event count for
+    (n_chips x step_time) and corrupts the tree accordingly. `forced_events`
+    pins a deterministic schedule for tests.
+    """
+
+    def __init__(self, env, n_chips: int, step_time_s: float, seed: int = 0,
+                 rate_multiplier: float = 1.0):
+        self.env = env
+        self.n_chips = n_chips
+        self.step_time_s = step_time_s
+        self.rate_multiplier = rate_multiplier
+        self.rng = np.random.default_rng(seed)
+        self.key = jax.random.PRNGKey(seed)
+        self.events_injected = 0
+
+    def expected_per_step(self) -> float:
+        return self.rate_multiplier * self.env.expected_events(
+            self.n_chips, self.step_time_s)
+
+    def maybe_inject(self, tree, forced_events: int | None = None):
+        n = (forced_events if forced_events is not None
+             else int(self.rng.poisson(self.expected_per_step())))
+        if n == 0:
+            return tree, 0
+        self.key, sub = jax.random.split(self.key)
+        self.events_injected += n
+        return inject_tree(sub, tree, n), n

@@ -1,0 +1,6 @@
+"""Distribution: mesh sharding specs, ISL-aware compression."""
+from .compression import (decompress_tree, ef_compress_tree, ef_init,
+                          int8_compress, int8_decompress, topk_compress,
+                          topk_decompress, tree_bytes_f32)
+from .sharding import (batch_axes, batch_specs, cache_specs, opt_state_specs,
+                       param_specs)

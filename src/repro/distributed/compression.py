@@ -1,0 +1,103 @@
+"""Gradient/delta compression for the ISL (pod-axis) hop.
+
+DiLoCo already cuts pod-axis traffic by the inner-step factor H; these
+compressors cut the remaining outer-sync bytes further:
+
+  - int8: per-row absmax quantization (4x vs f32). With error feedback the
+    quantization residual re-enters the next outer delta, so the scheme
+    stays unbiased over time.
+  - top-k: magnitude sparsification (values + int32 indices), also with
+    error feedback.
+
+Both are pure-jnp and jit-safe; `bytes_compressed` reports the wire size the
+ISL budget model charges.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+# --------------------------------------------------------------------------
+# int8 absmax
+# --------------------------------------------------------------------------
+def int8_compress(x):
+    flat = x.reshape(-1)
+    pad = (-flat.shape[0]) % 256
+    rows = jnp.pad(flat, (0, pad)).reshape(-1, 256)
+    scale = jnp.max(jnp.abs(rows), axis=1, keepdims=True) / 127.0
+    scale = jnp.maximum(scale, 1e-12)
+    q = jnp.clip(jnp.round(rows / scale), -127, 127).astype(jnp.int8)
+    return {"q": q, "scale": scale.astype(jnp.float32),
+            "shape": x.shape, "n": flat.shape[0]}
+
+
+def int8_decompress(c):
+    rows = c["q"].astype(jnp.float32) * c["scale"]
+    return rows.reshape(-1)[:c["n"]].reshape(c["shape"])
+
+
+def int8_bytes(c) -> int:
+    return int(c["q"].size + c["scale"].size * 4)
+
+
+# --------------------------------------------------------------------------
+# top-k sparsification
+# --------------------------------------------------------------------------
+def topk_compress(x, frac: float = 0.01):
+    flat = x.reshape(-1)
+    k = max(1, int(flat.shape[0] * frac))
+    vals, idx = jax.lax.top_k(jnp.abs(flat), k)
+    return {"values": flat[idx], "indices": idx.astype(jnp.int32),
+            "shape": x.shape, "n": flat.shape[0]}
+
+
+def topk_decompress(c):
+    flat = jnp.zeros((c["n"],), c["values"].dtype)
+    flat = flat.at[c["indices"]].set(c["values"])
+    return flat.reshape(c["shape"])
+
+
+def topk_bytes(c) -> int:
+    return int(c["values"].size * 4 + c["indices"].size * 4)
+
+
+# --------------------------------------------------------------------------
+# error feedback wrapper (per-leaf, over pytrees)
+# --------------------------------------------------------------------------
+def ef_init(tree):
+    return jax.tree.map(lambda x: jnp.zeros(x.shape, jnp.float32), tree)
+
+
+def ef_compress_tree(tree, ef, method: str = "int8", **kw):
+    """Returns (compressed_tree, new_ef, wire_bytes). The decompressed value
+    of what was sent is (x + ef) - residual; the residual is carried."""
+    comp_fn = {"int8": int8_compress,
+               "topk": lambda x: topk_compress(x, **kw)}[method]
+    dec_fn = {"int8": int8_decompress, "topk": topk_decompress}[method]
+    size_fn = {"int8": int8_bytes, "topk": topk_bytes}[method]
+
+    compressed, new_ef, total = [], [], 0
+    leaves, treedef = jax.tree.flatten(tree)
+    ef_leaves = jax.tree.leaves(ef)
+    for x, e in zip(leaves, ef_leaves):
+        target = x.astype(jnp.float32) + e
+        c = comp_fn(target)
+        sent = dec_fn(c)
+        compressed.append(c)
+        new_ef.append(target - sent)
+        total += size_fn(c)
+    return (jax.tree.unflatten(treedef, compressed),
+            jax.tree.unflatten(treedef, new_ef), total)
+
+
+def decompress_tree(ctree, method: str = "int8"):
+    dec_fn = {"int8": int8_decompress, "topk": topk_decompress}[method]
+    # ctree leaves are dicts; detect them by the "shape" key
+    def is_leaf(x):
+        return isinstance(x, dict) and "shape" in x
+    return jax.tree.map(lambda c: dec_fn(c), ctree, is_leaf=is_leaf)
+
+
+def tree_bytes_f32(tree) -> int:
+    return sum(4 * x.size for x in jax.tree.leaves(tree))

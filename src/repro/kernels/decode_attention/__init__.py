@@ -1,0 +1,4 @@
+from .ops import decode_attention
+from .ref import decode_attention_reference
+
+__all__ = ["decode_attention", "decode_attention_reference"]

@@ -1,0 +1,105 @@
+"""Decode (single-token) attention kernel for TPU — the memory-bound server
+hot spot: one query row streams the whole KV cache from HBM exactly once.
+
+Grid = (B, H, M/bk) with the cache axis innermost/sequential; online-softmax
+state (acc, m, l) lives in VMEM scratch across cache blocks. The q-head ->
+kv-head GQA fold happens in the k/v index_map (kv blocks fetched once per
+group). kv_len masks the unwritten cache tail (and is how ring buffers /
+partially-filled caches serve).
+
+Arithmetic intensity is O(1) FLOP/byte, so the roofline bound is
+HBM bandwidth: bytes ~ 2 * M * Hkv * dh * itemsize per (batch, kv-group).
+Block bk=512 rows of (dh=128) keeps ~0.5 MB/buffer for double-buffered
+streaming.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _decode_kernel(len_ref, q_ref, k_ref, v_ref, o_ref, acc_ref, m_ref,
+                   l_ref, *, block_k: int, sm_scale: float):
+    ki = pl.program_id(2)
+    nk = pl.num_programs(2)
+
+    @pl.when(ki == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    kv_len = len_ref[0]
+    k_start = ki * block_k
+
+    @pl.when(k_start < kv_len)
+    def _compute():
+        q = q_ref[0, 0].astype(jnp.float32) * sm_scale      # (1, dh)
+        k = k_ref[0, 0].astype(jnp.float32)                 # (bk, dh)
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32)  # (1,bk)
+        kpos = k_start + jax.lax.broadcasted_iota(jnp.int32, (1, block_k), 1)
+        s = jnp.where(kpos < kv_len, s, NEG_INF)
+        m_prev = m_ref[...]
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=1))
+        p = jnp.exp(s - m_new[:, None])
+        alpha = jnp.exp(m_prev - m_new)
+        l_ref[...] = l_ref[...] * alpha + jnp.sum(p, axis=1)
+        v = v_ref[0, 0].astype(jnp.float32)
+        acc_ref[...] = acc_ref[...] * alpha[:, None] + jax.lax.dot_general(
+            p, v, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)
+        m_ref[...] = m_new
+
+    @pl.when(ki == nk - 1)
+    def _finalize():
+        o_ref[0, 0] = (acc_ref[...] /
+                       jnp.maximum(l_ref[...], 1e-30)[:, None]
+                       ).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("block_k", "interpret"))
+def decode_attention_fwd(q, k_cache, v_cache, kv_len, *, block_k: int = 512,
+                         interpret: bool = False):
+    """q: (B, H, dh); k/v_cache: (B, Hkv, M, dh); kv_len: scalar int32."""
+    b, h, dh = q.shape
+    hkv, m = k_cache.shape[1], k_cache.shape[2]
+    assert h % hkv == 0 and m % block_k == 0
+    group = h // hkv
+    q4 = q.reshape(b, h, 1, dh)
+    kv_len = jnp.asarray(kv_len, jnp.int32).reshape(1)
+
+    grid = (b, h, m // block_k)
+    kernel = functools.partial(_decode_kernel, block_k=block_k,
+                               sm_scale=dh ** -0.5)
+    out = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec(memory_space=pltpu.SMEM),
+            pl.BlockSpec((1, 1, 1, dh), lambda bi, hi, ki: (bi, hi, 0, 0)),
+            pl.BlockSpec((1, 1, block_k, dh),
+                         lambda bi, hi, ki: (bi, hi // group, ki, 0)),
+            pl.BlockSpec((1, 1, block_k, dh),
+                         lambda bi, hi, ki: (bi, hi // group, ki, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, 1, dh),
+                               lambda bi, hi, ki: (bi, hi, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, h, 1, dh), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((1, dh), jnp.float32),
+            pltpu.VMEM((1,), jnp.float32),
+            pltpu.VMEM((1,), jnp.float32),
+        ],
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "parallel", "arbitrary")),
+        interpret=interpret,
+    )(kv_len, q4, k_cache, v_cache)
+    return out.reshape(b, h, dh)

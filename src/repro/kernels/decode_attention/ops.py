@@ -1,0 +1,29 @@
+"""Jitted wrapper: model-layout KV cache (B, M, Hkv, dh) -> kernel layout."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from .kernel import decode_attention_fwd
+
+
+@functools.partial(jax.jit, static_argnames=("block_k", "interpret"))
+def decode_attention(q, k_cache, v_cache, kv_len, *, block_k: int = 512,
+                     interpret: bool = False):
+    """q: (B, 1, H, dh) or (B, H, dh); caches: (B, M, Hkv, dh)."""
+    squeeze = q.ndim == 4
+    if squeeze:
+        q = q[:, 0]
+    m = k_cache.shape[1]
+    bk = min(block_k, m)
+    pad = (-m) % bk
+    kc = k_cache.transpose(0, 2, 1, 3)
+    vc = v_cache.transpose(0, 2, 1, 3)
+    if pad:
+        kc = jnp.pad(kc, ((0, 0), (0, 0), (0, pad), (0, 0)))
+        vc = jnp.pad(vc, ((0, 0), (0, 0), (0, pad), (0, 0)))
+    out = decode_attention_fwd(q, kc, vc, kv_len, block_k=bk,
+                               interpret=interpret)
+    return out[:, None] if squeeze else out

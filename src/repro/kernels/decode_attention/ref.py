@@ -1,0 +1,27 @@
+"""Pure-jnp oracle for single-token decode attention with a KV cache."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def decode_attention_reference(q, k_cache, v_cache, kv_len):
+    """q: (B, H, dh); k/v_cache: (B, Hkv, M, dh); kv_len: () or (B,).
+
+    Attends q over the first kv_len cache entries. Returns (B, H, dh).
+    """
+    b, h, dh = q.shape
+    hkv, m = k_cache.shape[1], k_cache.shape[2]
+    if hkv != h:
+        rep = h // hkv
+        k_cache = jnp.repeat(k_cache, rep, axis=1)
+        v_cache = jnp.repeat(v_cache, rep, axis=1)
+    s = jnp.einsum("bhd,bhkd->bhk", q.astype(jnp.float32),
+                   k_cache.astype(jnp.float32)) * dh ** -0.5
+    kv_len = jnp.asarray(kv_len)
+    valid = jnp.arange(m) < (kv_len[..., None, None] if kv_len.ndim
+                             else kv_len)
+    s = jnp.where(jnp.broadcast_to(valid, s.shape), s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bhk,bhkd->bhd", p,
+                      v_cache.astype(jnp.float32)).astype(q.dtype)

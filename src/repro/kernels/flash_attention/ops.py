@@ -1,0 +1,66 @@
+"""Jitted public wrapper for the flash-attention kernel.
+
+Accepts model-layout tensors (B, S, H, dh), handles padding to block
+multiples, GQA head mapping, and custom-vjp backward (recompute-based: the
+backward pass falls back to differentiating the reference oracle — the
+standard JAX trick of pairing a fast fwd kernel with a remat'd ref bwd,
+keeping train-step lowering valid everywhere).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from .kernel import flash_attention_fwd
+from .ref import attention_reference
+
+
+def _pad_to(x, axis, mult):
+    s = x.shape[axis]
+    pad = (-s) % mult
+    if pad == 0:
+        return x, s
+    widths = [(0, 0)] * x.ndim
+    widths[axis] = (0, pad)
+    return jnp.pad(x, widths), s
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4, 5, 6))
+def _flash(q, k, v, causal, block_q, block_k, interpret):
+    qp, sq = _pad_to(q, 2, block_q)
+    kp, _ = _pad_to(k, 2, block_k)
+    vp, _ = _pad_to(v, 2, block_k)
+    out = flash_attention_fwd(qp, kp, vp, causal=causal,
+                              sm_scale=q.shape[-1] ** -0.5,
+                              block_q=block_q, block_k=block_k,
+                              interpret=interpret)
+    return out[:, :, :sq]
+
+
+def _flash_fwd(q, k, v, causal, block_q, block_k, interpret):
+    return _flash(q, k, v, causal, block_q, block_k, interpret), (q, k, v)
+
+
+def _flash_bwd(causal, block_q, block_k, interpret, res, g):
+    q, k, v = res
+    _, vjp = jax.vjp(lambda q_, k_, v_:
+                     attention_reference(q_, k_, v_, causal=causal), q, k, v)
+    return vjp(g)
+
+
+_flash.defvjp(_flash_fwd, _flash_bwd)
+
+
+def flash_attention(q, k, v, *, causal: bool = True, block_q: int = 128,
+                    block_k: int = 128, interpret: bool = False,
+                    layout: str = "bshd"):
+    """Flash attention. layout "bshd": q (B,S,H,dh), k/v (B,S,Hkv,dh);
+    layout "bhsd": already head-major. Returns same layout as input."""
+    if layout == "bshd":
+        q_, k_, v_ = (x.transpose(0, 2, 1, 3) for x in (q, k, v))
+    else:
+        q_, k_, v_ = q, k, v
+    out = _flash(q_, k_, v_, causal, block_q, block_k, interpret)
+    return out.transpose(0, 2, 1, 3) if layout == "bshd" else out

@@ -1,0 +1,40 @@
+"""Jitted wrapper for the RG-LRU scan kernel (padding + vjp via oracle)."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from .kernel import rglru_scan_fwd
+from .ref import rglru_scan_associative
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(2, 3, 4))
+def _scan(a, x, block_s, block_d, interpret):
+    b, s, d = x.shape
+    ps, pd = (-s) % block_s, (-d) % block_d
+    ap = jnp.pad(a, ((0, 0), (0, ps), (0, pd)))
+    xp = jnp.pad(x, ((0, 0), (0, ps), (0, pd)))
+    out = rglru_scan_fwd(ap, xp, block_s=block_s, block_d=block_d,
+                         interpret=interpret)
+    return out[:, :s, :d]
+
+
+def _scan_fwd(a, x, block_s, block_d, interpret):
+    return _scan(a, x, block_s, block_d, interpret), (a, x)
+
+
+def _scan_bwd(block_s, block_d, interpret, res, g):
+    a, x = res
+    _, vjp = jax.vjp(rglru_scan_associative, a, x)
+    return vjp(g)
+
+
+_scan.defvjp(_scan_fwd, _scan_bwd)
+
+
+def rglru_scan(a, x, *, block_s: int = 256, block_d: int = 128,
+               interpret: bool = False):
+    """h_t = a_t h_{t-1} + x_t along axis 1. a, x: (B, S, D)."""
+    return _scan(a, x, block_s, block_d, interpret)

@@ -1,0 +1,33 @@
+"""Pure-jnp oracles for the RG-LRU linear-recurrence kernel."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def rglru_scan_reference(a, x, h0=None):
+    """Sequential oracle: h_t = a_t * h_{t-1} + x_t. a, x: (B, S, D)."""
+    b, s, d = x.shape
+    if h0 is None:
+        h0 = jnp.zeros((b, d), jnp.float32)
+
+    def step(h, axt):
+        at, xt = axt
+        h = at.astype(jnp.float32) * h + xt.astype(jnp.float32)
+        return h, h
+
+    _, hs = jax.lax.scan(step, h0, (a.transpose(1, 0, 2),
+                                    x.transpose(1, 0, 2)))
+    return hs.transpose(1, 0, 2).astype(x.dtype)
+
+
+def rglru_scan_associative(a, x):
+    """Log-depth associative-scan formulation (the XLA training path)."""
+    def combine(c1, c2):
+        a1, b1 = c1
+        a2, b2 = c2
+        return a1 * a2, a2 * b1 + b2
+
+    _, h = jax.lax.associative_scan(
+        combine, (a.astype(jnp.float32), x.astype(jnp.float32)), axis=1)
+    return h.astype(x.dtype)

@@ -1,0 +1,29 @@
+"""Production mesh construction.
+
+One satellite-pod = a 16 x 16 ICI mesh (256 chips: "data" x "model");
+multi-pod adds the leading "pod" axis whose hop is the FSO inter-satellite
+link (bandwidth from repro.core.isl, not ICI).
+
+Defined as FUNCTIONS, never module-level constants: importing this module
+must not touch jax device state (the dry-run pins the device count via
+XLA_FLAGS before any jax import).
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False, shape=None):
+    """shape: optional logical (data, model) [or (pod, data, model)]
+    override — same 256/512 chips, different axis split (a §Perf knob)."""
+    if shape is None:
+        shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    assert len(shape) == len(axes)
+    return jax.make_mesh(shape, axes)
+
+
+def make_test_mesh(n_devices: int | None = None):
+    """Degenerate mesh over whatever devices exist (CPU tests: 1 device)."""
+    n = n_devices or len(jax.devices())
+    return jax.make_mesh((1, n, 1), ("pod", "data", "model"))

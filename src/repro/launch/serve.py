@@ -1,0 +1,49 @@
+"""Serving launcher: --arch <id>, batched continuous-batching engine.
+
+  PYTHONPATH=src python -m repro.launch.serve --arch recurrentgemma-2b \
+      --requests 8
+"""
+import argparse
+
+import jax
+import numpy as np
+
+from repro.models import registry
+from repro.serving import EngineConfig, Request, ServingEngine
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="suncatcher-lm-100m",
+                    choices=registry.ARCH_IDS)
+    ap.add_argument("--requests", type=int, default=8)
+    ap.add_argument("--max-new-tokens", type=int, default=16)
+    ap.add_argument("--slots", type=int, default=4)
+    ap.add_argument("--full", action="store_true")
+    args = ap.parse_args()
+
+    cfg = (registry.get_config(args.arch) if args.full
+           else registry.get_reduced_config(args.arch))
+    if registry.input_kind(args.arch) != "tokens":
+        raise SystemExit("serve CLI demo supports token-LM archs")
+    fns = registry.model_fns(cfg)
+    params = fns.init(jax.random.PRNGKey(0), cfg)
+    eng = ServingEngine(cfg, fns, params,
+                        EngineConfig(max_batch=args.slots, max_len=128))
+    rng = np.random.default_rng(0)
+    for uid in range(args.requests):
+        eng.submit(Request(uid=uid,
+                           prompt=rng.integers(
+                               0, cfg.vocab_size,
+                               size=int(rng.integers(4, 16))).astype(
+                                   np.int32),
+                           max_new_tokens=args.max_new_tokens))
+    done = eng.run()
+    for r in sorted(done, key=lambda r: r.uid):
+        print(f"req {r.uid}: {len(r.prompt)} prompt toks -> "
+              f"{len(r.generated)} generated")
+    print(f"{cfg.name}: served {len(done)} requests on {args.slots} slots")
+
+
+if __name__ == "__main__":
+    main()

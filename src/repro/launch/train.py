@@ -1,0 +1,68 @@
+"""Training launcher: --arch <id> with the full space-runtime stack.
+
+On this CPU container it runs reduced configs (--reduced, default); on a real
+TPU cluster the same driver takes the full config + production mesh.
+
+  PYTHONPATH=src python -m repro.launch.train --arch granite-moe-1b-a400m \
+      --steps 50 --diloco-pods 2
+"""
+import argparse
+import tempfile
+
+import jax
+
+from repro.core.radiation import RadiationEnvironment, SDCInjector
+from repro.models import registry
+from repro.train import (AdamWConfig, DataConfig, FTConfig,
+                         FaultTolerantTrainer, SyntheticLM, TrainConfig,
+                         init_train_state, make_train_step)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="suncatcher-lm-100m",
+                    choices=registry.ARCH_IDS)
+    ap.add_argument("--steps", type=int, default=50)
+    ap.add_argument("--seq-len", type=int, default=64)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--lr", type=float, default=3e-3)
+    ap.add_argument("--full", action="store_true",
+                    help="full-size config (TPU-scale; default reduced)")
+    ap.add_argument("--sdc-rate-multiplier", type=float, default=0.0)
+    ap.add_argument("--schedule", default=None, help="cosine|wsd")
+    args = ap.parse_args()
+
+    cfg = (registry.get_config(args.arch) if args.full
+           else registry.get_reduced_config(args.arch))
+    fns = registry.model_fns(cfg)
+    sched = args.schedule or ("wsd" if args.arch == "minicpm-2b"
+                              else "cosine")
+    tcfg = TrainConfig(adamw=AdamWConfig(lr=args.lr), schedule=sched,
+                       warmup_steps=max(2, args.steps // 10),
+                       total_steps=args.steps)
+    data = SyntheticLM(DataConfig(
+        vocab_size=cfg.vocab_size, seq_len=args.seq_len,
+        global_batch=args.batch,
+        n_codebooks=getattr(cfg, "n_codebooks", 1),
+        kind=registry.input_kind(args.arch)))
+    state = init_train_state(jax.random.PRNGKey(0), cfg, fns)
+    step = jax.jit(make_train_step(cfg, fns, tcfg))
+
+    injector = None
+    if args.sdc_rate_multiplier:
+        injector = SDCInjector(RadiationEnvironment(), n_chips=81 * 256,
+                               step_time_s=1.0,
+                               rate_multiplier=args.sdc_rate_multiplier)
+    with tempfile.TemporaryDirectory() as d:
+        trainer = FaultTolerantTrainer(
+            step, state, data, FTConfig(checkpoint_dirs=(d,),
+                                        checkpoint_every=20),
+            injector=injector)
+        hist = trainer.run(args.steps)
+    print(f"{cfg.name}: {len(hist)} steps, loss "
+          f"{hist[0]['loss']:.3f} -> {hist[-1]['loss']:.3f}, "
+          f"ft stats {trainer.stats}")
+
+
+if __name__ == "__main__":
+    main()

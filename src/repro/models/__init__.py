@@ -1,0 +1,2 @@
+"""Model zoo: transformer (dense/MoE/VLM/audio), xLSTM, RecurrentGemma."""
+from . import registry

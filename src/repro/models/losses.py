@@ -1,0 +1,48 @@
+"""LM losses: plain and sequence-chunked softmax cross-entropy.
+
+At (batch x seq x vocab) = 1M x 150k+ the logits tensor is the single
+biggest activation in training — bigger than all layer activations combined.
+`chunked_lm_loss` scans the sequence in chunks, computing logits -> xent ->
+(in backward, via jax.checkpoint) d(hidden) one chunk at a time, so only a
+(B, chunk, V/model_shards) slice is ever live.
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed.hints import shard_hint
+
+
+def softmax_xent(logits, labels):
+    logits = logits.astype(jnp.float32)
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, labels[..., None], -1).squeeze(-1)
+    return logz - gold
+
+
+def chunked_lm_loss(hidden, head, labels, *, chunk: int,
+                    logit_scale: float = 1.0):
+    """hidden: (B, S, D); head: (D, V); labels: (B, S). Mean xent.
+
+    S must be divisible by chunk (callers pick chunk | S).
+    """
+    b, s, d = hidden.shape
+    n = s // chunk
+    hs = hidden.reshape(b, n, chunk, d).swapaxes(0, 1)     # (n, B, C, D)
+    ls = labels.reshape(b, n, chunk).swapaxes(0, 1)
+
+    @partial(jax.checkpoint, policy=jax.checkpoint_policies.nothing_saveable)
+    def one(h, l):
+        logits = (h @ head) * logit_scale
+        logits = shard_hint(logits, ("batch", None, "model"))
+        return jnp.sum(softmax_xent(logits, l))
+
+    def body(acc, xs):
+        h, l = xs
+        return acc + one(h, l), None
+
+    total, _ = jax.lax.scan(body, jnp.zeros((), jnp.float32), (hs, ls))
+    return total / (b * s)

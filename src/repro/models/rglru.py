@@ -1,0 +1,351 @@
+"""RecurrentGemma / Griffin (arXiv:2402.19427): RG-LRU + local attention, 1:2.
+
+Block pattern: groups of (recurrent, recurrent, local-attention) — i.e. one
+local-MQA block per two RG-LRU recurrent blocks — each followed by a GeGLU
+FFN. The RG-LRU diagonal recurrence
+
+    h_t = a_t * h_{t-1} + sqrt(1 - a_t^2) * (i_t * x_t),
+    a_t = exp(-c * softplus(lam) * r_t),   r_t, i_t = sigmoid(W x)
+
+is evaluated with `jax.lax.associative_scan` for training (log-depth on TPU)
+and as an O(1) state update for decode. Local attention uses a W-slot ring
+buffer for decode, so the long_500k cache is O(window), not O(seq): this is
+the sub-quadratic arch the long-context shape exists for.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed.hints import shard_hint
+
+from .layers import apply_rope, attention, geglu, rms_norm, rope_cos_sin
+
+RG_LRU_C = 8.0
+
+
+@dataclass(frozen=True)
+class RGLRUConfig:
+    name: str = "recurrentgemma"
+    n_layers: int = 26                  # 8 x (rec, rec, attn) + 2 rec
+    d_model: int = 2560
+    n_heads: int = 10
+    n_kv_heads: int = 1                 # MQA
+    d_ff: int = 7680
+    vocab_size: int = 256000
+    window: int = 2048
+    conv_width: int = 4
+    rope_base: float = 10000.0
+    compute_dtype: str = "bfloat16"
+    param_dtype: str = "float32"
+    remat: bool = True
+    loss_chunk: int = 0                # seq-chunked xent (0 = off)
+    fsdp_hints: bool = False           # keep param slices sharded in-loop
+    attn_impl: str = "ref"
+    scan_impl: str = "associative"      # "pallas" = repro.kernels.rglru_scan
+    max_decode_len: int = 0
+
+    @property
+    def hd(self) -> int:
+        return self.d_model // self.n_heads
+
+    @property
+    def n_groups(self) -> int:
+        return self.n_layers // 3
+
+    @property
+    def n_tail_rec(self) -> int:
+        return self.n_layers - 3 * self.n_groups
+
+    @property
+    def cdtype(self):
+        return jnp.dtype(self.compute_dtype)
+
+    @property
+    def pdtype(self):
+        return jnp.dtype(self.param_dtype)
+
+    def param_count(self) -> int:
+        return sum(int(x.size) for x in jax.tree.leaves(
+            jax.eval_shape(lambda: init_params(jax.random.PRNGKey(0), self))))
+
+    def active_param_count(self) -> int:
+        return self.param_count()
+
+
+def _init_rec(key, cfg, n, dt):
+    d = cfg.d_model
+    ks = jax.random.split(key, 8)
+    s = d ** -0.5
+    return {
+        "norm": jnp.ones((n, d), dt),
+        "w_x": jax.random.normal(ks[0], (n, d, d), dt) * s,
+        "w_gate": jax.random.normal(ks[1], (n, d, d), dt) * s,
+        "conv": jax.random.normal(ks[2], (n, cfg.conv_width, d), dt) * 0.1,
+        "w_ri": jax.random.normal(ks[3], (n, d, 2 * d), dt) * s,
+        "b_ri": jnp.zeros((n, 2 * d), dt),
+        "lam": jax.random.uniform(ks[4], (n, d), dt, 0.5, 2.0),
+        "w_out": jax.random.normal(ks[5], (n, d, d), dt) * s,
+        "mlp_norm": jnp.ones((n, d), dt),
+        "wi_gate": jax.random.normal(ks[6], (n, d, cfg.d_ff), dt) * s,
+        "wi_up": jax.random.normal(ks[7], (n, d, cfg.d_ff), dt) * s,
+        "wo_mlp": jax.random.normal(ks[0], (n, cfg.d_ff, d), dt)
+        * cfg.d_ff ** -0.5,
+    }
+
+
+def _init_attn(key, cfg, n, dt):
+    d, hd, h, hkv = cfg.d_model, cfg.hd, cfg.n_heads, cfg.n_kv_heads
+    ks = jax.random.split(key, 8)
+    s = d ** -0.5
+    return {
+        "norm": jnp.ones((n, d), dt),
+        "wq": jax.random.normal(ks[0], (n, d, h * hd), dt) * s,
+        "wk": jax.random.normal(ks[1], (n, d, hkv * hd), dt) * s,
+        "wv": jax.random.normal(ks[2], (n, d, hkv * hd), dt) * s,
+        "wo": jax.random.normal(ks[3], (n, h * hd, d), dt) * (h * hd) ** -0.5,
+        "mlp_norm": jnp.ones((n, d), dt),
+        "wi_gate": jax.random.normal(ks[4], (n, d, cfg.d_ff), dt) * s,
+        "wi_up": jax.random.normal(ks[5], (n, d, cfg.d_ff), dt) * s,
+        "wo_mlp": jax.random.normal(ks[6], (n, cfg.d_ff, d), dt)
+        * cfg.d_ff ** -0.5,
+    }
+
+
+def init_params(key, cfg: RGLRUConfig):
+    dt = cfg.pdtype
+    k1, k2, k3, k4, k5 = jax.random.split(key, 5)
+    params = {
+        "embed": jax.random.normal(k1, (cfg.vocab_size, cfg.d_model), dt),
+        "rec_a": _init_rec(k2, cfg, cfg.n_groups, dt),
+        "rec_b": _init_rec(k3, cfg, cfg.n_groups, dt),
+        "attn": _init_attn(k4, cfg, cfg.n_groups, dt),
+        "final_norm": jnp.ones((cfg.d_model,), dt),
+    }
+    if cfg.n_tail_rec:
+        params["tail"] = _init_rec(k5, cfg, cfg.n_tail_rec, dt)
+    return params
+
+
+# --------------------------------------------------------------------------
+# RG-LRU recurrence
+# --------------------------------------------------------------------------
+def rg_lru_scan(x_in, log_a):
+    """h_t = a_t h_{t-1} + b_t via associative scan over time axis 1.
+
+    x_in: (B, S, D) gated inputs b_t (already scaled); log_a: (B, S, D).
+    """
+    a = jnp.exp(log_a)
+
+    def combine(c1, c2):
+        a1, b1 = c1
+        a2, b2 = c2
+        return a1 * a2, a2 * b1 + b2
+
+    _, h = jax.lax.associative_scan(combine, (a, x_in), axis=1)
+    return h
+
+
+def _rec_block(cfg, x, lp, state=None):
+    """Griffin recurrent block. state: (h (B,D), conv_buf (B,w-1,D))."""
+    b, s, d = x.shape
+    xn = rms_norm(x, lp["norm"])
+    # channel-sharded ("model") temporal mixing: the RG-LRU is elementwise
+    # over channels, so the whole recurrence runs collective-free
+    branch = shard_hint(xn @ lp["w_x"], ("batch", None, "model"))
+    gate = shard_hint(jax.nn.gelu(xn @ lp["w_gate"], approximate=True),
+                      ("batch", None, "model"))
+
+    # causal depthwise conv1d, width cfg.conv_width
+    w = lp["conv"]                                          # (cw, D)
+    cw = w.shape[0]
+    if state is None:
+        pad = jnp.zeros((b, cw - 1, d), branch.dtype)
+        new_conv = None
+    else:
+        pad = state[1].astype(branch.dtype)
+        new_conv = jnp.concatenate([pad, branch], axis=1)[:, -(cw - 1):]
+    xc = jnp.concatenate([pad, branch], axis=1)
+    conv = sum(xc[:, i:i + s] * w[i] for i in range(cw))
+
+    ri = xn @ lp["w_ri"] + lp["b_ri"]
+    r = jax.nn.sigmoid(ri[..., :d].astype(jnp.float32))
+    i_g = jax.nn.sigmoid(ri[..., d:].astype(jnp.float32))
+    log_a = -RG_LRU_C * jax.nn.softplus(lp["lam"].astype(jnp.float32)) * r
+    gated = (i_g * conv.astype(jnp.float32)) * jnp.sqrt(
+        jnp.maximum(1.0 - jnp.exp(2.0 * log_a), 1e-12))
+
+    if state is None:
+        if cfg.scan_impl == "pallas":
+            from repro.kernels.rglru_scan import rglru_scan
+            h = rglru_scan(jnp.exp(log_a), gated)
+        else:
+            h = rg_lru_scan(gated, log_a)
+        new_state = None
+    else:
+        h_prev = state[0]
+        h = jnp.exp(log_a[:, 0]) * h_prev + gated[:, 0]
+        new_state = (h, new_conv)
+        h = h[:, None]
+    out = (h.astype(x.dtype) * gate) @ lp["w_out"]
+    x = x + out
+    h2 = rms_norm(x, lp["mlp_norm"])
+    x = x + geglu(h2, lp["wi_gate"], lp["wi_up"], lp["wo_mlp"])
+    return x, (new_state if state is not None else
+               (h[:, -1].astype(jnp.float32) if h.ndim == 3 else h,
+                jnp.concatenate([pad, branch], 1)[:, -(cw - 1):]))
+
+
+def _attn_block(cfg, x, lp, cache=None, pos0=0):
+    """Local (windowed) MQA block; decode uses a ring buffer of W slots."""
+    b, s, d = x.shape
+    h, hkv, hd = cfg.n_heads, cfg.n_kv_heads, cfg.hd
+    xn = rms_norm(x, lp["norm"])
+    q = (xn @ lp["wq"]).reshape(b, s, h, hd)
+    k = (xn @ lp["wk"]).reshape(b, s, hkv, hd)
+    v = (xn @ lp["wv"]).reshape(b, s, hkv, hd)
+    if cache is None:
+        pos = jnp.arange(s)
+        cos, sin = rope_cos_sin(pos, hd, cfg.rope_base, cfg.cdtype)
+        q, k = apply_rope(q, cos, sin), apply_rope(k, cos, sin)
+        attn = attention(q, k, v, impl=cfg.attn_impl, causal=True,
+                         window=cfg.window)
+        new_cache = None
+    else:
+        ck, cv = cache                                      # (B, W, hkv, hd)
+        W = ck.shape[1]
+        pos = pos0 + jnp.arange(s)
+        cos, sin = rope_cos_sin(pos, hd, cfg.rope_base, cfg.cdtype)
+        q = apply_rope(q, cos[None], sin[None])
+        k = apply_rope(k, cos[None], sin[None])
+        slot = (pos0 % W) + jnp.arange(s)                   # s=1 decode
+        ck = ck.at[:, slot % W].set(k.astype(ck.dtype))
+        cv = cv.at[:, slot % W].set(v.astype(cv.dtype))
+        # ring buffer holds the last W tokens; mask unfilled slots
+        filled = jnp.minimum(pos0 + s, W)
+        attn = attention(q, ck, cv, impl="ref", causal=False,
+                         kv_len=filled)
+        new_cache = (ck, cv)
+    out = attn.reshape(b, s, h * hd) @ lp["wo"]
+    x = x + out
+    h2 = rms_norm(x, lp["mlp_norm"])
+    x = x + geglu(h2, lp["wi_gate"], lp["wi_up"], lp["wo_mlp"])
+    return x, new_cache
+
+
+# --------------------------------------------------------------------------
+# model
+# --------------------------------------------------------------------------
+_WSPECS = {
+    "w_x": ("fsdp", "model"), "w_gate": ("fsdp", "model"),
+    "w_ri": ("fsdp", "model"), "w_out": ("model", "fsdp"),
+    "wi_gate": ("fsdp", "model"), "wi_up": ("fsdp", "model"),
+    "wo_mlp": ("model", "fsdp"), "wq": ("fsdp", "model"),
+    "wk": ("fsdp", None), "wv": ("fsdp", None), "wo": ("model", "fsdp"),
+}
+
+
+def _cast(lp, dt, hints=False):
+    if hints:
+        lp = {k: (shard_hint(v, _WSPECS[k]) if k in _WSPECS else v)
+              for k, v in lp.items()}
+    return jax.tree.map(lambda a: a.astype(dt), lp)
+
+
+def _trunk(params, tokens, cfg: RGLRUConfig):
+    x = shard_hint(params["embed"][tokens].astype(cfg.cdtype),
+                   ("batch", None, None))
+
+    def group(x, lps):
+        ra, rb, at = lps
+        h = cfg.fsdp_hints
+        x, _ = _rec_block(cfg, x, _cast(ra, cfg.cdtype, h))
+        x, _ = _rec_block(cfg, x, _cast(rb, cfg.cdtype, h))
+        x, _ = _attn_block(cfg, x, _cast(at, cfg.cdtype, h))
+        return shard_hint(x, ("batch", None, None)), None
+
+    if cfg.remat:
+        group = jax.checkpoint(
+            group, policy=jax.checkpoint_policies.nothing_saveable)
+    x, _ = jax.lax.scan(group, x,
+                        (params["rec_a"], params["rec_b"], params["attn"]))
+    if cfg.n_tail_rec:
+        def tail(x, lp):
+            x, _ = _rec_block(cfg, x, _cast(lp, cfg.cdtype, cfg.fsdp_hints))
+            return x, None
+        x, _ = jax.lax.scan(tail, x, params["tail"])
+    return rms_norm(x, params["final_norm"].astype(cfg.cdtype))
+
+
+def forward(params, tokens, cfg: RGLRUConfig, positions=None):
+    x = _trunk(params, tokens, cfg)
+    logits = x @ params["embed"].T.astype(cfg.cdtype)
+    return shard_hint(logits, ("batch", None, "model"))
+
+
+def loss_fn(params, batch, cfg: RGLRUConfig):
+    labels = batch["labels"]
+    if cfg.loss_chunk and labels.shape[-1] % cfg.loss_chunk == 0:
+        from .losses import chunked_lm_loss
+        x = _trunk(params, batch["tokens"], cfg)
+        return chunked_lm_loss(x, params["embed"].T.astype(cfg.cdtype),
+                               labels, chunk=cfg.loss_chunk)
+    logits = forward(params, batch["tokens"], cfg).astype(jnp.float32)
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, labels[..., None], -1).squeeze(-1)
+    return jnp.mean(logz - gold)
+
+
+def init_cache(cfg: RGLRUConfig, batch: int, max_len: int, dtype=None):
+    """O(window) attention cache + O(1) recurrent states: independent of
+    max_len — the sub-quadratic long-context serving story."""
+    dtype = dtype or cfg.cdtype
+    d, cw = cfg.d_model, cfg.conv_width
+    g = cfg.n_groups
+    W = cfg.window
+
+    def rec_state(n):
+        return (jnp.zeros((n, batch, d), jnp.float32),
+                jnp.zeros((n, batch, cw - 1, d), dtype))
+
+    cache = {
+        "rec_a": rec_state(g),
+        "rec_b": rec_state(g),
+        "attn": (jnp.zeros((g, batch, W, cfg.n_kv_heads, cfg.hd), dtype),
+                 jnp.zeros((g, batch, W, cfg.n_kv_heads, cfg.hd), dtype)),
+        "pos": jnp.zeros((), jnp.int32),
+    }
+    if cfg.n_tail_rec:
+        cache["tail"] = rec_state(cfg.n_tail_rec)
+    return cache
+
+
+def decode_step(params, cache, tokens, cfg: RGLRUConfig, positions=None):
+    x = params["embed"][tokens].astype(cfg.cdtype)
+    pos0 = cache["pos"]
+
+    def group(x, xs):
+        ra, rb, at, sa, sb, (ck, cv) = xs
+        x, sa_n = _rec_block(cfg, x, _cast(ra, cfg.cdtype), state=sa)
+        x, sb_n = _rec_block(cfg, x, _cast(rb, cfg.cdtype), state=sb)
+        x, c_n = _attn_block(cfg, x, _cast(at, cfg.cdtype),
+                             cache=(ck, cv), pos0=pos0)
+        return x, (sa_n, sb_n, c_n)
+
+    x, (sa, sb, attn_c) = jax.lax.scan(
+        group, x, (params["rec_a"], params["rec_b"], params["attn"],
+                   cache["rec_a"], cache["rec_b"], cache["attn"]))
+    new_cache = {"rec_a": sa, "rec_b": sb, "attn": attn_c,
+                 "pos": pos0 + x.shape[1]}
+    if cfg.n_tail_rec:
+        def tail(x, xs):
+            lp, st = xs
+            x, s_n = _rec_block(cfg, x, _cast(lp, cfg.cdtype), state=st)
+            return x, s_n
+        x, tail_s = jax.lax.scan(tail, x, (params["tail"], cache["tail"]))
+        new_cache["tail"] = tail_s
+    x = rms_norm(x, params["final_norm"].astype(cfg.cdtype))
+    logits = (x @ params["embed"].T.astype(cfg.cdtype))[:, -1]
+    return logits, new_cache

@@ -1,0 +1,442 @@
+"""Decoder-only transformer LM covering the dense, MoE, VLM and audio
+architecture families via configuration.
+
+Parameters are plain pytrees with per-layer weights STACKED on a leading L
+axis and the forward pass runs `lax.scan` over layers — essential to keep
+the HLO (and 512-device SPMD compile time) small for the 40-64 layer archs.
+
+Supports:
+  - GQA/MQA/MHA (+ optional QKV bias), RoPE / M-RoPE / sinusoidal positions
+  - SwiGLU / GeGLU / GELU MLPs; parallel attention+FFN blocks (Command-R)
+  - capacity-based top-k MoE FFN (granite / qwen3-moe)
+  - multi-codebook token streams (MusicGen EnCodec frontend stub)
+  - local (windowed) attention
+  - KV-cache prefill/decode for serving
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field, replace
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed.hints import mesh_axis_size, shard_hint
+
+from .layers import (apply_rope, attention, gelu_mlp, geglu, layer_norm,
+                     mrope_cos_sin, rms_norm, rope_cos_sin, swiglu)
+from .losses import chunked_lm_loss, softmax_xent
+from .moe import init_moe_params, moe_ffn
+
+
+@dataclass(frozen=True)
+class TransformerConfig:
+    name: str = "transformer"
+    n_layers: int = 2
+    d_model: int = 256
+    n_heads: int = 4
+    n_kv_heads: int = 4
+    d_ff: int = 1024
+    vocab_size: int = 1024
+    head_dim: Optional[int] = None
+    rope_base: float = 10000.0
+    qkv_bias: bool = False
+    parallel_block: bool = False          # Command-R style
+    norm: str = "rmsnorm"                 # or "layernorm"
+    mlp_act: str = "swiglu"               # "geglu" | "gelu"
+    # MoE
+    num_experts: int = 0
+    top_k: int = 0
+    capacity_factor: float = 1.25
+    # modality / position
+    mrope_sections: Optional[tuple] = None   # qwen2-vl
+    n_codebooks: int = 1                     # musicgen
+    pos_embed: str = "rope"                  # "sinusoidal" for musicgen
+    window: Optional[int] = None             # local attention
+    # scaling / tying
+    tie_embeddings: bool = True
+    embed_scale: float = 1.0                 # minicpm: 12.0
+    residual_scale: float = 1.0              # minicpm: 1.4/sqrt(L)
+    logit_scale: float = 1.0                 # command-r: 0.0625
+    # implementation
+    attn_impl: str = "ref"                   # "chunked" | "pallas"
+    loss_chunk: int = 0                      # seq-chunked xent (0 = off)
+    fsdp_hints: bool = False                 # keep param slices sharded in-loop
+    compute_dtype: str = "bfloat16"
+    param_dtype: str = "float32"
+    remat: bool = True
+    max_decode_len: int = 0                  # serving cache length
+
+    @property
+    def hd(self) -> int:
+        return self.head_dim or self.d_model // self.n_heads
+
+    @property
+    def is_moe(self) -> bool:
+        return self.num_experts > 0
+
+    @property
+    def cdtype(self):
+        return jnp.dtype(self.compute_dtype)
+
+    @property
+    def pdtype(self):
+        return jnp.dtype(self.param_dtype)
+
+    def param_count(self) -> int:
+        return sum(int(x.size) for x in jax.tree.leaves(
+            jax.eval_shape(lambda: init_params(jax.random.PRNGKey(0), self))))
+
+    def active_param_count(self) -> int:
+        """Per-token active params (= total for dense; k/E of experts for MoE)."""
+        total = self.param_count()
+        if not self.is_moe:
+            return total
+        expert = 3 * self.d_model * self.d_ff * self.num_experts * \
+            self.n_layers
+        return total - expert + expert * self.top_k // self.num_experts
+
+
+# --------------------------------------------------------------------------
+# init
+# --------------------------------------------------------------------------
+def init_params(key, cfg: TransformerConfig):
+    dt = cfg.pdtype
+    hd, h, hkv = cfg.hd, cfg.n_heads, cfg.n_kv_heads
+    d, L = cfg.d_model, cfg.n_layers
+    keys = jax.random.split(key, 16)
+    s = d ** -0.5
+
+    def nrm(k, shape, scale):
+        return jax.random.normal(k, shape, dt) * scale
+
+    layers = {
+        "attn_norm": jnp.ones((L, d), dt),
+        "wq": nrm(keys[0], (L, d, h * hd), s),
+        "wk": nrm(keys[1], (L, d, hkv * hd), s),
+        "wv": nrm(keys[2], (L, d, hkv * hd), s),
+        "wo": nrm(keys[3], (L, h * hd, d), (h * hd) ** -0.5),
+    }
+    if cfg.norm == "layernorm":
+        layers["attn_norm_bias"] = jnp.zeros((L, d), dt)
+    if cfg.qkv_bias:
+        layers["bq"] = jnp.zeros((L, h * hd), dt)
+        layers["bk"] = jnp.zeros((L, hkv * hd), dt)
+        layers["bv"] = jnp.zeros((L, hkv * hd), dt)
+    if not cfg.parallel_block:
+        layers["mlp_norm"] = jnp.ones((L, d), dt)
+        if cfg.norm == "layernorm":
+            layers["mlp_norm_bias"] = jnp.zeros((L, d), dt)
+    if cfg.is_moe:
+        moe = init_moe_params(keys[4], d, cfg.d_ff, cfg.num_experts, dt)
+        layers["router"] = jnp.broadcast_to(moe["router"],
+                                            (L, d, cfg.num_experts)).copy()
+        for nm in ("wi_gate", "wi_up", "wo"):
+            arr = moe[nm]
+            layers["moe_" + nm] = jnp.broadcast_to(
+                arr, (L,) + arr.shape).copy()
+    else:
+        f = cfg.d_ff
+        if cfg.mlp_act == "gelu":
+            layers["wi"] = nrm(keys[5], (L, d, f), s)
+            layers["bi"] = jnp.zeros((L, f), dt)
+            layers["wo_mlp"] = nrm(keys[6], (L, f, d), f ** -0.5)
+            layers["bo"] = jnp.zeros((L, d), dt)
+        else:
+            layers["wi_gate"] = nrm(keys[5], (L, d, f), s)
+            layers["wi_up"] = nrm(keys[7], (L, d, f), s)
+            layers["wo_mlp"] = nrm(keys[6], (L, f, d), f ** -0.5)
+
+    params = {
+        "embed": nrm(keys[8], (cfg.n_codebooks, cfg.vocab_size, d), 1.0)
+        if cfg.n_codebooks > 1 else nrm(keys[8], (cfg.vocab_size, d), 1.0),
+        "layers": layers,
+        "final_norm": jnp.ones((d,), dt),
+    }
+    if cfg.norm == "layernorm":
+        params["final_norm_bias"] = jnp.zeros((d,), dt)
+    if not cfg.tie_embeddings:
+        params["lm_head"] = nrm(keys[9],
+                                (cfg.n_codebooks, d, cfg.vocab_size)
+                                if cfg.n_codebooks > 1
+                                else (d, cfg.vocab_size), s)
+    return params
+
+
+# --------------------------------------------------------------------------
+# forward
+# --------------------------------------------------------------------------
+def _norm(cfg, x, w, b=None):
+    if cfg.norm == "layernorm":
+        return layer_norm(x, w, b)
+    return rms_norm(x, w)
+
+
+def _mlp(cfg, lp, h):
+    if cfg.is_moe:
+        b, s, d = h.shape
+        moe_params = {"router": lp["router"], "wi_gate": lp["moe_wi_gate"],
+                      "wi_up": lp["moe_wi_up"], "wo": lp["moe_wo"]}
+        out = moe_ffn(h.reshape(b * s, d), moe_params,
+                      num_experts=cfg.num_experts, top_k=cfg.top_k,
+                      capacity_factor=cfg.capacity_factor)
+        return out.reshape(b, s, d)
+    if cfg.mlp_act == "gelu":
+        return gelu_mlp(h, lp["wi"], lp["bi"], lp["wo_mlp"], lp["bo"])
+    fn = geglu if cfg.mlp_act == "geglu" else swiglu
+    return fn(h, lp["wi_gate"], lp["wi_up"], lp["wo_mlp"])
+
+
+# storage layout of each block weight (see distributed/sharding.py); used
+# to pin the per-layer slices to their sharded layout INSIDE the layer loop,
+# so the FSDP all-gather happens one layer at a time (in bf16) instead of
+# being hoisted out of the scan as a full-model fp32 all-gather.
+_BLOCK_WSPECS = {
+    "wq": ("fsdp", "model"), "wk": ("fsdp", "model"), "wv": ("fsdp", "model"),
+    "wo": ("model", "fsdp"), "wi_gate": ("fsdp", "model"),
+    "wi_up": ("fsdp", "model"), "wo_mlp": ("model", "fsdp"),
+    "wi": ("fsdp", "model"), "router": ("fsdp", None),
+    "moe_wi_gate": ("model", "fsdp", None),
+    "moe_wi_up": ("model", "fsdp", None), "moe_wo": ("model", None, "fsdp"),
+}
+
+
+def _block(cfg: TransformerConfig, x, lp, cos, sin, *, q_offset=0,
+           cache=None, kv_len=None):
+    """One transformer block. cache: (k, v) of (B, M, Hkv, hd) to update."""
+    b, s, d = x.shape
+    hd, h, hkv = cfg.hd, cfg.n_heads, cfg.n_kv_heads
+    if cfg.fsdp_hints:
+        lp = {k: (shard_hint(v, _BLOCK_WSPECS[k]) if k in _BLOCK_WSPECS
+                  else v) for k, v in lp.items()}
+    # mixed precision: weights are stored in param_dtype, computed in cdtype
+    lp = jax.tree.map(lambda a: a.astype(cfg.cdtype), lp)
+    # Megatron-SP: the residual stream is sequence-sharded over "model";
+    # gather S at block entry (all-gather fwd / reduce-scatter bwd), run the
+    # projections tensor-parallel, reduce-scatter back at block exit.
+    # (Gather placed after the norm: the XLA CPU partitioner then gathers the
+    # norm's f32 internals — 2x wire bytes vs bf16 — but keeps the saved
+    # checkpoints sequence-sharded. See EXPERIMENTS.md §Perf iteration 3.)
+    hnb = _norm(cfg, x, lp["attn_norm"], lp.get("attn_norm_bias"))
+    hnb = shard_hint(hnb, ("batch", None, None))
+    q = hnb @ lp["wq"]
+    k = hnb @ lp["wk"]
+    v = hnb @ lp["wv"]
+    if cfg.qkv_bias:
+        q, k, v = q + lp["bq"], k + lp["bk"], v + lp["bv"]
+    # attention zone: shard heads over "model" when they divide, else fall
+    # back to sequence sharding of q (chunked attention handles both)
+    ms = mesh_axis_size("model")
+    head_par = ms is not None and h % ms == 0 and cache is None
+    seq_ax = None if (head_par or cache is not None) else "model"
+    q = shard_hint(q.reshape(b, s, h, hd),
+                   ("batch", seq_ax, "model" if head_par else None, None))
+    kv_head_ax = "model" if (ms and hkv % ms == 0 and head_par) else None
+    k = shard_hint(k.reshape(b, s, hkv, hd),
+                   ("batch", None, kv_head_ax, None))
+    v = shard_hint(v.reshape(b, s, hkv, hd),
+                   ("batch", None, kv_head_ax, None))
+    if cfg.pos_embed == "rope":
+        q, k = apply_rope(q, cos, sin), apply_rope(k, cos, sin)
+
+    new_cache = None
+    if cache is not None:
+        ck, cv = cache
+        if jnp.ndim(q_offset) == 1:   # per-slot positions (continuous batching)
+            rows = jnp.arange(b)[:, None]
+            cols = q_offset[:, None] + jnp.arange(s)[None]
+            ck = ck.at[rows, cols].set(k.astype(ck.dtype))
+            cv = cv.at[rows, cols].set(v.astype(cv.dtype))
+        else:
+            ck = jax.lax.dynamic_update_slice_in_dim(ck, k.astype(ck.dtype),
+                                                     q_offset, axis=1)
+            cv = jax.lax.dynamic_update_slice_in_dim(cv, v.astype(cv.dtype),
+                                                     q_offset, axis=1)
+        k, v, new_cache = ck, cv, (ck, cv)
+
+    if jnp.ndim(q_offset) == 1:
+        # decode with ragged per-slot positions: kv_len mask is the causal
+        # constraint (s == 1), so drop the scalar causal triangle
+        attn = attention(q, k, v, impl="ref", causal=False,
+                         window=cfg.window, kv_len=kv_len)
+    else:
+        attn = attention(q, k, v, impl=cfg.attn_impl, causal=True,
+                         window=cfg.window, q_offset=q_offset, kv_len=kv_len)
+    attn_out = shard_hint(attn.reshape(b, s, h * hd) @ lp["wo"],
+                          ("batch", "model" if cache is None else None,
+                           None))   # reduce-scatter back to seq-sharded
+
+    if cfg.parallel_block:
+        x = x + cfg.residual_scale * (attn_out + _mlp(cfg, lp, hnb))
+    else:
+        x = x + cfg.residual_scale * attn_out
+        h2 = _norm(cfg, x, lp["mlp_norm"], lp.get("mlp_norm_bias"))
+        h2 = shard_hint(h2, ("batch", None, None))
+        mlp_out = shard_hint(_mlp(cfg, lp, h2),
+                             ("batch", "model" if cache is None else None,
+                              None))
+        x = x + cfg.residual_scale * mlp_out
+    return x, new_cache
+
+
+def _positions_to_cos_sin(cfg, positions, b, s, dtype):
+    if cfg.pos_embed != "rope":
+        return None, None
+    if cfg.mrope_sections is not None:
+        if positions is None:
+            p = jnp.broadcast_to(jnp.arange(s)[None], (b, s))
+            positions = jnp.stack([p, p, p])
+        return mrope_cos_sin(positions, cfg.hd, cfg.mrope_sections,
+                             cfg.rope_base, dtype)
+    if positions is None:
+        positions = jnp.arange(s)
+    return rope_cos_sin(positions, cfg.hd, cfg.rope_base, dtype)
+
+
+def _embed(cfg, params, tokens):
+    if cfg.n_codebooks > 1:
+        # tokens: (B, n_q, S); sum codebook embeddings (EnCodec stub)
+        parts = [params["embed"][q][tokens[:, q]]
+                 for q in range(cfg.n_codebooks)]
+        x = sum(parts)
+    else:
+        x = params["embed"][tokens]
+    return (x * cfg.embed_scale).astype(cfg.cdtype)
+
+
+def _sinusoidal(cfg, s, offset=0):
+    d = cfg.d_model
+    pos = jnp.arange(offset, offset + s)[:, None].astype(jnp.float32)
+    dim = jnp.arange(0, d, 2)[None].astype(jnp.float32)
+    ang = pos / (10000.0 ** (dim / d))
+    pe = jnp.concatenate([jnp.sin(ang), jnp.cos(ang)], axis=-1)
+    return pe.astype(cfg.cdtype)
+
+
+def _unembed(cfg, params, x):
+    if cfg.n_codebooks > 1:
+        head = (jnp.transpose(params["embed"], (0, 2, 1))
+                if cfg.tie_embeddings else params["lm_head"])
+        logits = jnp.einsum("bsd,qdv->bqsv", x, head.astype(cfg.cdtype))
+        logits = shard_hint(logits, ("batch", None, None, "model"))
+    else:
+        head = (params["embed"].T if cfg.tie_embeddings
+                else params["lm_head"])
+        logits = x @ head.astype(cfg.cdtype)
+        logits = shard_hint(logits, ("batch", None, "model"))
+    return logits * cfg.logit_scale
+
+
+def _hidden(params, tokens, cfg: TransformerConfig, positions=None):
+    """Common trunk: embeddings -> scan over blocks -> final norm."""
+    x = _embed(cfg, params, tokens)
+    # Megatron-style sequence parallelism: the residual stream (and thus the
+    # per-layer activation checkpoints saved by the scan) shards its SEQUENCE
+    # axis over "model". Per-token ops (norms, projections, MLP) need no
+    # communication; chunked attention gathers only k/v (GQA: 8-64x smaller
+    # than the stream). Dropped automatically when S % axis != 0 (decode).
+    sp = ("batch", "model", None)
+    x = shard_hint(x, sp)
+    b, s = x.shape[0], x.shape[1]
+    if cfg.pos_embed == "sinusoidal":
+        x = x + _sinusoidal(cfg, s)[None]
+    cos, sin = _positions_to_cos_sin(cfg, positions, b, s, cfg.cdtype)
+
+    blk = _block
+    if cfg.remat:
+        blk = jax.checkpoint(
+            _block, policy=jax.checkpoint_policies.nothing_saveable,
+            static_argnums=(0,))
+
+    def body(x, lp):
+        x, _ = blk(cfg, x, lp, cos, sin)
+        return shard_hint(x, sp), None  # residual stays sequence-sharded
+
+    x, _ = jax.lax.scan(body, x, params["layers"])
+    return _norm(cfg, x, params["final_norm"].astype(cfg.cdtype),
+                 params.get("final_norm_bias"))
+
+
+def forward(params, tokens, cfg: TransformerConfig, positions=None):
+    """tokens: (B, S) int32 — or (B, n_q, S) for multi-codebook.
+    Returns logits (B, S, V) (or (B, n_q, S, V))."""
+    x = _hidden(params, tokens, cfg, positions)
+    return _unembed(cfg, params, x)
+
+
+def loss_fn(params, batch, cfg: TransformerConfig):
+    """Mean next-token cross-entropy. batch: {tokens, labels[, positions]}.
+
+    With cfg.loss_chunk > 0 (and a single codebook) the (B, S, V) logits are
+    never materialized: the xent scans the sequence in chunks."""
+    labels = batch["labels"]
+    if cfg.loss_chunk and cfg.n_codebooks == 1 \
+            and labels.shape[-1] % cfg.loss_chunk == 0:
+        x = _hidden(params, batch["tokens"], cfg,
+                    positions=batch.get("positions"))
+        head = (params["embed"].T if cfg.tie_embeddings
+                else params["lm_head"]).astype(cfg.cdtype)
+        return chunked_lm_loss(x, head, labels, chunk=cfg.loss_chunk,
+                               logit_scale=cfg.logit_scale)
+    logits = forward(params, batch["tokens"], cfg,
+                     positions=batch.get("positions"))
+    return jnp.mean(softmax_xent(logits, labels))
+
+
+# --------------------------------------------------------------------------
+# serving: prefill + decode with KV cache
+# --------------------------------------------------------------------------
+def init_cache(cfg: TransformerConfig, batch: int, max_len: int,
+               dtype=None):
+    dtype = dtype or cfg.cdtype
+    shape = (cfg.n_layers, batch, max_len, cfg.n_kv_heads, cfg.hd)
+    return {"k": jnp.zeros(shape, dtype), "v": jnp.zeros(shape, dtype),
+            "pos": jnp.zeros((), jnp.int32)}
+
+
+def decode_step(params, cache, tokens, cfg: TransformerConfig,
+                positions=None):
+    """One decode step: tokens (B, S_new) (S_new=1 for pure decode, >1 for
+    prefill). Returns (logits_last (B, [n_q,] V), new_cache)."""
+    x = _embed(cfg, params, tokens)
+    b, s = x.shape[0], x.shape[1]
+    pos0 = cache["pos"]
+    if cfg.pos_embed == "sinusoidal":
+        # decode offset via dynamic slice of a (max) table is avoided by
+        # computing the angles directly at pos0 + arange(s)
+        d = cfg.d_model
+        p = (pos0 + jnp.arange(s))[:, None].astype(jnp.float32)
+        dim = jnp.arange(0, d, 2)[None].astype(jnp.float32)
+        ang = p / (10000.0 ** (dim / d))
+        x = x + jnp.concatenate([jnp.sin(ang), jnp.cos(ang)],
+                                -1).astype(x.dtype)[None]
+    if positions is None:
+        if jnp.ndim(pos0) == 1:       # per-slot decode positions
+            pos_ids = pos0[:, None] + jnp.arange(s)[None]
+        else:
+            pos_ids = pos0 + jnp.arange(s)
+        if cfg.mrope_sections is not None:
+            p = jnp.broadcast_to(pos_ids, (b, s))
+            positions = jnp.stack([p, p, p])
+        else:
+            positions = pos_ids
+    cos, sin = _positions_to_cos_sin(cfg, positions, b, s, cfg.cdtype)
+    kv_len = pos0 + s
+
+    def body(x, xs):
+        lp, ck, cv = xs
+        x, new_cache = _block(cfg, x, lp, cos, sin, q_offset=pos0,
+                              cache=(ck, cv), kv_len=kv_len)
+        return x, new_cache
+
+    x, (nk, nv) = jax.lax.scan(body, x,
+                               (params["layers"], cache["k"], cache["v"]))
+    x = _norm(cfg, x, params["final_norm"].astype(cfg.cdtype),
+              params.get("final_norm_bias"))
+    logits = _unembed(cfg, params, x[:, -1:] if cfg.n_codebooks == 1
+                      else x)
+    if cfg.n_codebooks > 1:
+        logits = logits[:, :, -1]  # (B, n_q, V)
+    else:
+        logits = logits[:, -1]     # (B, V)
+    return logits, {"k": nk, "v": nv, "pos": pos0 + s}

@@ -1,0 +1,380 @@
+"""xLSTM (arXiv:2405.04517): alternating sLSTM / mLSTM residual blocks.
+
+- mLSTM: matrix memory C per head with exponential input/forget gates.
+  Training uses the paper's parallel (quadratic, masked) formulation with
+  log-space stabilization; decode uses the O(1) recurrent step.
+- sLSTM: scalar memory with exponential gating and per-head recurrent
+  weights -> strictly sequential, implemented with lax.scan (TPU-friendly:
+  one fused loop over time).
+
+`d_ff=0` in the assignment: channel mixing lives inside the blocks (up/down
+projections with projection factor 2), no separate FFN.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed.hints import shard_hint
+
+from .layers import rms_norm
+
+
+@dataclass(frozen=True)
+class XLSTMConfig:
+    name: str = "xlstm"
+    n_layers: int = 24                 # alternating sLSTM, mLSTM (pairs)
+    d_model: int = 1024
+    n_heads: int = 4
+    vocab_size: int = 50304
+    proj_factor: float = 2.0           # mLSTM up-projection
+    mlstm_chunk: int = 256             # chunkwise-parallel form block size
+    compute_dtype: str = "bfloat16"
+    param_dtype: str = "float32"
+    remat: bool = True
+    loss_chunk: int = 0                # seq-chunked xent (0 = off)
+    fsdp_hints: bool = False           # keep param slices sharded in-loop
+    attn_impl: str = "ref"             # unused; uniform config interface
+    max_decode_len: int = 0
+
+    @property
+    def d_inner(self) -> int:
+        return int(self.d_model * self.proj_factor)
+
+    @property
+    def hd(self) -> int:
+        return self.d_inner // self.n_heads
+
+    @property
+    def cdtype(self):
+        return jnp.dtype(self.compute_dtype)
+
+    @property
+    def pdtype(self):
+        return jnp.dtype(self.param_dtype)
+
+    def param_count(self) -> int:
+        return sum(int(x.size) for x in jax.tree.leaves(
+            jax.eval_shape(lambda: init_params(jax.random.PRNGKey(0), self))))
+
+    def active_param_count(self) -> int:
+        return self.param_count()
+
+
+def init_params(key, cfg: XLSTMConfig):
+    dt = cfg.pdtype
+    d, di, h = cfg.d_model, cfg.d_inner, cfg.n_heads
+    npairs = cfg.n_layers // 2
+    ks = jax.random.split(key, 12)
+    s, si = d ** -0.5, di ** -0.5
+
+    def nrm(k, shape, scale):
+        return jax.random.normal(k, shape, dt) * scale
+
+    slstm = {  # per pair, stacked on axis 0
+        "norm": jnp.ones((npairs, d), dt),
+        "w_gates": nrm(ks[0], (npairs, d, 4 * d), s),     # z, i, f, o
+        "r_gates": nrm(ks[1], (npairs, h, 4 * (d // h), d // h), (d // h) ** -0.5),
+        "b_gates": jnp.zeros((npairs, 4 * d), dt),
+        "w_out": nrm(ks[2], (npairs, d, d), s),
+    }
+    mlstm = {
+        "norm": jnp.ones((npairs, d), dt),
+        "w_up": nrm(ks[3], (npairs, d, di), s),
+        "w_gate": nrm(ks[4], (npairs, d, di), s),
+        "w_q": nrm(ks[5], (npairs, di, di), si),
+        "w_k": nrm(ks[6], (npairs, di, di), si),
+        "w_v": nrm(ks[7], (npairs, di, di), si),
+        "w_if": nrm(ks[8], (npairs, di, 2 * h), si),      # i, f per head
+        "b_if": jnp.zeros((npairs, 2 * h), dt),
+        "skip_norm": jnp.ones((npairs, di), dt),
+        "w_down": nrm(ks[9], (npairs, di, d), si),
+    }
+    return {
+        "embed": nrm(ks[10], (cfg.vocab_size, d), 1.0),
+        "slstm": slstm,
+        "mlstm": mlstm,
+        "final_norm": jnp.ones((d,), dt),
+    }
+
+
+# --------------------------------------------------------------------------
+# sLSTM cell (sequential scan; exponential gating with stabilizer state m)
+# --------------------------------------------------------------------------
+def _slstm_block(cfg, x, lp, state=None):
+    b, s, d = x.shape
+    h = cfg.n_heads
+    dh = d // h
+    xn = rms_norm(x, lp["norm"])
+    gates_x = xn @ lp["w_gates"] + lp["b_gates"]           # (B,S,4D)
+    gates_x = gates_x.reshape(b, s, 4, h, dh)
+
+    if state is None:
+        c0 = jnp.zeros((b, h, dh), jnp.float32)
+        n0 = jnp.zeros((b, h, dh), jnp.float32)
+        m0 = jnp.full((b, h, dh), -jnp.inf, jnp.float32)
+        hprev0 = jnp.zeros((b, h, dh), jnp.float32)
+    else:
+        c0, n0, m0, hprev0 = state
+
+    r = lp["r_gates"].reshape(h, 4, dh, dh)                 # per-head recurrent
+
+    def step(carry, gx):
+        c, n, m, hprev = carry
+        # gx: (B, 4, H, dh); recurrent contribution from h_{t-1}
+        rec = jnp.einsum("bhd,hgde->bghe", hprev, r)        # (B,4,H,dh)
+        z_, i_, f_, o_ = [gx[:, j].astype(jnp.float32) + rec[:, j]
+                          for j in range(4)]
+        z = jnp.tanh(z_)
+        o = jax.nn.sigmoid(o_)
+        m_new = jnp.maximum(f_ + m, i_)                     # log-space stabilizer
+        i_g = jnp.exp(i_ - m_new)
+        f_g = jnp.exp(f_ + m - m_new)
+        c_new = f_g * c + i_g * z
+        n_new = f_g * n + i_g
+        h_new = o * c_new / jnp.maximum(jnp.abs(n_new), 1.0)
+        return (c_new, n_new, m_new, h_new), h_new
+
+    gx_t = gates_x.transpose(1, 0, 2, 3, 4)                 # (S,B,4,H,dh)
+    (cT, nT, mT, hT), hs = jax.lax.scan(step, (c0, n0, m0, hprev0), gx_t)
+    out = hs.transpose(1, 0, 2, 3).reshape(b, s, d).astype(x.dtype)
+    out = out @ lp["w_out"]
+    return x + out, (cT, nT, mT, hT)
+
+
+# --------------------------------------------------------------------------
+# mLSTM: parallel (training) and recurrent (decode) forms
+# --------------------------------------------------------------------------
+def _mlstm_parallel(q, k, v, ifg):
+    """q,k,v: (B,S,H,dh); ifg: (B,S,2H) pre-activations. Stabilized masked
+    linear attention with exponential gates (xLSTM eq. 19-27)."""
+    b, s, h, dh = q.shape
+    i_pre = ifg[..., :h].astype(jnp.float32)                # (B,S,H)
+    f_pre = ifg[..., h:].astype(jnp.float32)
+    logf = jax.nn.log_sigmoid(f_pre)                        # (B,S,H)
+    F = jnp.cumsum(logf, axis=1)                            # cumulative
+    # D_ij = exp(F_i - F_j + i_j) for j <= i, stabilized per row
+    logD = (F[:, :, None, :] - F[:, None, :, :]
+            + i_pre[:, None, :, :])                         # (B,Sq,Sk,H)
+    mask = jnp.tril(jnp.ones((s, s), bool))
+    logD = jnp.where(mask[None, :, :, None], logD, -jnp.inf)
+    m = jnp.max(logD, axis=2, keepdims=True)                # (B,S,1,H)
+    m = jnp.maximum(m, -1e30)                               # avoid -inf - -inf
+    D = jnp.exp(logD - m)
+    scale = dh ** -0.5
+    scores = jnp.einsum("bqhd,bkhd->bqkh", q.astype(jnp.float32) * scale,
+                        k.astype(jnp.float32))
+    w = scores * D
+    norm = jnp.maximum(jnp.abs(jnp.sum(w, axis=2)), jnp.exp(-m[:, :, 0]))
+    out = jnp.einsum("bqkh,bkhd->bqhd", w, v.astype(jnp.float32))
+    return (out / norm[..., None]).astype(v.dtype)
+
+
+def _mlstm_chunked(q, k, v, ifg, chunk: int = 256):
+    """Chunkwise-parallel mLSTM: O(S*C) memory instead of O(S^2).
+
+    Within a chunk the paper's masked quadratic form applies; across chunks
+    a recurrent (C_state, n_state, m_state) triple carries the matrix
+    memory, exactly like the decode path but advanced a chunk at a time.
+    Stabilization: all exponents are differences of chunk-local cumulative
+    gates and the carried max m_st, so nothing drifts with sequence length.
+    Equivalent to `_mlstm_parallel` (tests/test_models.py asserts it).
+    """
+    b, s, h, dh = q.shape
+    pad = (-s) % chunk
+    if pad:
+        q = jnp.pad(q, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        # padded steps: i = -inf (zero weight), f = 0 (logf ~ -0.69, harmless)
+        ifg = jnp.pad(ifg, ((0, 0), (0, pad), (0, 0)),
+                      constant_values=-1e30)
+    nchunk = (s + pad) // chunk
+    scale = dh ** -0.5
+
+    def reshape_c(x_):
+        return x_.reshape(b, nchunk, chunk, *x_.shape[2:]).swapaxes(0, 1)
+
+    qs = reshape_c(q.astype(jnp.float32) * scale)     # (N,B,C,H,dh)
+    ks = reshape_c(k.astype(jnp.float32))
+    vs = reshape_c(v.astype(jnp.float32))
+    i_pre = reshape_c(ifg[..., :h].astype(jnp.float32))   # (N,B,C,H)
+    f_pre = reshape_c(jnp.where(ifg[..., h:] > -1e29,
+                                jax.nn.log_sigmoid(
+                                    ifg[..., h:].astype(jnp.float32)), 0.0))
+
+    C0 = jnp.zeros((b, h, dh, dh), jnp.float32)
+    n0 = jnp.zeros((b, h, dh), jnp.float32)
+    m0 = jnp.full((b, h), -jnp.inf, jnp.float32)
+
+    tri = jnp.tril(jnp.ones((chunk, chunk), bool))
+
+    def chunk_step(carry, xs):
+        C_st, n_st, m_st = carry
+        qc, kc, vc, ic, fc = xs                       # (B,C,H,*)
+        lam = jnp.cumsum(fc, axis=1)                  # (B,C,H) local cumsum
+        g = ic - lam
+        M = jnp.maximum(m_st[:, None],                # (B,C,H) running max
+                        jax.lax.cummax(g, axis=1))
+        logD = g[:, None, :, :] - M[:, :, None, :]    # (B,Cq,Ck,H)
+        logD = jnp.where(tri[None, :, :, None], logD, -jnp.inf)
+        D = jnp.exp(logD)
+        scores = jnp.einsum("bqhd,bkhd->bqkh", qc, kc)
+        w = scores * D
+        inter = jnp.exp(m_st[:, None] - M)            # (B,C,H)
+        num = (jnp.einsum("bqkh,bkhd->bqhd", w, vc)
+               + inter[..., None] * jnp.einsum("bqhd,bhde->bqhe", qc, C_st))
+        nvec = (inter[..., None] * n_st[:, None]
+                + jnp.einsum("bqkh,bkhd->bqhd", D, kc))
+        m_t = lam + M
+        den = jnp.maximum(jnp.abs(jnp.sum(qc * nvec, -1)), jnp.exp(-m_t))
+        hc = num / den[..., None]
+        # end-of-chunk state
+        M_last, lam_last = M[:, -1], lam[:, -1]       # (B,H)
+        kw = jnp.exp(g - M_last[:, None])[..., None] * kc
+        C_new = (jnp.exp(m_st - M_last)[..., None, None] * C_st
+                 + jnp.einsum("bkhd,bkhe->bhde", kw, vc))
+        n_new = (jnp.exp(m_st - M_last)[..., None] * n_st
+                 + jnp.sum(kw, axis=1))
+        m_new = lam_last + M_last
+        return (C_new, n_new, m_new), hc
+
+    (_, _, _), hs = jax.lax.scan(chunk_step, (C0, n0, m0),
+                                 (qs, ks, vs, i_pre, f_pre))
+    out = hs.swapaxes(0, 1).reshape(b, s + pad, h, dh)[:, :s]
+    return out.astype(v.dtype)
+
+
+def _mlstm_block(cfg, x, lp, state=None):
+    b, s, d = x.shape
+    h, dh, di = cfg.n_heads, cfg.hd, cfg.d_inner
+    xn = rms_norm(x, lp["norm"])
+    xu = shard_hint(xn @ lp["w_up"], ("batch", None, "model"))  # (B,S,Di)
+    zg = shard_hint(jax.nn.silu(xn @ lp["w_gate"]),
+                    ("batch", None, "model"))
+    q = (xu @ lp["w_q"]).reshape(b, s, h, dh)
+    k = (xu @ lp["w_k"]).reshape(b, s, h, dh)
+    v = (xu @ lp["w_v"]).reshape(b, s, h, dh)
+    ifg = xu @ lp["w_if"] + lp["b_if"]                      # (B,S,2H)
+
+    if state is None:
+        if s > cfg.mlstm_chunk:
+            out = _mlstm_chunked(q, k, v, ifg, cfg.mlstm_chunk)
+        else:
+            out = _mlstm_parallel(q, k, v, ifg)
+        new_state = None
+    else:
+        C, n, m = state
+        i_pre = ifg[..., :h].astype(jnp.float32)[:, 0]      # (B,H), S=1
+        f_pre = ifg[..., h:].astype(jnp.float32)[:, 0]
+        logf = jax.nn.log_sigmoid(f_pre)
+        m_new = jnp.maximum(logf + m, i_pre)
+        i_g = jnp.exp(i_pre - m_new)[..., None, None]
+        f_g = jnp.exp(logf + m - m_new)[..., None, None]
+        kf = k.astype(jnp.float32)[:, 0] * dh ** -0.5
+        vf = v.astype(jnp.float32)[:, 0]
+        C_new = f_g * C + i_g * (kf[..., :, None] * vf[..., None, :])
+        n_new = f_g[..., 0] * n + i_g[..., 0] * kf
+        qf = q.astype(jnp.float32)[:, 0]
+        num = jnp.einsum("bhd,bhde->bhe", qf, C_new)
+        # stabilized states store exp(-m)-scaled values: the max(|.|, 1)
+        # floor becomes exp(-m) in the scaled representation
+        den = jnp.maximum(jnp.abs(jnp.sum(qf * n_new, -1)), jnp.exp(-m_new))
+        out = (num / den[..., None]).reshape(b, 1, di).astype(x.dtype)
+        new_state = (C_new, n_new, m_new)
+    out = out.reshape(b, s, di)
+    out = rms_norm(out, lp["skip_norm"]) * zg
+    return x + out @ lp["w_down"], new_state
+
+
+# --------------------------------------------------------------------------
+# model
+# --------------------------------------------------------------------------
+_WSPECS = {
+    "w_gates": ("fsdp", "model"), "w_out": ("fsdp", "model"),
+    "w_up": ("fsdp", "model"), "w_gate": ("fsdp", "model"),
+    "w_q": ("fsdp", "model"), "w_k": ("fsdp", "model"),
+    "w_v": ("fsdp", "model"), "w_if": ("fsdp", None),
+    "w_down": ("model", "fsdp"),
+}
+
+
+def _cast(lp, dt, hints=False):
+    if hints:
+        lp = {k: (shard_hint(v, _WSPECS[k]) if k in _WSPECS else v)
+              for k, v in lp.items()}
+    return jax.tree.map(lambda a: a.astype(dt), lp)
+
+
+def _trunk(params, tokens, cfg: XLSTMConfig):
+    x = shard_hint(params["embed"][tokens].astype(cfg.cdtype),
+                   ("batch", None, None))
+
+    def pair(x, lps):
+        sl, ml = lps
+        x, _ = _slstm_block(cfg, x, _cast(sl, cfg.cdtype, cfg.fsdp_hints))
+        x, _ = _mlstm_block(cfg, x, _cast(ml, cfg.cdtype, cfg.fsdp_hints))
+        return shard_hint(x, ("batch", None, None)), None
+
+    if cfg.remat:
+        pair = jax.checkpoint(pair,
+                              policy=jax.checkpoint_policies.nothing_saveable)
+    x, _ = jax.lax.scan(pair, x, (params["slstm"], params["mlstm"]))
+    return rms_norm(x, params["final_norm"].astype(cfg.cdtype))
+
+
+def forward(params, tokens, cfg: XLSTMConfig, positions=None):
+    x = _trunk(params, tokens, cfg)
+    logits = x @ params["embed"].T.astype(cfg.cdtype)
+    return shard_hint(logits, ("batch", None, "model"))
+
+
+def loss_fn(params, batch, cfg: XLSTMConfig):
+    labels = batch["labels"]
+    if cfg.loss_chunk and labels.shape[-1] % cfg.loss_chunk == 0:
+        from .losses import chunked_lm_loss
+        x = _trunk(params, batch["tokens"], cfg)
+        return chunked_lm_loss(x, params["embed"].T.astype(cfg.cdtype),
+                               labels, chunk=cfg.loss_chunk)
+    logits = forward(params, batch["tokens"], cfg).astype(jnp.float32)
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, labels[..., None], -1).squeeze(-1)
+    return jnp.mean(logz - gold)
+
+
+def init_cache(cfg: XLSTMConfig, batch: int, max_len: int, dtype=None):
+    """Recurrent state only — O(1) in sequence length (the long_500k story)."""
+    npairs = cfg.n_layers // 2
+    h, dh, dhs = cfg.n_heads, cfg.hd, cfg.d_model // cfg.n_heads
+    f32 = jnp.float32
+    return {
+        "slstm": (jnp.zeros((npairs, batch, h, dhs), f32),
+                  jnp.zeros((npairs, batch, h, dhs), f32),
+                  jnp.full((npairs, batch, h, dhs), -jnp.inf, f32),
+                  jnp.zeros((npairs, batch, h, dhs), f32)),
+        "mlstm": (jnp.zeros((npairs, batch, h, dh, dh), f32),
+                  jnp.zeros((npairs, batch, h, dh), f32),
+                  jnp.full((npairs, batch, h), -jnp.inf, f32)),
+        "pos": jnp.zeros((), jnp.int32),
+    }
+
+
+def decode_step(params, cache, tokens, cfg: XLSTMConfig, positions=None):
+    """tokens: (B, 1). Sequential state update through all pairs."""
+    x = params["embed"][tokens].astype(cfg.cdtype)
+
+    def pair(x, xs):
+        sl, ml, s_state, m_state = xs
+        x, s_new = _slstm_block(cfg, x, _cast(sl, cfg.cdtype), state=s_state)
+        x, m_new = _mlstm_block(cfg, x, _cast(ml, cfg.cdtype), state=m_state)
+        return x, (s_new, m_new)
+
+    x, (s_states, m_states) = jax.lax.scan(
+        pair, x, (params["slstm"], params["mlstm"],
+                  cache["slstm"], cache["mlstm"]))
+    x = rms_norm(x, params["final_norm"].astype(cfg.cdtype))
+    logits = (x @ params["embed"].T.astype(cfg.cdtype))[:, -1]
+    return logits, {"slstm": s_states, "mlstm": m_states,
+                    "pos": cache["pos"] + 1}

@@ -1,0 +1,2 @@
+"""Batched serving: continuous-batching engine over the model zoo."""
+from .engine import EngineConfig, Request, ServingEngine

@@ -1,0 +1,146 @@
+"""Batched serving engine with continuous batching (slot-based).
+
+A fixed pool of `max_batch` decode slots shares one batched KV cache.
+Incoming requests prefill into a free slot (b=1 prefill jit); all occupied
+slots decode in lock-step (one batched decode jit); finished sequences free
+their slot immediately for the next queued request — the standard
+continuous-batching serving loop, sized for the assignment's decode shapes.
+
+Per-slot positions ride a (B,) pos vector through the model's ragged-decode
+path. Sampling: greedy or temperature top-k, deterministic under seed.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclass
+class Request:
+    uid: int
+    prompt: np.ndarray              # (S,) int32
+    max_new_tokens: int = 32
+    temperature: float = 0.0        # 0 = greedy
+    eos_id: Optional[int] = None
+    # outputs
+    generated: list = field(default_factory=list)
+    done: bool = False
+
+
+@dataclass(frozen=True)
+class EngineConfig:
+    max_batch: int = 8
+    max_len: int = 512
+    top_k: int = 50
+    seed: int = 0
+
+
+class ServingEngine:
+    def __init__(self, cfg, fns, params, ecfg: EngineConfig):
+        self.model_cfg = cfg
+        self.fns = fns
+        self.params = params
+        self.ecfg = ecfg
+        self.cache = fns.init_cache(cfg, ecfg.max_batch, ecfg.max_len)
+        # engine-owned per-slot state (model cache "pos" becomes a vector)
+        self.cache["pos"] = jnp.zeros((ecfg.max_batch,), jnp.int32)
+        self.slots: list[Optional[Request]] = [None] * ecfg.max_batch
+        self.key = jax.random.PRNGKey(ecfg.seed)
+        self.queue: list[Request] = []
+        self.finished: list[Request] = []
+
+        self._prefill = jax.jit(self._prefill_impl)
+        self._decode = jax.jit(self._decode_impl)
+
+    # --- jitted kernels ------------------------------------------------------
+    def _prefill_impl(self, cache, slot_caches, tokens):
+        """b=1 prefill producing (logits, per-slot cache update)."""
+        one = {"k": slot_caches["k"], "v": slot_caches["v"],
+               "pos": jnp.zeros((), jnp.int32)}
+        logits, new = self.fns.decode_step(self.params, one, tokens,
+                                           self.model_cfg)
+        return logits, new
+
+    def _decode_impl(self, cache, tokens, key, temps):
+        logits, new_cache = self.fns.decode_step(self.params, cache, tokens,
+                                                 self.model_cfg)
+        greedy = jnp.argmax(logits, axis=-1)
+        vals, idx = jax.lax.top_k(logits, self.ecfg.top_k)
+        sampled_in_topk = jax.random.categorical(
+            key, vals / jnp.maximum(temps[:, None], 1e-6))
+        sampled = jnp.take_along_axis(idx, sampled_in_topk[:, None],
+                                      -1)[:, 0]
+        next_tok = jnp.where(temps > 0, sampled, greedy).astype(jnp.int32)
+        return next_tok, new_cache
+
+    # --- slot management -------------------------------------------------------
+    def submit(self, req: Request):
+        self.queue.append(req)
+
+    def _fill_slots(self):
+        for i in range(self.ecfg.max_batch):
+            if self.slots[i] is None and self.queue:
+                req = self.queue.pop(0)
+                tokens = jnp.asarray(req.prompt, jnp.int32)[None]
+                slot_cache = {
+                    "k": self.cache["k"][:, i:i + 1] * 0,
+                    "v": self.cache["v"][:, i:i + 1] * 0,
+                }
+                logits, new = self._prefill(self.cache, slot_cache, tokens)
+                self.cache["k"] = self.cache["k"].at[:, i].set(new["k"][:, 0])
+                self.cache["v"] = self.cache["v"].at[:, i].set(new["v"][:, 0])
+                self.cache["pos"] = self.cache["pos"].at[i].set(
+                    len(req.prompt))
+                # first generated token comes from the prefill logits
+                first = int(jnp.argmax(logits[0]))
+                req.generated.append(first)
+                self.slots[i] = req
+
+    def _active_mask(self):
+        return np.array([s is not None for s in self.slots])
+
+    def step(self):
+        """One engine step: admit new requests, decode all active slots."""
+        self._fill_slots()
+        active = self._active_mask()
+        if not active.any():
+            return 0
+        last = np.zeros((self.ecfg.max_batch,), np.int32)
+        temps = np.zeros((self.ecfg.max_batch,), np.float32)
+        for i, req in enumerate(self.slots):
+            if req is not None:
+                last[i] = req.generated[-1]
+                temps[i] = req.temperature
+        self.key, sub = jax.random.split(self.key)
+        next_tok, new_cache = self._decode(
+            self.cache, jnp.asarray(last)[:, None], sub, jnp.asarray(temps))
+        self.cache = new_cache
+        next_np = np.asarray(next_tok)
+        n_active = 0
+        for i, req in enumerate(self.slots):
+            if req is None:
+                continue
+            n_active += 1
+            req.generated.append(int(next_np[i]))
+            hit_eos = (req.eos_id is not None
+                       and req.generated[-1] == req.eos_id)
+            out_of_room = int(self.cache["pos"][i]) + 1 >= self.ecfg.max_len
+            if len(req.generated) >= req.max_new_tokens or hit_eos \
+                    or out_of_room:
+                req.done = True
+                self.finished.append(req)
+                self.slots[i] = None
+                self.cache["pos"] = self.cache["pos"].at[i].set(0)
+        return n_active
+
+    def run(self, max_steps: int = 10_000):
+        steps = 0
+        while (self.queue or self._active_mask().any()) \
+                and steps < max_steps:
+            self.step()
+            steps += 1
+        return self.finished

@@ -1,0 +1,67 @@
+"""Deterministic synthetic data pipeline.
+
+Streams are a pure function of (seed, step, shard) — the property the
+fault-tolerance layer depends on: after a rollback/restart, replaying step s
+regenerates bit-identical batches on every pod, so no data-loader state needs
+checkpointing (only the step counter). The token source is a mixture of
+Zipf-distributed unigrams and a deterministic repetition pattern, giving a
+learnable (compressible) distribution so training-loss tests can assert
+actual learning rather than noise.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclass(frozen=True)
+class DataConfig:
+    vocab_size: int = 1024
+    seq_len: int = 128
+    global_batch: int = 8
+    seed: int = 0
+    n_codebooks: int = 1          # musicgen-style streams
+    kind: str = "tokens"          # "tokens" | "codebooks" | "vlm"
+
+
+def _zipf_probs(vocab: int) -> np.ndarray:
+    p = 1.0 / np.arange(1, vocab + 1)
+    return p / p.sum()
+
+
+class SyntheticLM:
+    """Deterministic, replayable synthetic LM token stream."""
+
+    def __init__(self, cfg: DataConfig):
+        self.cfg = cfg
+        self._probs = jnp.asarray(_zipf_probs(cfg.vocab_size))
+
+    def batch_at(self, step: int):
+        """Batch for a given step — pure function of (seed, step)."""
+        cfg = self.cfg
+        key = jax.random.fold_in(jax.random.PRNGKey(cfg.seed), step)
+        if cfg.kind == "codebooks":
+            shape = (cfg.global_batch, cfg.n_codebooks, cfg.seq_len + 1)
+        else:
+            shape = (cfg.global_batch, cfg.seq_len + 1)
+        kz, kr = jax.random.split(key)
+        toks = jax.random.choice(kz, cfg.vocab_size, shape, p=self._probs)
+        # overlay a deterministic local repetition pattern (learnable)
+        rep = jax.random.randint(kr, shape[:-1] + (1,), 0, cfg.vocab_size)
+        pattern = jnp.arange(shape[-1]) % 4 == 3
+        toks = jnp.where(pattern, rep, toks).astype(jnp.int32)
+        batch = {"tokens": toks[..., :-1], "labels": toks[..., 1:]}
+        if cfg.kind == "vlm":
+            b, s = batch["tokens"].shape
+            p = jnp.broadcast_to(jnp.arange(s)[None], (b, s))
+            batch["positions"] = jnp.stack([p, p, p])
+        return batch
+
+    def batches(self, start_step: int = 0):
+        step = start_step
+        while True:
+            yield step, self.batch_at(step)
+            step += 1

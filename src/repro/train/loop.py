@@ -1,0 +1,77 @@
+"""Training step construction: grad-accumulation, clipping, AdamW, schedule.
+
+`make_train_step` returns a pure (state, batch) -> (state, metrics) function
+suitable for jax.jit with explicit in/out shardings (launch/dryrun.py and
+launch/train.py supply those; tests run it unsharded on CPU).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Callable, Optional
+
+import jax
+import jax.numpy as jnp
+
+from .optimizer import (AdamWConfig, adamw_update, clip_by_global_norm,
+                        init_opt_state)
+from .schedule import get_schedule
+
+
+@dataclass(frozen=True)
+class TrainConfig:
+    adamw: AdamWConfig = AdamWConfig()
+    schedule: str = "cosine"
+    warmup_steps: int = 100
+    total_steps: int = 1000
+    microbatches: int = 1        # gradient accumulation
+
+
+def init_train_state(key, cfg, fns):
+    params = fns.init(key, cfg)
+    return {"params": params, "opt": init_opt_state(params),
+            "step": jnp.zeros((), jnp.int32)}
+
+
+def make_train_step(model_cfg, fns, tcfg: TrainConfig) -> Callable:
+    sched = get_schedule(tcfg.schedule)
+
+    def loss_of(params, batch):
+        return fns.loss_fn(params, batch, model_cfg)
+
+    def train_step(state, batch):
+        params = state["params"]
+        if tcfg.microbatches > 1:
+            def split(x):
+                return x.reshape((tcfg.microbatches,
+                                  x.shape[0] // tcfg.microbatches)
+                                 + x.shape[1:])
+            mb = jax.tree.map(split, batch)
+
+            def acc(carry, b):
+                l, g = jax.value_and_grad(loss_of)(params, b)
+                return None, (l, g)
+
+            _, (losses, grads) = jax.lax.scan(acc, None, mb)
+            loss = jnp.mean(losses)
+            grads = jax.tree.map(lambda g: jnp.mean(g, axis=0), grads)
+        else:
+            loss, grads = jax.value_and_grad(loss_of)(params, batch)
+
+        grads, gnorm = clip_by_global_norm(grads, tcfg.adamw.grad_clip)
+        lr_scale = sched(state["step"], warmup=tcfg.warmup_steps,
+                         total=tcfg.total_steps)
+        new_params, new_opt = adamw_update(params, grads, state["opt"],
+                                           tcfg.adamw, lr_scale)
+        new_state = {"params": new_params, "opt": new_opt,
+                     "step": state["step"] + 1}
+        metrics = {"loss": loss, "grad_norm": gnorm,
+                   "lr_scale": lr_scale}
+        return new_state, metrics
+
+    return train_step
+
+
+def make_eval_step(model_cfg, fns) -> Callable:
+    def eval_step(state, batch):
+        return fns.loss_fn(state["params"], batch, model_cfg)
+    return eval_step

@@ -1,0 +1,65 @@
+"""AdamW optimizer (fp32 states, decoupled weight decay) + global-norm clip.
+
+Self-contained (no optax in the environment); pure pytree functions so the
+optimizer state shards exactly like the parameters (ZeRO-style when FSDP
+sharding is on).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclass(frozen=True)
+class AdamWConfig:
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    grad_clip: float = 1.0
+
+
+def init_opt_state(params):
+    zeros = lambda p: jnp.zeros(p.shape, jnp.float32)
+    return {"m": jax.tree.map(zeros, params),
+            "v": jax.tree.map(zeros, params),
+            "step": jnp.zeros((), jnp.int32)}
+
+
+def global_norm(tree):
+    return jnp.sqrt(sum(jnp.sum(x.astype(jnp.float32) ** 2)
+                        for x in jax.tree.leaves(tree)))
+
+
+def clip_by_global_norm(grads, max_norm):
+    g = global_norm(grads)
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(g, 1e-12))
+    return jax.tree.map(lambda x: x * scale, grads), g
+
+
+def adamw_update(params, grads, state, cfg: AdamWConfig, lr_scale=1.0):
+    """One AdamW step. lr_scale: schedule multiplier (traced scalar ok)."""
+    step = state["step"] + 1
+    grads = jax.tree.map(lambda g: g.astype(jnp.float32), grads)
+    m = jax.tree.map(lambda m_, g: cfg.b1 * m_ + (1 - cfg.b1) * g,
+                     state["m"], grads)
+    v = jax.tree.map(lambda v_, g: cfg.b2 * v_ + (1 - cfg.b2) * g * g,
+                     state["v"], grads)
+    bc1 = 1 - cfg.b1 ** step.astype(jnp.float32)
+    bc2 = 1 - cfg.b2 ** step.astype(jnp.float32)
+    lr = cfg.lr * lr_scale
+
+    def upd(p, m_, v_):
+        mhat = m_ / bc1
+        vhat = v_ / bc2
+        delta = mhat / (jnp.sqrt(vhat) + cfg.eps)
+        if cfg.weight_decay and p.ndim >= 2:   # decay matrices only
+            delta = delta + cfg.weight_decay * p.astype(jnp.float32)
+        return (p.astype(jnp.float32) - lr * delta).astype(p.dtype)
+
+    new_params = jax.tree.map(upd, params, m, v)
+    return new_params, {"m": m, "v": v, "step": step}

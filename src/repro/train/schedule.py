@@ -1,0 +1,30 @@
+"""LR schedules: linear-warmup cosine, and WSD (warmup-stable-decay — the
+MiniCPM training schedule, per the assignment's arch note)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def warmup_cosine(step, *, warmup: int, total: int, min_frac: float = 0.1):
+    step = jnp.asarray(step, jnp.float32)
+    warm = step / jnp.maximum(warmup, 1)
+    prog = jnp.clip((step - warmup) / jnp.maximum(total - warmup, 1), 0, 1)
+    cos = min_frac + (1 - min_frac) * 0.5 * (1 + jnp.cos(jnp.pi * prog))
+    return jnp.where(step < warmup, warm, cos)
+
+
+def wsd(step, *, warmup: int, total: int, decay_frac: float = 0.1,
+        min_frac: float = 0.01):
+    """Warmup-Stable-Decay: hold lr flat, then exponential-ish final decay."""
+    step = jnp.asarray(step, jnp.float32)
+    decay_start = total * (1 - decay_frac)
+    warm = step / jnp.maximum(warmup, 1)
+    decay_prog = jnp.clip((step - decay_start)
+                          / jnp.maximum(total - decay_start, 1), 0, 1)
+    decay = min_frac ** decay_prog
+    return jnp.where(step < warmup, warm,
+                     jnp.where(step < decay_start, 1.0, decay))
+
+
+def get_schedule(name: str):
+    return {"cosine": warmup_cosine, "wsd": wsd}[name]

@@ -1,0 +1,102 @@
+"""Launch-cost and power-price tests (paper §2.4/§4.4, Fig. 4, Table 1)."""
+import pytest
+
+from repro.core.economics import (CURRENT_LAUNCH_USD_PER_KG,
+                                  TABLE1_SATELLITES, TERRESTRIAL_RANGE,
+                                  LearningCurve, StarshipCostModel,
+                                  starlink_v2_power_kw)
+
+
+class TestLearningCurve:
+    def setup_method(self):
+        self.lc = LearningCurve()
+
+    def test_20pct_learning_rate_exponent(self):
+        assert self.lc.exponent == pytest.approx(-0.3219, abs=1e-3)
+
+    def test_additional_mass_for_200_usd_kg(self):
+        """~370,000 t additional cumulative mass to reach $200/kg."""
+        assert self.lc.additional_mass_for_price(200.0) == \
+            pytest.approx(370e3, rel=0.05)
+
+    def test_1800_starship_launches(self):
+        assert self.lc.starship_launches_for_price(200.0) == \
+            pytest.approx(1800, rel=0.05)
+
+    def test_200_per_kg_by_2035(self):
+        """180 launches/yr from 2025 reaches $200/kg ~ 2035."""
+        year = self.lc.year_reached(200.0, launches_per_year=180.0)
+        assert 2033 <= year <= 2037
+
+    def test_300_per_kg_with_72pct_less_mass(self):
+        m200 = self.lc.additional_mass_for_price(200.0)
+        m300 = self.lc.additional_mass_for_price(300.0)
+        assert m300 == pytest.approx(104e3, rel=0.07)
+        assert 1 - m300 / m200 == pytest.approx(0.72, abs=0.03)
+
+    def test_price_monotone_decreasing(self):
+        assert self.lc.price(800) < self.lc.price(400) < self.lc.price(200)
+
+
+class TestStarshipCostModel:
+    def setup_method(self):
+        self.m = StarshipCostModel()
+
+    def test_no_reuse_460_per_kg(self):
+        assert self.m.cost_per_kg(1) == pytest.approx(460, rel=0.02)
+
+    def test_10x_reuse_60_per_kg(self):
+        assert self.m.cost_per_kg(10) == pytest.approx(60, rel=0.1)
+
+    def test_100x_reuse_under_20_per_kg(self):
+        assert self.m.cost_per_kg(100) < 20.0
+
+    def test_price_under_250_at_75pct_margin_10x_reuse(self):
+        assert self.m.price_per_kg(10, margin=0.75) < 250.0
+
+    def test_propellant_floor_8_per_kg(self):
+        assert self.m.propellant_floor_per_kg() == pytest.approx(8.0, rel=0.05)
+
+
+class TestPowerPrice:
+    def test_starlink_v2_power_28kw(self):
+        assert starlink_v2_power_kw() == pytest.approx(28.0, rel=0.03)
+
+    def test_table1_at_200_per_kg(self):
+        """$810 / $1,470 / $7,500 / $6,900 per kW/y (Table 1 rightmost col)."""
+        expected = {"Starlink v2 mini": 810, "Starlink v1": 1470,
+                    "OneWeb": 7500, "Iridium NEXT": 6900}
+        for sat in TABLE1_SATELLITES:
+            got = sat.launched_power_price(200.0)
+            assert got == pytest.approx(expected[sat.name], rel=0.03), sat.name
+
+    def test_table1_at_current_prices(self):
+        """$14,700 / $26,600 / $135,800 / $124,600 per kW/y at $3,600/kg."""
+        expected = {"Starlink v2 mini": 14700, "Starlink v1": 26600,
+                    "OneWeb": 135800, "Iridium NEXT": 124600}
+        for sat in TABLE1_SATELLITES:
+            got = sat.launched_power_price(CURRENT_LAUNCH_USD_PER_KG)
+            assert got == pytest.approx(expected[sat.name], rel=0.03), sat.name
+
+    def test_terrestrial_range_570_3000(self):
+        lo, hi = TERRESTRIAL_RANGE
+        assert lo == pytest.approx(570, rel=0.02)
+        assert hi == pytest.approx(3068, rel=0.02)
+
+    def test_space_comparable_to_terrestrial_at_200(self):
+        """§2.4: at $200/kg, launched power (~$810) sits inside the
+        terrestrial $570-3,000/kW/y band."""
+        sl2 = TABLE1_SATELLITES[0].launched_power_price(200.0)
+        lo, hi = TERRESTRIAL_RANGE
+        assert lo < sl2 < hi
+
+
+class TestSpaceCluster:
+    def test_summary_consistency(self):
+        from repro.core import SpaceCluster
+        c = SpaceCluster()
+        s = c.summary()
+        assert s["satellites"] == 81 and s["chips"] == 81 * 256
+        assert s["peak_bf16_pflops"] == pytest.approx(81 * 256 * 197e12 / 1e15)
+        assert s["pod_axis_GBps"] == pytest.approx(1200, rel=0.01)
+        assert s["sdc_events_per_chip_year"] == pytest.approx(8.8, abs=0.1)

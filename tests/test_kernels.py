@@ -1,0 +1,180 @@
+"""Pallas kernel validation: shape/dtype sweeps vs pure-jnp oracles
+(interpret=True executes the kernel bodies on CPU) + hypothesis properties."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.kernels.decode_attention import (decode_attention,
+                                            decode_attention_reference)
+from repro.kernels.flash_attention import attention_reference, flash_attention
+from repro.kernels.flash_attention.kernel import flash_attention_fwd
+from repro.kernels.rglru_scan import (rglru_scan, rglru_scan_associative,
+                                      rglru_scan_reference)
+
+TOL = {jnp.float32: 2e-5, jnp.bfloat16: 2e-2}
+
+
+def _tol(dt):
+    return TOL[dt]
+
+
+class TestFlashAttention:
+    @pytest.mark.parametrize("b,h,hkv,s,dh", [
+        (1, 4, 4, 256, 64),     # MHA
+        (2, 8, 2, 256, 128),    # GQA 4:1
+        (1, 4, 1, 512, 64),     # MQA
+        (1, 2, 2, 128, 256),    # wide head
+    ])
+    @pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+    @pytest.mark.parametrize("causal", [True, False])
+    def test_sweep_vs_oracle(self, b, h, hkv, s, dh, dtype, causal):
+        kq, kk, kv = jax.random.split(jax.random.PRNGKey(0), 3)
+        q = jax.random.normal(kq, (b, h, s, dh), dtype)
+        k = jax.random.normal(kk, (b, hkv, s, dh), dtype)
+        v = jax.random.normal(kv, (b, hkv, s, dh), dtype)
+        out = flash_attention_fwd(q, k, v, causal=causal, interpret=True)
+        ref = attention_reference(q, k, v, causal=causal)
+        np.testing.assert_allclose(
+            np.asarray(out, np.float32), np.asarray(ref, np.float32),
+            atol=_tol(dtype), rtol=_tol(dtype))
+
+    def test_unpadded_shapes_via_wrapper(self):
+        kq, kk = jax.random.split(jax.random.PRNGKey(1))
+        q = jax.random.normal(kq, (2, 200, 4, 64))
+        k = jax.random.normal(kk, (2, 200, 2, 64))
+        v = jax.random.normal(kk, (2, 200, 2, 64))
+        out = flash_attention(q, k, v, causal=True, interpret=True)
+        ref = attention_reference(
+            q.transpose(0, 2, 1, 3), k.transpose(0, 2, 1, 3),
+            v.transpose(0, 2, 1, 3), causal=True).transpose(0, 2, 1, 3)
+        np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                                   atol=2e-5, rtol=2e-5)
+
+    def test_gradients_flow(self):
+        """custom_vjp backward (remat'd oracle) produces oracle gradients."""
+        kq, kk = jax.random.split(jax.random.PRNGKey(2))
+        q = jax.random.normal(kq, (1, 4, 128, 64))
+        k = jax.random.normal(kk, (1, 2, 128, 64))
+        v = jax.random.normal(kk, (1, 2, 128, 64))
+        g1 = jax.grad(lambda q_: flash_attention(
+            q_, k, v, causal=True, layout="bhsd", interpret=True).sum())(q)
+        g2 = jax.grad(lambda q_: attention_reference(
+            q_, k, v, causal=True).astype(jnp.float32).sum())(q)
+        np.testing.assert_allclose(np.asarray(g1), np.asarray(g2),
+                                   atol=1e-4, rtol=1e-4)
+
+    @settings(max_examples=10, deadline=None)
+    @given(st.integers(1, 3), st.sampled_from([1, 2, 4]),
+           st.sampled_from([128, 256]), st.sampled_from([64, 128]))
+    def test_property_rows_sum_to_convex_combination(self, b, hkv, s, dh):
+        """Attention output rows lie in the convex hull of V rows: with
+        V = const c, output must equal c everywhere."""
+        h = hkv * 2
+        kq, kk = jax.random.split(jax.random.PRNGKey(b * 7 + s))
+        q = jax.random.normal(kq, (b, h, s, dh))
+        k = jax.random.normal(kk, (b, hkv, s, dh))
+        v = jnp.full((b, hkv, s, dh), 3.25)
+        out = flash_attention_fwd(q, k, v, causal=True, interpret=True)
+        np.testing.assert_allclose(np.asarray(out), 3.25, atol=1e-5)
+
+
+class TestDecodeAttention:
+    @pytest.mark.parametrize("b,h,hkv,m,dh", [
+        (2, 8, 8, 1024, 64),
+        (4, 8, 2, 2048, 128),
+        (1, 4, 1, 512, 64),
+    ])
+    @pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+    def test_sweep_vs_oracle(self, b, h, hkv, m, dh, dtype):
+        kq, kk, kv = jax.random.split(jax.random.PRNGKey(3), 3)
+        q = jax.random.normal(kq, (b, h, dh), dtype)
+        kc = jax.random.normal(kk, (b, hkv, m, dh), dtype)
+        vc = jax.random.normal(kv, (b, hkv, m, dh), dtype)
+        kv_len = m // 2 + 17
+        from repro.kernels.decode_attention.kernel import decode_attention_fwd
+        out = decode_attention_fwd(q, kc, vc, kv_len, interpret=True)
+        ref = decode_attention_reference(q, kc, vc, kv_len)
+        np.testing.assert_allclose(
+            np.asarray(out, np.float32), np.asarray(ref, np.float32),
+            atol=_tol(dtype), rtol=_tol(dtype))
+
+    def test_model_layout_wrapper(self):
+        kq, kk = jax.random.split(jax.random.PRNGKey(4))
+        q = jax.random.normal(kq, (2, 1, 8, 64))
+        kc = jax.random.normal(kk, (2, 777, 2, 64))     # unpadded M
+        vc = jax.random.normal(kk, (2, 777, 2, 64))
+        out = decode_attention(q, kc, vc, 400, interpret=True)
+        ref = decode_attention_reference(
+            q[:, 0], kc.transpose(0, 2, 1, 3), vc.transpose(0, 2, 1, 3), 400)
+        np.testing.assert_allclose(np.asarray(out[:, 0]), np.asarray(ref),
+                                   atol=2e-5, rtol=2e-5)
+
+    def test_kv_len_masking_exact(self):
+        """Entries beyond kv_len must not influence the output at all."""
+        kq, kk = jax.random.split(jax.random.PRNGKey(5))
+        q = jax.random.normal(kq, (1, 4, 64))
+        kc = jax.random.normal(kk, (1, 2, 512, 64))
+        vc = jax.random.normal(kk, (1, 2, 512, 64))
+        from repro.kernels.decode_attention.kernel import decode_attention_fwd
+        out1 = decode_attention_fwd(q, kc, vc, 100, interpret=True)
+        kc2 = kc.at[:, :, 100:].set(1e4)
+        vc2 = vc.at[:, :, 100:].set(-1e4)
+        out2 = decode_attention_fwd(q, kc2, vc2, 100, interpret=True)
+        np.testing.assert_array_equal(np.asarray(out1), np.asarray(out2))
+
+
+class TestRGLRUScan:
+    @pytest.mark.parametrize("b,s,d", [(2, 256, 128), (1, 512, 256),
+                                       (3, 128, 384)])
+    @pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+    def test_sweep_vs_oracle(self, b, s, d, dtype):
+        ka, kx = jax.random.split(jax.random.PRNGKey(6))
+        a = jax.random.uniform(ka, (b, s, d), dtype, 0.2, 0.999)
+        x = jax.random.normal(kx, (b, s, d), dtype)
+        out = rglru_scan(a, x, interpret=True)
+        ref = rglru_scan_reference(a, x)
+        np.testing.assert_allclose(
+            np.asarray(out, np.float32), np.asarray(ref, np.float32),
+            atol=_tol(dtype) * 5, rtol=_tol(dtype) * 5)
+
+    def test_unpadded_shapes(self):
+        ka, kx = jax.random.split(jax.random.PRNGKey(7))
+        a = jax.random.uniform(ka, (2, 100, 70), jnp.float32, 0.5, 0.99)
+        x = jax.random.normal(kx, (2, 100, 70))
+        out = rglru_scan(a, x, interpret=True)
+        ref = rglru_scan_reference(a, x)
+        np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                                   atol=1e-5, rtol=1e-5)
+
+    def test_associative_matches_sequential(self):
+        """The XLA associative-scan path is itself validated vs sequential."""
+        ka, kx = jax.random.split(jax.random.PRNGKey(8))
+        a = jax.random.uniform(ka, (2, 333, 64), jnp.float32, 0.1, 0.999)
+        x = jax.random.normal(kx, (2, 333, 64))
+        np.testing.assert_allclose(np.asarray(rglru_scan_associative(a, x)),
+                                   np.asarray(rglru_scan_reference(a, x)),
+                                   atol=1e-5, rtol=1e-5)
+
+    @settings(max_examples=10, deadline=None)
+    @given(st.integers(0, 1000))
+    def test_property_zero_a_is_identity(self, seed):
+        """a == 0 -> h == x (no history); a == 1 -> h == cumsum(x)."""
+        x = jax.random.normal(jax.random.PRNGKey(seed), (1, 128, 128))
+        h0 = rglru_scan(jnp.zeros_like(x), x, interpret=True)
+        np.testing.assert_allclose(np.asarray(h0), np.asarray(x), atol=1e-6)
+        h1 = rglru_scan(jnp.ones_like(x), x, interpret=True)
+        np.testing.assert_allclose(np.asarray(h1),
+                                   np.asarray(jnp.cumsum(x, axis=1)),
+                                   atol=1e-4, rtol=1e-4)
+
+    def test_gradients_flow(self):
+        ka, kx = jax.random.split(jax.random.PRNGKey(9))
+        a = jax.random.uniform(ka, (1, 128, 128), jnp.float32, 0.5, 0.99)
+        x = jax.random.normal(kx, (1, 128, 128))
+        g1 = jax.grad(lambda x_: rglru_scan(a, x_, interpret=True).sum())(x)
+        g2 = jax.grad(lambda x_: rglru_scan_associative(a, x_).sum())(x)
+        np.testing.assert_allclose(np.asarray(g1), np.asarray(g2),
+                                   atol=1e-5, rtol=1e-5)

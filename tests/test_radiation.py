@@ -1,0 +1,105 @@
+"""Radiation model + SDC injection tests (paper §2.3/§4.3)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core.radiation import (HBM_UECC_DOSE_PER_EVENT_RAD,
+                                  SDC_DOSE_PER_EVENT_RAD,
+                                  SEFI_DOSE_PER_EVENT_RAD, RadiationEnvironment,
+                                  SDCInjector, count_changed_elements,
+                                  cross_section_cm2, flip_bits, inject_tree)
+
+
+class TestSEUModel:
+    def setup_method(self):
+        self.env = RadiationEnvironment()
+
+    def test_sdc_cross_section_range(self):
+        """sigma ~ 6-9e-9 cm^2/chip for D = 14.4-20 rad/event."""
+        assert cross_section_cm2(20.0) == pytest.approx(6.35e-9, rel=0.05)
+        assert cross_section_cm2(14.4) == pytest.approx(8.8e-9, rel=0.05)
+
+    def test_hbm_uecc_cross_section(self):
+        assert cross_section_cm2(HBM_UECC_DOSE_PER_EVENT_RAD) == \
+            pytest.approx(3e-9, rel=0.05)
+
+    def test_sefi_cross_section(self):
+        assert cross_section_cm2(SEFI_DOSE_PER_EVENT_RAD) == \
+            pytest.approx(2.5e-11, rel=0.05)
+
+    def test_one_sdc_per_3M_inferences(self):
+        """§2.3 headline: ~1 SDC per 3 million inferences at 1 inf/s."""
+        assert self.env.inferences_per_sdc(1.0) == pytest.approx(3e6, rel=0.25)
+
+    def test_sdc_events_per_chip_year(self):
+        """150 rad/yr / 17 rad/event ~ 8.8 events/chip/year."""
+        assert self.env.sdc_events_per_chip_year() == pytest.approx(8.8, abs=0.1)
+
+    def test_tid_margin_2_7x(self):
+        """HBM irregularities at 2 krad vs 750 rad mission = ~2.7x margin."""
+        assert self.env.tid_margin() == pytest.approx(2.67, abs=0.05)
+
+    def test_expected_events_scale_linearly(self):
+        e1 = self.env.expected_events(256, 1.0)
+        e2 = self.env.expected_events(512, 2.0)
+        assert e2 == pytest.approx(4 * e1)
+
+    def test_checkpoint_interval_reasonable(self):
+        """Young/Daly interval for a 81-sat x 256-chip cluster."""
+        # HBM UECC dominates: lambda ~ 20736 chips * 1.1e-7/s -> T* ~ 160 s
+        t = self.env.optimal_checkpoint_interval_s(81 * 256, 30.0)
+        assert 60 < t < 3600
+
+
+class TestBitflipInjection:
+    def test_flip_changes_exactly_requested_bits(self):
+        x = jnp.zeros((64, 64), jnp.float32)
+        y = flip_bits(jax.random.PRNGKey(0), x, n_flips=3)
+        # NB: must compare bit patterns — XLA CPU flushes denormals in `!=`
+        changed = count_changed_elements(x, y)
+        assert 1 <= changed <= 3  # index collisions possible but rare
+
+    def test_flip_is_involution_with_same_key(self):
+        x = jax.random.normal(jax.random.PRNGKey(1), (128,), jnp.float32)
+        y = flip_bits(jax.random.PRNGKey(2), x, 1)
+        z = flip_bits(jax.random.PRNGKey(2), y, 1)
+        np.testing.assert_array_equal(np.asarray(x), np.asarray(z))
+
+    def test_bfloat16_supported(self):
+        x = jnp.ones((32, 8), jnp.bfloat16)
+        y = flip_bits(jax.random.PRNGKey(3), x, 2)
+        assert y.dtype == jnp.bfloat16
+        assert count_changed_elements(x, y) >= 1
+
+    def test_inject_tree_distributes_events(self):
+        tree = {"w": jnp.zeros((256, 256)), "b": jnp.zeros((4,))}
+        out = inject_tree(jax.random.PRNGKey(4), tree, 8)
+        flips = sum(count_changed_elements(a, b) for a, b in
+                    zip(jax.tree.leaves(tree), jax.tree.leaves(out)))
+        assert 1 <= flips <= 8
+
+    def test_injector_rate(self):
+        env = RadiationEnvironment()
+        inj = SDCInjector(env, n_chips=512, step_time_s=1.0, seed=0)
+        # 512 chips * 8.8/yr / 3.15e7 s ~ 1.4e-4 events/step
+        assert inj.expected_per_step() == pytest.approx(1.43e-4, rel=0.05)
+
+    def test_injector_forced_events(self):
+        env = RadiationEnvironment()
+        inj = SDCInjector(env, n_chips=1, step_time_s=1.0)
+        tree = {"w": jnp.zeros((64, 64))}
+        out, n = inj.maybe_inject(tree, forced_events=2)
+        assert n == 2 and count_changed_elements(tree["w"], out["w"]) >= 1
+
+    @settings(max_examples=20, deadline=None)
+    @given(st.integers(0, 2**31 - 1), st.integers(1, 4))
+    def test_flip_property_finite_shape_dtype_preserved(self, seed, n):
+        """Property: injection never changes shape/dtype and flips at most
+        n elements (it may make values inf/nan — that's the point)."""
+        x = jax.random.normal(jax.random.PRNGKey(seed), (33, 5), jnp.float32)
+        y = flip_bits(jax.random.PRNGKey(seed + 1), x, n)
+        assert y.shape == x.shape and y.dtype == x.dtype
+        assert count_changed_elements(x, y) <= n

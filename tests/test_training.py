@@ -1,0 +1,221 @@
+"""Training-substrate integration tests: loop, schedule, data determinism,
+checkpoint integrity, SDC detection/rollback, DiLoCo, compression."""
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.models import registry
+from repro.train import (AdamWConfig, DataConfig, DiLoCoConfig, FTConfig,
+                         FaultTolerantTrainer, SyntheticLM, TrainConfig,
+                         diloco_init, init_train_state, make_inner_steps,
+                         make_train_step, outer_step)
+from repro.train import checkpoint as ckpt
+from repro.train.diloco import isl_bytes_per_step
+from repro.train.schedule import warmup_cosine, wsd
+
+
+def _tiny_setup(seed=0, lr=3e-3):
+    cfg = registry.get_reduced_config("suncatcher-lm-100m")
+    fns = registry.model_fns(cfg)
+    tcfg = TrainConfig(adamw=AdamWConfig(lr=lr), warmup_steps=5,
+                       total_steps=200)
+    state = init_train_state(jax.random.PRNGKey(seed), cfg, fns)
+    data = SyntheticLM(DataConfig(vocab_size=cfg.vocab_size, seq_len=32,
+                                  global_batch=8, seed=seed))
+    step = jax.jit(make_train_step(cfg, fns, tcfg))
+    return cfg, fns, state, data, step
+
+
+class TestTrainLoop:
+    def test_loss_decreases(self):
+        _, _, state, data, step = _tiny_setup()
+        losses = []
+        for s in range(30):
+            state, m = step(state, data.batch_at(s))
+            losses.append(float(m["loss"]))
+        assert np.mean(losses[-5:]) < 0.7 * np.mean(losses[:5])
+
+    def test_microbatching_matches_full_batch_loss(self):
+        cfg = registry.get_reduced_config("suncatcher-lm-100m")
+        fns = registry.model_fns(cfg)
+        state = init_train_state(jax.random.PRNGKey(0), cfg, fns)
+        data = SyntheticLM(DataConfig(vocab_size=cfg.vocab_size, seq_len=32,
+                                      global_batch=8))
+        batch = data.batch_at(0)
+        t1 = TrainConfig(microbatches=1)
+        t4 = TrainConfig(microbatches=4)
+        _, m1 = make_train_step(cfg, fns, t1)(state, batch)
+        _, m4 = make_train_step(cfg, fns, t4)(state, batch)
+        assert float(m1["loss"]) == pytest.approx(float(m4["loss"]),
+                                                  rel=1e-4)
+
+    def test_schedules(self):
+        assert float(warmup_cosine(0, warmup=10, total=100)) == 0.0
+        assert float(warmup_cosine(10, warmup=10, total=100)) == \
+            pytest.approx(1.0, abs=0.01)
+        assert float(warmup_cosine(100, warmup=10, total=100)) == \
+            pytest.approx(0.1, abs=0.01)
+        assert float(wsd(50, warmup=10, total=100)) == 1.0
+        assert float(wsd(100, warmup=10, total=100)) == \
+            pytest.approx(0.01, abs=0.005)
+
+
+class TestData:
+    def test_deterministic_replay(self):
+        data = SyntheticLM(DataConfig(seed=7))
+        b1, b2 = data.batch_at(123), data.batch_at(123)
+        np.testing.assert_array_equal(np.asarray(b1["tokens"]),
+                                      np.asarray(b2["tokens"]))
+
+    def test_different_steps_differ(self):
+        data = SyntheticLM(DataConfig(seed=7))
+        assert not np.array_equal(np.asarray(data.batch_at(0)["tokens"]),
+                                  np.asarray(data.batch_at(1)["tokens"]))
+
+    def test_labels_are_shifted_tokens(self):
+        data = SyntheticLM(DataConfig())
+        b = data.batch_at(0)
+        np.testing.assert_array_equal(np.asarray(b["tokens"][:, 1:]),
+                                      np.asarray(b["labels"][:, :-1]))
+
+
+class TestCheckpoint:
+    def test_roundtrip(self, tmp_path):
+        _, _, state, _, _ = _tiny_setup()
+        ckpt.save(state, str(tmp_path), 7)
+        step, restored = ckpt.restore_into(state, str(tmp_path))
+        assert step == 7
+        for a, b in zip(jax.tree.leaves(state), jax.tree.leaves(restored)):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+    def test_corruption_detected_and_replica_used(self, tmp_path):
+        _, _, state, _, _ = _tiny_setup()
+        d1, d2 = str(tmp_path / "a"), str(tmp_path / "b")
+        ckpt.save_replicated(state, [d1, d2], 3)
+        # corrupt the newest replica's arrays in d1
+        path = os.path.join(d1, "step-00000003", "arrays.npz")
+        raw = bytearray(open(path, "rb").read())
+        raw[len(raw) // 2] ^= 0xFF
+        open(path, "wb").write(bytes(raw))
+        step, restored = ckpt.restore_latest(state, [d1, d2])
+        assert step == 3   # served from the intact replica
+        for a, b in zip(jax.tree.leaves(state), jax.tree.leaves(restored)):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+    def test_retention(self, tmp_path):
+        _, _, state, _, _ = _tiny_setup()
+        for s in range(5):
+            ckpt.save(state, str(tmp_path), s, keep=2)
+        names = sorted(os.listdir(tmp_path))
+        assert names == ["step-00000003", "step-00000004"]
+
+
+class TestFaultTolerance:
+    def test_sdc_detected_and_rolled_back(self, tmp_path):
+        from repro.core.radiation import RadiationEnvironment, SDCInjector
+        _, _, state, data, step = _tiny_setup()
+        ft = FTConfig(checkpoint_dirs=(str(tmp_path),), checkpoint_every=10,
+                      gnorm_threshold=8.0, loss_threshold=2.5)
+        inj = SDCInjector(RadiationEnvironment(), n_chips=1, step_time_s=1.0,
+                          rate_multiplier=0.0)
+        tr = FaultTolerantTrainer(step, state, data, ft, injector=inj)
+        # big burst of flips at step 25 -> must be caught, training continues
+        hist = tr.run(40, forced_sdc_at={25: 2048})
+        assert tr.stats["sdc_injected"] >= 2048
+        assert tr.stats["rollbacks"] >= 1
+        assert int(tr.state["step"]) == 40
+        losses = [h["loss"] for h in hist]
+        assert np.isfinite(losses).all()
+
+    def test_clean_run_no_rollbacks(self, tmp_path):
+        _, _, state, data, step = _tiny_setup()
+        ft = FTConfig(checkpoint_dirs=(str(tmp_path),), checkpoint_every=20)
+        tr = FaultTolerantTrainer(step, state, data, ft)
+        tr.run(25)
+        assert tr.stats["rollbacks"] == 0
+        assert tr.stats["checkpoints"] >= 2
+
+
+class TestDiLoCo:
+    def test_diloco_trains_and_matches_sync_ballpark(self):
+        cfg = registry.get_reduced_config("suncatcher-lm-100m")
+        fns = registry.model_fns(cfg)
+        tcfg = TrainConfig(adamw=AdamWConfig(lr=3e-3), warmup_steps=5,
+                           total_steps=200)
+        dcfg = DiLoCoConfig(n_pods=2, inner_steps=5)
+        data = SyntheticLM(DataConfig(vocab_size=cfg.vocab_size, seq_len=32,
+                                      global_batch=4))
+        params = fns.init(jax.random.PRNGKey(0), cfg)
+        d_state = diloco_init(params, dcfg)
+        inner = jax.jit(make_inner_steps(cfg, fns, tcfg, dcfg))
+
+        losses = []
+        s = 0
+        for outer in range(6):
+            batches = jax.tree.map(
+                lambda *xs: jnp.stack(xs),
+                *[jax.tree.map(lambda *h: jnp.stack(h),
+                               *[data.batch_at(s + p * 1000 + i)
+                                 for i in range(dcfg.inner_steps)])
+                  for p in range(dcfg.n_pods)])
+            d_state, loss = inner(d_state, batches)   # loss: (n_pods,)
+            d_state = outer_step(d_state, dcfg)
+            losses.append(float(jnp.mean(loss)))
+            s += dcfg.inner_steps
+        assert losses[-1] < 0.7 * losses[0]
+
+    def test_pod_dropout_masked_outer_step(self):
+        cfg = registry.get_reduced_config("suncatcher-lm-100m")
+        fns = registry.model_fns(cfg)
+        params = fns.init(jax.random.PRNGKey(0), cfg)
+        dcfg = DiLoCoConfig(n_pods=3, inner_steps=1)
+        d_state = diloco_init(params, dcfg)
+        # poison pod 2's params: with the mask, outer step must ignore them
+        poison = jax.tree.map(
+            lambda x: x.at[2].set(jnp.nan), d_state["pod_params"])
+        d_state = {**d_state, "pod_params": poison}
+        out = outer_step(d_state, dcfg, pod_mask=jnp.array([1.0, 1.0, 0.0]))
+        for leaf in jax.tree.leaves(out["global_params"]):
+            assert bool(jnp.all(jnp.isfinite(leaf.astype(jnp.float32))))
+
+    def test_isl_traffic_accounting(self):
+        acct = isl_bytes_per_step(int(1e9), inner_steps=50, compress="int8")
+        assert acct["reduction"] == pytest.approx(200.0)
+
+
+class TestCompression:
+    @settings(max_examples=15, deadline=None)
+    @given(st.integers(0, 1000))
+    def test_int8_roundtrip_error_bounded(self, seed):
+        from repro.distributed import int8_compress, int8_decompress
+        x = jax.random.normal(jax.random.PRNGKey(seed), (777,)) * 3.0
+        y = int8_decompress(int8_compress(x))
+        err = jnp.max(jnp.abs(x - y))
+        bound = jnp.max(jnp.abs(x)) / 127.0
+        assert float(err) <= float(bound) * 1.01
+
+    def test_topk_keeps_largest(self):
+        from repro.distributed import topk_compress, topk_decompress
+        x = jnp.array([0.1, -5.0, 0.2, 3.0, -0.05])
+        y = topk_decompress(topk_compress(x, frac=0.4))
+        np.testing.assert_allclose(np.asarray(y),
+                                   [0.0, -5.0, 0.0, 3.0, 0.0])
+
+    def test_error_feedback_is_unbiased_over_time(self):
+        from repro.distributed import ef_compress_tree, ef_init, decompress_tree
+        tree = {"w": jax.random.normal(jax.random.PRNGKey(0), (512,))}
+        ef = ef_init(tree)
+        sent_total = jnp.zeros((512,))
+        for i in range(30):
+            c, ef, nbytes = ef_compress_tree(tree, ef, method="topk",
+                                             frac=0.05)
+            sent_total = sent_total + decompress_tree(c, "topk")["w"]
+        # cumulative transmitted signal approaches 30 * x
+        ratio = float(jnp.linalg.norm(sent_total) /
+                      (30 * jnp.linalg.norm(tree["w"])))
+        assert ratio > 0.8
