@@ -5,10 +5,11 @@ roofline. Prints ``name,us_per_call,derived`` CSV (assignment format)."""
 def main() -> None:
     from benchmarks import (diloco_traffic, fig1_isl, fig2_constellation,
                             fig4_launch, j2_drift, radiation_table,
-                            roofline, table1_power, train_throughput)
+                            roofline, serve_throughput, table1_power,
+                            train_throughput)
     mods = [fig1_isl, fig2_constellation, j2_drift, radiation_table,
             fig4_launch, table1_power, diloco_traffic, roofline,
-            train_throughput]
+            train_throughput, serve_throughput]
     print("name,us_per_call,derived")
     for mod in mods:
         try:

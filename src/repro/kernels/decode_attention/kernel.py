@@ -1,16 +1,32 @@
 """Decode (single-token) attention kernel for TPU — the memory-bound server
 hot spot: one query row streams the whole KV cache from HBM exactly once.
 
+The kernel consumes the model's native cache layout (B, M, Hkv, dh), so the
+serving path never transposes or re-pads the cache on the hot loop — the
+cache is allocated block-aligned once at `init_cache` and handed straight to
+`pallas_call`. kv_lens is a per-row (B,) SMEM vector: each batch row masks
+only its own valid prefix, and `pl.when` skips whole cache blocks past a
+row's length — a slot that just prefilled 40 tokens does not stream the
+other rows' worst-case tail.
+
 Grid = (B, H, M/bk) with the cache axis innermost/sequential; online-softmax
 state (acc, m, l) lives in VMEM scratch across cache blocks. The q-head ->
 kv-head GQA fold happens in the k/v index_map (kv blocks fetched once per
-group). kv_len masks the unwritten cache tail (and is how ring buffers /
-partially-filled caches serve).
+group).
 
 Arithmetic intensity is O(1) FLOP/byte, so the roofline bound is
-HBM bandwidth: bytes ~ 2 * M * Hkv * dh * itemsize per (batch, kv-group).
-Block bk=512 rows of (dh=128) keeps ~0.5 MB/buffer for double-buffered
-streaming.
+HBM bandwidth: bytes ~ 2 * kv_len * Hkv * dh * itemsize per (batch,
+kv-group) — with ragged lengths the expected bytes follow the *mean* kv_len
+across slots, not the max. Block bk=512 rows of (dh=128) keeps ~0.5
+MB/buffer for double-buffered streaming.
+
+Hardware caveat: the (1, block_k, 1, dh) block puts the streamed M axis
+outside the minor-most two dims, so Mosaic must relayout the (1, dh) tiles
+when materializing the (bk, dh) operand — this container only executes
+interpret mode, and VMEM footprint / lowering of that squeeze needs
+validation on real TPU before trusting the 0.5 MB/buffer figure (the
+alternative is a (Hkv, M)-major cache layout, which would reintroduce the
+per-step transpose this kernel exists to avoid).
 """
 from __future__ import annotations
 
@@ -21,11 +37,14 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.kernels._compat import CompilerParams as _CompilerParams
+
 NEG_INF = -1e30
 
 
-def _decode_kernel(len_ref, q_ref, k_ref, v_ref, o_ref, acc_ref, m_ref,
+def _decode_kernel(lens_ref, q_ref, k_ref, v_ref, o_ref, acc_ref, m_ref,
                    l_ref, *, block_k: int, sm_scale: float):
+    bi = pl.program_id(0)
     ki = pl.program_id(2)
     nk = pl.num_programs(2)
 
@@ -35,13 +54,13 @@ def _decode_kernel(len_ref, q_ref, k_ref, v_ref, o_ref, acc_ref, m_ref,
         m_ref[...] = jnp.full_like(m_ref, NEG_INF)
         l_ref[...] = jnp.zeros_like(l_ref)
 
-    kv_len = len_ref[0]
+    kv_len = lens_ref[bi]                  # this row's valid cache prefix
     k_start = ki * block_k
 
-    @pl.when(k_start < kv_len)
+    @pl.when(k_start < kv_len)             # ragged early-exit per row
     def _compute():
         q = q_ref[0, 0].astype(jnp.float32) * sm_scale      # (1, dh)
-        k = k_ref[0, 0].astype(jnp.float32)                 # (bk, dh)
+        k = k_ref[0, :, 0].astype(jnp.float32)              # (bk, dh)
         s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
                                 preferred_element_type=jnp.float32)  # (1,bk)
         kpos = k_start + jax.lax.broadcasted_iota(jnp.int32, (1, block_k), 1)
@@ -51,7 +70,7 @@ def _decode_kernel(len_ref, q_ref, k_ref, v_ref, o_ref, acc_ref, m_ref,
         p = jnp.exp(s - m_new[:, None])
         alpha = jnp.exp(m_prev - m_new)
         l_ref[...] = l_ref[...] * alpha + jnp.sum(p, axis=1)
-        v = v_ref[0, 0].astype(jnp.float32)
+        v = v_ref[0, :, 0].astype(jnp.float32)
         acc_ref[...] = acc_ref[...] * alpha[:, None] + jax.lax.dot_general(
             p, v, (((1,), (0,)), ((), ())),
             preferred_element_type=jnp.float32)
@@ -59,22 +78,24 @@ def _decode_kernel(len_ref, q_ref, k_ref, v_ref, o_ref, acc_ref, m_ref,
 
     @pl.when(ki == nk - 1)
     def _finalize():
-        o_ref[0, 0] = (acc_ref[...] /
-                       jnp.maximum(l_ref[...], 1e-30)[:, None]
-                       ).astype(o_ref.dtype)
+        # kv_len == 0 rows never ran _compute: emit exact zeros, not 0/eps
+        out = acc_ref[...] / jnp.maximum(l_ref[...], 1e-30)[:, None]
+        o_ref[0, 0] = jnp.where(kv_len > 0, out, 0.0).astype(o_ref.dtype)
 
 
 @functools.partial(jax.jit,
                    static_argnames=("block_k", "interpret"))
-def decode_attention_fwd(q, k_cache, v_cache, kv_len, *, block_k: int = 512,
+def decode_attention_fwd(q, k_cache, v_cache, kv_lens, *, block_k: int = 512,
                          interpret: bool = False):
-    """q: (B, H, dh); k/v_cache: (B, Hkv, M, dh); kv_len: scalar int32."""
+    """q: (B, H, dh); k/v_cache: (B, M, Hkv, dh) (model layout);
+    kv_lens: (B,) int32 valid lengths (a scalar broadcasts to all rows)."""
     b, h, dh = q.shape
-    hkv, m = k_cache.shape[1], k_cache.shape[2]
+    m, hkv = k_cache.shape[1], k_cache.shape[2]
     assert h % hkv == 0 and m % block_k == 0
     group = h // hkv
     q4 = q.reshape(b, h, 1, dh)
-    kv_len = jnp.asarray(kv_len, jnp.int32).reshape(1)
+    kv_lens = jnp.broadcast_to(
+        jnp.asarray(kv_lens, jnp.int32).reshape(-1), (b,))
 
     grid = (b, h, m // block_k)
     kernel = functools.partial(_decode_kernel, block_k=block_k,
@@ -85,10 +106,10 @@ def decode_attention_fwd(q, k_cache, v_cache, kv_len, *, block_k: int = 512,
         in_specs=[
             pl.BlockSpec(memory_space=pltpu.SMEM),
             pl.BlockSpec((1, 1, 1, dh), lambda bi, hi, ki: (bi, hi, 0, 0)),
-            pl.BlockSpec((1, 1, block_k, dh),
-                         lambda bi, hi, ki: (bi, hi // group, ki, 0)),
-            pl.BlockSpec((1, 1, block_k, dh),
-                         lambda bi, hi, ki: (bi, hi // group, ki, 0)),
+            pl.BlockSpec((1, block_k, 1, dh),
+                         lambda bi, hi, ki: (bi, ki, hi // group, 0)),
+            pl.BlockSpec((1, block_k, 1, dh),
+                         lambda bi, hi, ki: (bi, ki, hi // group, 0)),
         ],
         out_specs=pl.BlockSpec((1, 1, 1, dh),
                                lambda bi, hi, ki: (bi, hi, 0, 0)),
@@ -98,8 +119,8 @@ def decode_attention_fwd(q, k_cache, v_cache, kv_len, *, block_k: int = 512,
             pltpu.VMEM((1,), jnp.float32),
             pltpu.VMEM((1,), jnp.float32),
         ],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=_CompilerParams(
             dimension_semantics=("parallel", "parallel", "arbitrary")),
         interpret=interpret,
-    )(kv_len, q4, k_cache, v_cache)
+    )(kv_lens, q4, k_cache, v_cache)
     return out.reshape(b, h, dh)

@@ -1,4 +1,11 @@
-"""Jitted wrapper: model-layout KV cache (B, M, Hkv, dh) -> kernel layout."""
+"""Jitted wrapper around the decode kernel.
+
+The kernel consumes the model's (B, M, Hkv, dh) cache layout directly, so
+the serving hot loop does zero data movement here: `init_cache` allocates
+the cache block-aligned once, and this wrapper only picks a block size and
+normalizes kv_len to a per-row (B,) vector. Padding happens only as a
+fallback for ad-hoc (non-block-multiple) cache lengths.
+"""
 from __future__ import annotations
 
 import functools
@@ -12,18 +19,22 @@ from .kernel import decode_attention_fwd
 @functools.partial(jax.jit, static_argnames=("block_k", "interpret"))
 def decode_attention(q, k_cache, v_cache, kv_len, *, block_k: int = 512,
                      interpret: bool = False):
-    """q: (B, 1, H, dh) or (B, H, dh); caches: (B, M, Hkv, dh)."""
+    """q: (B, 1, H, dh) or (B, H, dh); caches: (B, M, Hkv, dh) model layout.
+    kv_len: scalar or (B,) valid lengths (ragged per-slot serving)."""
     squeeze = q.ndim == 4
     if squeeze:
         q = q[:, 0]
     m = k_cache.shape[1]
+    # largest block <= block_k that divides M, down to the 128 granularity
+    # init_cache aligns to — any init_cache-allocated cache takes this exit
+    # and moves zero bytes here
     bk = min(block_k, m)
+    while bk > 128 and m % bk:
+        bk //= 2
     pad = (-m) % bk
-    kc = k_cache.transpose(0, 2, 1, 3)
-    vc = v_cache.transpose(0, 2, 1, 3)
-    if pad:
-        kc = jnp.pad(kc, ((0, 0), (0, 0), (0, pad), (0, 0)))
-        vc = jnp.pad(vc, ((0, 0), (0, 0), (0, pad), (0, 0)))
-    out = decode_attention_fwd(q, kc, vc, kv_len, block_k=bk,
+    if pad:  # fallback only: ad-hoc caches not aligned at allocation
+        k_cache = jnp.pad(k_cache, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v_cache = jnp.pad(v_cache, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    out = decode_attention_fwd(q, k_cache, v_cache, kv_len, block_k=bk,
                                interpret=interpret)
     return out[:, None] if squeeze else out

@@ -6,12 +6,17 @@ import jax.numpy as jnp
 
 
 def decode_attention_reference(q, k_cache, v_cache, kv_len):
-    """q: (B, H, dh); k/v_cache: (B, Hkv, M, dh); kv_len: () or (B,).
+    """q: (B, H, dh); k/v_cache: (B, M, Hkv, dh) (model layout);
+    kv_len: () or (B,).
 
-    Attends q over the first kv_len cache entries. Returns (B, H, dh).
+    Attends q over the first kv_len cache entries of each row; rows with
+    kv_len == 0 return exact zeros (matching the kernel's ragged early-exit).
+    Returns (B, H, dh).
     """
     b, h, dh = q.shape
-    hkv, m = k_cache.shape[1], k_cache.shape[2]
+    m, hkv = k_cache.shape[1], k_cache.shape[2]
+    k_cache = k_cache.transpose(0, 2, 1, 3)    # -> (B, Hkv, M, dh)
+    v_cache = v_cache.transpose(0, 2, 1, 3)
     if hkv != h:
         rep = h // hkv
         k_cache = jnp.repeat(k_cache, rep, axis=1)
@@ -23,5 +28,6 @@ def decode_attention_reference(q, k_cache, v_cache, kv_len):
                              else kv_len)
     s = jnp.where(jnp.broadcast_to(valid, s.shape), s, -1e30)
     p = jax.nn.softmax(s, axis=-1)
-    return jnp.einsum("bhk,bhkd->bhd", p,
-                      v_cache.astype(jnp.float32)).astype(q.dtype)
+    out = jnp.einsum("bhk,bhkd->bhd", p, v_cache.astype(jnp.float32))
+    nonempty = kv_len[..., None, None] > 0 if kv_len.ndim else kv_len > 0
+    return jnp.where(nonempty, out, 0.0).astype(q.dtype)

@@ -20,6 +20,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.kernels._compat import CompilerParams as _CompilerParams
+
 
 def _rglru_kernel(a_ref, x_ref, o_ref, h_ref, *, block_s: int):
     si = pl.program_id(2)
@@ -60,7 +62,7 @@ def rglru_scan_fwd(a, x, *, block_s: int = 256, block_d: int = 128,
                                lambda bi, di, si: (bi, si, di)),
         out_shape=jax.ShapeDtypeStruct((b, s, d), x.dtype),
         scratch_shapes=[pltpu.VMEM((1, block_d), jnp.float32)],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=_CompilerParams(
             dimension_semantics=("parallel", "parallel", "arbitrary")),
         interpret=interpret,
     )(a, x)

@@ -1,9 +1,10 @@
-"""Serving launcher: --arch <id>, batched continuous-batching engine.
+"""Serving launcher: --arch <id>, device-resident continuous batching.
 
-  PYTHONPATH=src python -m repro.launch.serve --arch recurrentgemma-2b \
-      --requests 8
+  PYTHONPATH=src python -m repro.launch.serve --arch suncatcher-lm-100m \
+      --requests 8 --decode-block 8
 """
 import argparse
+import time
 
 import jax
 import numpy as np
@@ -19,6 +20,10 @@ def main():
     ap.add_argument("--requests", type=int, default=8)
     ap.add_argument("--max-new-tokens", type=int, default=16)
     ap.add_argument("--slots", type=int, default=4)
+    ap.add_argument("--max-len", type=int, default=128)
+    ap.add_argument("--decode-block", type=int, default=8,
+                    help="tokens decoded per host round-trip")
+    ap.add_argument("--temperature", type=float, default=0.0)
     ap.add_argument("--full", action="store_true")
     args = ap.parse_args()
 
@@ -29,7 +34,9 @@ def main():
     fns = registry.model_fns(cfg)
     params = fns.init(jax.random.PRNGKey(0), cfg)
     eng = ServingEngine(cfg, fns, params,
-                        EngineConfig(max_batch=args.slots, max_len=128))
+                        EngineConfig(max_batch=args.slots,
+                                     max_len=args.max_len,
+                                     decode_block=args.decode_block))
     rng = np.random.default_rng(0)
     for uid in range(args.requests):
         eng.submit(Request(uid=uid,
@@ -37,12 +44,20 @@ def main():
                                0, cfg.vocab_size,
                                size=int(rng.integers(4, 16))).astype(
                                    np.int32),
-                           max_new_tokens=args.max_new_tokens))
+                           max_new_tokens=args.max_new_tokens,
+                           temperature=args.temperature))
+    t0 = time.time()
     done = eng.run()
+    dt = time.time() - t0
     for r in sorted(done, key=lambda r: r.uid):
         print(f"req {r.uid}: {len(r.prompt)} prompt toks -> "
               f"{len(r.generated)} generated")
-    print(f"{cfg.name}: served {len(done)} requests on {args.slots} slots")
+    s = eng.stats
+    print(f"{cfg.name}: served {len(done)} requests on {args.slots} slots | "
+          f"{s['tokens'] / dt:.0f} tok/s | "
+          f"{s['host_syncs'] / max(s['tokens'], 1):.3f} host-syncs/token | "
+          f"{eng.trace_count()} traces "
+          f"(buckets={eng.buckets()}, decode_block={args.decode_block})")
 
 
 if __name__ == "__main__":

@@ -9,6 +9,7 @@ implementations selected by config:
 """
 from __future__ import annotations
 
+import os
 from functools import partial
 
 import jax
@@ -87,13 +88,34 @@ def repeat_kv(k, n_rep: int):
                             (b, s, h, n_rep, d)).reshape(b, s, h * n_rep, d)
 
 
+def _qpos(q_offset, sq):
+    """Absolute query positions: (B, Sq) for a (B,) per-row offset vector,
+    (Sq,) for a scalar offset."""
+    if jnp.ndim(q_offset) == 1:
+        return q_offset[:, None] + jnp.arange(sq)[None]
+    return jnp.arange(sq) + q_offset
+
+
+def _qk_mask(qpos, kpos, causal, window):
+    """Causal + local-window visibility mask of shape qpos.shape + kpos.shape
+    (shared by the ref and chunked attention paths)."""
+    mask = jnp.ones(qpos.shape + kpos.shape, bool)
+    if causal:
+        mask &= kpos <= qpos[..., None]
+    if window is not None:
+        mask &= kpos > qpos[..., None] - window
+    return mask
+
+
 def attention_ref(q, k, v, *, causal: bool = True, window: int | None = None,
-                  q_offset: int = 0, kv_len: jnp.ndarray | None = None):
+                  q_offset=0, kv_len: jnp.ndarray | None = None):
     """Reference attention. q: (B, Sq, H, Dh), k/v: (B, Skv, Hkv, Dh).
 
-    `q_offset`: absolute position of q[0] (decode). `window`: local attention
-    span (attend to keys within `window` positions). `kv_len`: valid KV length
-    for decode-time masking.
+    `q_offset`: absolute position of q[0] — a scalar (decode/chunked
+    prefill) or a (B,) vector of per-row offsets (ragged bucketed prefill).
+    `window`: local attention span (attend to keys within `window`
+    positions). `kv_len`: valid KV length for decode-time masking, scalar
+    or (B,).
     """
     b, sq, h, dh = q.shape
     skv, hkv = k.shape[1], k.shape[2]
@@ -107,14 +129,10 @@ def attention_ref(q, k, v, *, causal: bool = True, window: int | None = None,
     # f32 convert out of the decode layer loop)
     scores = jnp.einsum("bqhgd,bkhd->bhgqk", qg, k,
                         preferred_element_type=jnp.float32)
-    qpos = jnp.arange(sq) + q_offset
     kpos = jnp.arange(skv)
-    mask = jnp.ones((sq, skv), bool)
-    if causal:
-        mask &= kpos[None, :] <= qpos[:, None]
-    if window is not None:
-        mask &= kpos[None, :] > qpos[:, None] - window
-    mask = mask[None, None, None]                 # (1, 1, 1, sq, skv)
+    mask = _qk_mask(_qpos(q_offset, sq), kpos, causal, window)
+    # lift to (B|1, 1, 1, sq, skv) for the (b, hkv, g, sq, skv) scores
+    mask = mask[:, None, None] if mask.ndim == 3 else mask[None, None, None]
     if kv_len is not None:
         kv_len = jnp.asarray(kv_len)
         if kv_len.ndim == 1:                      # per-batch valid length
@@ -129,7 +147,7 @@ def attention_ref(q, k, v, *, causal: bool = True, window: int | None = None,
 
 
 def attention_chunked(q, k, v, *, causal: bool = True,
-                      window: int | None = None, q_offset: int = 0,
+                      window: int | None = None, q_offset=0,
                       kv_len: jnp.ndarray | None = None,
                       kv_block: int = 512):
     """Online-softmax attention: lax.scan over KV blocks (flash recurrence).
@@ -148,7 +166,10 @@ def attention_chunked(q, k, v, *, causal: bool = True,
     vb = v.reshape(b, nblk, kv_block, h, dh).transpose(1, 0, 2, 3, 4)
     scale = dh ** -0.5
     qf = q.astype(jnp.float32) * scale
-    qpos = jnp.arange(sq) + q_offset
+    qpos = _qpos(q_offset, sq)
+    ragged = kv_len is not None and jnp.ndim(kv_len) == 1
+    if ragged and qpos.ndim == 1:
+        qpos = jnp.broadcast_to(qpos, (b, sq))  # per-row mask for (B,) kv_len
 
     @partial(jax.checkpoint,
              policy=jax.checkpoint_policies.nothing_saveable)
@@ -157,15 +178,14 @@ def attention_chunked(q, k, v, *, causal: bool = True,
         kc, vc = blk
         s = jnp.einsum("bqhd,bkhd->bhqk", qf, kc.astype(jnp.float32))
         kpos = i * kv_block + jnp.arange(kv_block)
-        mask = jnp.ones((sq, kv_block), bool)
-        if causal:
-            mask &= kpos[None, :] <= qpos[:, None]
-        if window is not None:
-            mask &= kpos[None, :] > qpos[:, None] - window
+        mask = _qk_mask(qpos, kpos, causal, window)
         if kv_len is not None:
-            mask &= kpos[None, :] < kv_len
-        mask &= (kpos < skv)[None, :]
-        s = jnp.where(mask[None, None], s, -1e30)
+            kvl = jnp.asarray(kv_len)
+            mask &= kpos < (kvl[:, None, None] if kvl.ndim == 1 else kvl)
+        mask &= kpos < skv
+        # lift (B|·, sq, bk) to broadcast over the (b, h, sq, bk) scores
+        mask_b = mask[:, None] if mask.ndim == 3 else mask[None, None]
+        s = jnp.where(mask_b, s, -1e30)
         m_new = jnp.maximum(m, jnp.max(s, axis=-1))
         p = jnp.exp(s - m_new[..., None])
         alpha = jnp.exp(m - m_new)
@@ -185,17 +205,33 @@ def attention_chunked(q, k, v, *, causal: bool = True,
 
 def attention(q, k, v, *, impl: str = "ref", **kw):
     if q.shape[1] == 1:
-        # decode: one query row — grouped-GQA ref path (scores are (B,Hkv,
-        # G,1,M), tiny) and, crucially, no repeat_kv materialization that
-        # would reshard an M-sharded cache to head sharding per step
+        # decode: one query row. impl == "pallas" on TPU streams the cache
+        # through the ragged decode kernel (per-row kv_len, model layout —
+        # no transpose/pad on the hot path). Otherwise the grouped-GQA ref
+        # path (scores are (B,Hkv,G,1,M), tiny) and, crucially, no repeat_kv
+        # materialization that would reshard an M-sharded cache to head
+        # sharding per step.
         kw.pop("kv_block", None)
+        if impl == "pallas" and kw.get("window") is None \
+                and kw.get("kv_len") is not None:
+            # REPRO_DECODE_ATTN=interpret forces the kernel path (interpret
+            # mode) so CPU tests can cover the serving->kernel dispatch
+            mode = os.environ.get("REPRO_DECODE_ATTN", "auto")
+            if mode == "interpret" or (mode == "auto"
+                                       and jax.default_backend() == "tpu"):
+                from repro.kernels.decode_attention.ops import \
+                    decode_attention
+                return decode_attention(q, k, v, kw["kv_len"],
+                                        interpret=mode == "interpret")
         return attention_ref(q, k, v, **kw)
     if impl == "chunked":
         return attention_chunked(q, k, v, **kw)
     if impl == "pallas":
         from repro.kernels.flash_attention.ops import flash_attention
+        qo = kw.get("q_offset", 0)
         if kw.get("window") is None and kw.get("kv_len") is None \
-                and kw.get("q_offset", 0) == 0 and q.shape[1] == k.shape[1]:
+                and jnp.ndim(qo) == 0 and not isinstance(qo, jax.Array) \
+                and qo == 0 and q.shape[1] == k.shape[1]:
             return flash_attention(q, k, v, causal=kw.get("causal", True))
         kw.pop("impl", None)
         return attention_ref(q, k, v, **kw)  # fallback outside kernel domain

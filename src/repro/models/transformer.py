@@ -23,8 +23,9 @@ import jax.numpy as jnp
 
 from repro.distributed.hints import mesh_axis_size, shard_hint
 
-from .layers import (apply_rope, attention, gelu_mlp, geglu, layer_norm,
-                     mrope_cos_sin, rms_norm, rope_cos_sin, swiglu)
+from .layers import (_qpos, apply_rope, attention, gelu_mlp, geglu,
+                     layer_norm, mrope_cos_sin, rms_norm, rope_cos_sin,
+                     swiglu)
 from .losses import chunked_lm_loss, softmax_xent
 from .moe import init_moe_params, moe_ffn
 
@@ -255,10 +256,18 @@ def _block(cfg: TransformerConfig, x, lp, cos, sin, *, q_offset=0,
         k, v, new_cache = ck, cv, (ck, cv)
 
     if jnp.ndim(q_offset) == 1:
-        # decode with ragged per-slot positions: kv_len mask is the causal
-        # constraint (s == 1), so drop the scalar causal triangle
-        attn = attention(q, k, v, impl="ref", causal=False,
-                         window=cfg.window, kv_len=kv_len)
+        # ragged per-slot positions (continuous batching). s == 1 decode:
+        # kv_len mask IS the causal constraint, so drop the triangle (and
+        # let impl="pallas" stream the cache through the ragged decode
+        # kernel). s > 1 bucketed prefill: causal with per-row offsets —
+        # pad queries past a row's prompt attend only valid keys and their
+        # outputs/cache tail are masked downstream by kv_len.
+        # q_offset stays the per-row position vector even at s == 1: the
+        # causal triangle is vacuous there but the local-attention window
+        # mask still needs each query's absolute position
+        attn = attention(q, k, v, impl=cfg.attn_impl, causal=s > 1,
+                         window=cfg.window, kv_len=kv_len,
+                         q_offset=q_offset)
     else:
         attn = attention(q, k, v, impl=cfg.attn_impl, causal=True,
                          window=cfg.window, q_offset=q_offset, kv_len=kv_len)
@@ -387,34 +396,43 @@ def loss_fn(params, batch, cfg: TransformerConfig):
 # serving: prefill + decode with KV cache
 # --------------------------------------------------------------------------
 def init_cache(cfg: TransformerConfig, batch: int, max_len: int,
-               dtype=None):
+               dtype=None, pad_to: int = 128):
+    """KV cache in model layout (L, B, M, Hkv, dh). M is rounded up to a
+    multiple of `pad_to` HERE, once, so the decode-attention kernel (block-
+    strided over M) never pads or transposes the cache on the hot path;
+    positions >= kv_len are masked everywhere downstream."""
     dtype = dtype or cfg.cdtype
-    shape = (cfg.n_layers, batch, max_len, cfg.n_kv_heads, cfg.hd)
+    m = -(-max_len // pad_to) * pad_to
+    shape = (cfg.n_layers, batch, m, cfg.n_kv_heads, cfg.hd)
     return {"k": jnp.zeros(shape, dtype), "v": jnp.zeros(shape, dtype),
             "pos": jnp.zeros((), jnp.int32)}
 
 
 def decode_step(params, cache, tokens, cfg: TransformerConfig,
-                positions=None):
+                positions=None, last_idx=None):
     """One decode step: tokens (B, S_new) (S_new=1 for pure decode, >1 for
-    prefill). Returns (logits_last (B, [n_q,] V), new_cache)."""
+    prefill). Returns (logits_last (B, [n_q,] V), new_cache).
+
+    `last_idx`: optional (B,) per-row index of the position whose logits to
+    return (ragged bucketed prefill: rows padded to a shared bucket length
+    read their logits at prompt_len - 1, not at the pad tail)."""
     x = _embed(cfg, params, tokens)
     b, s = x.shape[0], x.shape[1]
     pos0 = cache["pos"]
     if cfg.pos_embed == "sinusoidal":
         # decode offset via dynamic slice of a (max) table is avoided by
-        # computing the angles directly at pos0 + arange(s)
+        # computing the angles directly at pos0 + arange(s); pos0 may be a
+        # scalar or a (B,) per-slot vector (continuous batching)
         d = cfg.d_model
-        p = (pos0 + jnp.arange(s))[:, None].astype(jnp.float32)
-        dim = jnp.arange(0, d, 2)[None].astype(jnp.float32)
-        ang = p / (10000.0 ** (dim / d))
+        p = _qpos(pos0, s).astype(jnp.float32)
+        if p.ndim == 1:
+            p = p[None]                                 # (B|1, s)
+        dim = jnp.arange(0, d, 2).astype(jnp.float32)
+        ang = p[..., None] / (10000.0 ** (dim / d))     # (B|1, s, d/2)
         x = x + jnp.concatenate([jnp.sin(ang), jnp.cos(ang)],
-                                -1).astype(x.dtype)[None]
+                                -1).astype(x.dtype)
     if positions is None:
-        if jnp.ndim(pos0) == 1:       # per-slot decode positions
-            pos_ids = pos0[:, None] + jnp.arange(s)[None]
-        else:
-            pos_ids = pos0 + jnp.arange(s)
+        pos_ids = _qpos(pos0, s)      # per-slot vector or scalar offset
         if cfg.mrope_sections is not None:
             p = jnp.broadcast_to(pos_ids, (b, s))
             positions = jnp.stack([p, p, p])
@@ -433,6 +451,13 @@ def decode_step(params, cache, tokens, cfg: TransformerConfig,
                                (params["layers"], cache["k"], cache["v"]))
     x = _norm(cfg, x, params["final_norm"].astype(cfg.cdtype),
               params.get("final_norm_bias"))
+    if last_idx is not None:
+        assert cfg.n_codebooks == 1, "last_idx requires a single codebook"
+        # gather each row's last real position BEFORE the unembed so the
+        # (B, S, V) prefill logits are never materialized
+        x = jnp.take_along_axis(x, last_idx[:, None, None], axis=1)
+        return _unembed(cfg, params, x)[:, -1], \
+            {"k": nk, "v": nv, "pos": pos0 + s}
     logits = _unembed(cfg, params, x[:, -1:] if cfg.n_codebooks == 1
                       else x)
     if cfg.n_codebooks > 1:

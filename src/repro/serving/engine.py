@@ -1,16 +1,32 @@
-"""Batched serving engine with continuous batching (slot-based).
+"""Device-resident continuous-batching serving engine.
 
-A fixed pool of `max_batch` decode slots shares one batched KV cache.
-Incoming requests prefill into a free slot (b=1 prefill jit); all occupied
-slots decode in lock-step (one batched decode jit); finished sequences free
-their slot immediately for the next queued request — the standard
-continuous-batching serving loop, sized for the assignment's decode shapes.
+A fixed pool of `max_batch` decode slots shares one batched, block-aligned
+KV cache. The decode hot path is a single fused jit (`engine_step`) that
+runs admit-free decode->sample->bookkeeping for up to `decode_block` tokens
+per host round-trip: per-slot state (last token, remaining budget, active /
+eos / temperature, per-request PRNG streams) lives on device, sub-steps are
+a `lax.scan`, finished rows are masked out (early-exit) inside the scan,
+and the host drains one `(B, N)` token block + emit/done masks in a single
+transfer. Host syncs per token drop from O(max_batch) to 1/N.
 
-Per-slot positions ride a (B,) pos vector through the model's ragged-decode
-path. Sampling: greedy or temperature top-k, deterministic under seed.
+Prefill is power-of-two length-bucketed and full-batch: prompts are padded
+to their bucket, always traced at the engine's (max_batch, bucket) shape
+with an admit mask, and the per-row first token is sampled on device — a
+mixed-length workload compiles at most len(buckets) prefill traces plus one
+decode trace, instead of one trace per distinct prompt length.
+
+Determinism: each request owns a PRNG stream (fold_in(base, submit_seq))
+that advances once per decode sub-step and is sampled per-row (vmap'd
+categorical), so outputs are bit-identical across decode_block settings,
+slot placements, and co-batched traffic.
+
+The engine requires a model exposing a (k, v, pos) KV cache in the
+(L, B, M, Hkv, dh) layout (the transformer family) plus a `decode_step`
+accepting per-row positions and `last_idx` — see models/transformer.py.
 """
 from __future__ import annotations
 
+from collections import defaultdict
 from dataclasses import dataclass, field
 from typing import Optional
 
@@ -29,6 +45,8 @@ class Request:
     # outputs
     generated: list = field(default_factory=list)
     done: bool = False
+    # engine-internal: submission order, keys the request's PRNG stream
+    _seq: int = -1
 
 
 @dataclass(frozen=True)
@@ -37,6 +55,16 @@ class EngineConfig:
     max_len: int = 512
     top_k: int = 50
     seed: int = 0
+    decode_block: int = 8           # tokens decoded per host round-trip
+    min_bucket: int = 16            # smallest prefill bucket (pow2)
+
+    def __post_init__(self):
+        if self.decode_block < 1:
+            raise ValueError(f"decode_block must be >= 1, "
+                             f"got {self.decode_block}")
+        if self.min_bucket < 1:
+            raise ValueError(f"min_bucket must be >= 1, "
+                             f"got {self.min_bucket}")
 
 
 class ServingEngine:
@@ -46,101 +74,246 @@ class ServingEngine:
         self.params = params
         self.ecfg = ecfg
         self.cache = fns.init_cache(cfg, ecfg.max_batch, ecfg.max_len)
-        # engine-owned per-slot state (model cache "pos" becomes a vector)
+        if "k" not in self.cache:
+            raise ValueError(
+                "ServingEngine requires a KV-cache (transformer-family) "
+                f"model; {cfg.name} exposes {sorted(self.cache)}")
         self.cache["pos"] = jnp.zeros((ecfg.max_batch,), jnp.int32)
-        self.slots: list[Optional[Request]] = [None] * ecfg.max_batch
-        self.key = jax.random.PRNGKey(ecfg.seed)
+        b = ecfg.max_batch
+        self.state = {
+            "last": jnp.zeros((b,), jnp.int32),
+            "active": jnp.zeros((b,), bool),
+            "remaining": jnp.zeros((b,), jnp.int32),
+            "temp": jnp.zeros((b,), jnp.float32),
+            "eos": jnp.full((b,), -1, jnp.int32),
+            "rkey": jnp.zeros((b, 2), jnp.uint32),
+        }
+        self._base_key = jax.random.PRNGKey(ecfg.seed)
+        self._next_seq = 0
+        self.slots: list[Optional[Request]] = [None] * b
         self.queue: list[Request] = []
         self.finished: list[Request] = []
+        self.stats = {"tokens": 0, "host_syncs": 0, "decode_blocks": 0}
 
         self._prefill = jax.jit(self._prefill_impl)
-        self._decode = jax.jit(self._decode_impl)
+        self._engine_step = jax.jit(self._engine_step_impl)
 
-    # --- jitted kernels ------------------------------------------------------
-    def _prefill_impl(self, cache, slot_caches, tokens):
-        """b=1 prefill producing (logits, per-slot cache update)."""
-        one = {"k": slot_caches["k"], "v": slot_caches["v"],
-               "pos": jnp.zeros((), jnp.int32)}
-        logits, new = self.fns.decode_step(self.params, one, tokens,
-                                           self.model_cfg)
-        return logits, new
+    # --- bucketing ---------------------------------------------------------
+    def buckets(self) -> list[int]:
+        """Power-of-two prefill bucket lengths up to max_len."""
+        out, b = [], self.ecfg.min_bucket
+        while b < self.ecfg.max_len:
+            out.append(b)
+            b *= 2
+        out.append(self.ecfg.max_len)
+        return out
 
-    def _decode_impl(self, cache, tokens, key, temps):
-        logits, new_cache = self.fns.decode_step(self.params, cache, tokens,
-                                                 self.model_cfg)
+    def _bucket_for(self, n: int) -> int:
+        for b in self.buckets():
+            if n <= b:
+                return b
+        raise ValueError(f"prompt length {n} exceeds max_len "
+                         f"{self.ecfg.max_len}")
+
+    # --- device-side sampling ---------------------------------------------
+    def _sample(self, logits, keys, temps):
+        """Per-row top-k temperature sampling (greedy where temp == 0).
+
+        `keys` is (B, 2): each row draws from its own request stream, so
+        the result is independent of slot placement and co-batched rows."""
         greedy = jnp.argmax(logits, axis=-1)
-        vals, idx = jax.lax.top_k(logits, self.ecfg.top_k)
-        sampled_in_topk = jax.random.categorical(
-            key, vals / jnp.maximum(temps[:, None], 1e-6))
-        sampled = jnp.take_along_axis(idx, sampled_in_topk[:, None],
-                                      -1)[:, 0]
-        next_tok = jnp.where(temps > 0, sampled, greedy).astype(jnp.int32)
-        return next_tok, new_cache
+        k = min(self.ecfg.top_k, logits.shape[-1])
+        vals, idx = jax.lax.top_k(logits, k)
+        scaled = vals / jnp.maximum(temps[:, None], 1e-6)
+        draw = jax.vmap(jax.random.categorical)(keys, scaled)
+        sampled = jnp.take_along_axis(idx, draw[:, None], -1)[:, 0]
+        return jnp.where(temps > 0, sampled, greedy).astype(jnp.int32)
 
-    # --- slot management -------------------------------------------------------
+    # --- fused decode block (the hot path) --------------------------------
+    def _engine_step_impl(self, params, cache, state):
+        """Decode up to N tokens for every active slot with zero host syncs.
+
+        Each sub-step: batched decode_step -> per-row sample -> masked
+        bookkeeping. Rows that finish (eos / budget / out of room) are
+        deactivated in-scan; inactive rows hold their state (pos frozen, so
+        their stale cache writes land in the masked tail and their PRNG
+        stream idles deterministically)."""
+        n = self.ecfg.decode_block
+        max_len = self.ecfg.max_len
+
+        def sub(carry, _):
+            cache, st = carry
+            logits, cache2 = self.fns.decode_step(
+                params, cache, st["last"][:, None], self.model_cfg)
+            pair = jax.vmap(jax.random.split)(st["rkey"])
+            tok = self._sample(logits, pair[:, 1], st["temp"])
+            was = st["active"]
+            tok = jnp.where(was, tok, st["last"])
+            pos = jnp.where(was, cache2["pos"], cache["pos"])
+            cache2 = {**cache2, "pos": pos}
+            remaining = st["remaining"] - was.astype(jnp.int32)
+            done = was & ((tok == st["eos"]) | (remaining <= 0)
+                          | (pos + 1 >= max_len))
+            st2 = {"last": tok, "active": was & ~done,
+                   "remaining": remaining, "temp": st["temp"],
+                   "eos": st["eos"],
+                   "rkey": jnp.where(was[:, None], pair[:, 0], st["rkey"])}
+            return (cache2, st2), (tok, was, done)
+
+        (cache, state), (toks, emit, done) = jax.lax.scan(
+            sub, (cache, state), None, length=n)
+        return cache, state, toks.T, emit.T, done.T      # (B, N) each
+
+    # --- bucketed prefill --------------------------------------------------
+    def _prefill_impl(self, params, cache, state, tokens, lens, admit,
+                      temps, eos, budgets, seqs):
+        """Prefill `admit`-masked rows of a (max_batch, bucket_len) token
+        block into the shared cache and sample each row's first token.
+
+        Always traced at the full engine batch: the number of distinct
+        traces is bounded by the number of buckets, not by (group size x
+        prompt length) combinations."""
+        cfg = self.model_cfg
+        b, lb = tokens.shape
+        tmp = self.fns.init_cache(cfg, b, lb)
+        tmp["pos"] = jnp.zeros((b,), jnp.int32)
+        last_idx = jnp.maximum(lens - 1, 0)
+        logits, tmp = self.fns.decode_step(params, tmp, tokens, cfg,
+                                           last_idx=last_idx)
+
+        # merge admitted rows' fresh cache prefix into the shared cache
+        w = tmp["k"].shape[2]                  # bucket len, block-aligned
+        adm5 = admit[None, :, None, None, None]
+        new_cache = dict(cache)
+        for nm in ("k", "v"):
+            new_cache[nm] = cache[nm].at[:, :, :w].set(
+                jnp.where(adm5, tmp[nm][:, :, :w], cache[nm][:, :, :w]))
+        new_cache["pos"] = jnp.where(admit, lens, cache["pos"])
+
+        # per-request PRNG streams: fold_in(base, submit_seq) — admission
+        # order and slot placement cannot perturb sampling
+        rkeys = jax.vmap(lambda s: jax.random.fold_in(self._base_key, s))(
+            seqs).astype(jnp.uint32)
+        pair = jax.vmap(jax.random.split)(rkeys)
+        first = self._sample(logits, pair[:, 1], temps)
+        done0 = admit & ((first == eos) | (budgets <= 1)
+                         | (lens + 1 >= self.ecfg.max_len))
+
+        def sel(new, old):
+            return jnp.where(admit if new.ndim == 1 else admit[:, None],
+                             new, old)
+        new_state = {
+            "last": sel(first, state["last"]),
+            "active": jnp.where(admit, ~done0, state["active"]),
+            "remaining": sel(budgets - 1, state["remaining"]),
+            "temp": sel(temps, state["temp"]),
+            "eos": sel(eos, state["eos"]),
+            "rkey": sel(pair[:, 0], state["rkey"]),
+        }
+        return new_cache, new_state, first, done0
+
+    # --- host-side slot management ----------------------------------------
     def submit(self, req: Request):
+        if len(req.prompt) > self.ecfg.max_len:
+            raise ValueError(
+                f"request {req.uid}: prompt length {len(req.prompt)} "
+                f"exceeds max_len {self.ecfg.max_len}")
+        req._seq = self._next_seq
+        self._next_seq += 1
         self.queue.append(req)
 
     def _fill_slots(self):
-        for i in range(self.ecfg.max_batch):
-            if self.slots[i] is None and self.queue:
-                req = self.queue.pop(0)
-                tokens = jnp.asarray(req.prompt, jnp.int32)[None]
-                slot_cache = {
-                    "k": self.cache["k"][:, i:i + 1] * 0,
-                    "v": self.cache["v"][:, i:i + 1] * 0,
-                }
-                logits, new = self._prefill(self.cache, slot_cache, tokens)
-                self.cache["k"] = self.cache["k"].at[:, i].set(new["k"][:, 0])
-                self.cache["v"] = self.cache["v"].at[:, i].set(new["v"][:, 0])
-                self.cache["pos"] = self.cache["pos"].at[i].set(
-                    len(req.prompt))
-                # first generated token comes from the prefill logits
-                first = int(jnp.argmax(logits[0]))
-                req.generated.append(first)
-                self.slots[i] = req
+        """Admit queued requests into free slots via bucketed prefill."""
+        free = [i for i, s in enumerate(self.slots) if s is None]
+        if not free or not self.queue:
+            return
+        admitted = []
+        while free and self.queue:
+            admitted.append((free.pop(0), self.queue.pop(0)))
+        groups = defaultdict(list)
+        for slot, req in admitted:
+            groups[self._bucket_for(len(req.prompt))].append((slot, req))
 
-    def _active_mask(self):
-        return np.array([s is not None for s in self.slots])
+        b = self.ecfg.max_batch
+        results = []
+        for lb in sorted(groups):
+            grp = groups[lb]
+            tokens = np.zeros((b, lb), np.int32)
+            lens = np.zeros((b,), np.int32)
+            admit = np.zeros((b,), bool)
+            temps = np.zeros((b,), np.float32)
+            eos = np.full((b,), -1, np.int32)
+            budgets = np.ones((b,), np.int32)
+            seqs = np.zeros((b,), np.int32)
+            for slot, req in grp:
+                tokens[slot, :len(req.prompt)] = req.prompt
+                lens[slot] = len(req.prompt)
+                admit[slot] = True
+                temps[slot] = req.temperature
+                eos[slot] = -1 if req.eos_id is None else req.eos_id
+                budgets[slot] = req.max_new_tokens
+                seqs[slot] = req._seq
+                self.slots[slot] = req
+            self.cache, self.state, first, done0 = self._prefill(
+                self.params, self.cache, self.state, jnp.asarray(tokens),
+                jnp.asarray(lens), jnp.asarray(admit), jnp.asarray(temps),
+                jnp.asarray(eos), jnp.asarray(budgets), jnp.asarray(seqs))
+            results.append((grp, first, done0))
 
-    def step(self):
-        """One engine step: admit new requests, decode all active slots."""
-        self._fill_slots()
-        active = self._active_mask()
-        if not active.any():
-            return 0
-        last = np.zeros((self.ecfg.max_batch,), np.int32)
-        temps = np.zeros((self.ecfg.max_batch,), np.float32)
-        for i, req in enumerate(self.slots):
-            if req is not None:
-                last[i] = req.generated[-1]
-                temps[i] = req.temperature
-        self.key, sub = jax.random.split(self.key)
-        next_tok, new_cache = self._decode(
-            self.cache, jnp.asarray(last)[:, None], sub, jnp.asarray(temps))
-        self.cache = new_cache
-        next_np = np.asarray(next_tok)
-        n_active = 0
+        # one transfer for all admission rounds in this fill
+        flat = jax.device_get([(f, d) for _, f, d in results])
+        self.stats["host_syncs"] += 1
+        for (grp, _, _), (first, done0) in zip(results, flat):
+            for slot, req in grp:
+                req.generated.append(int(first[slot]))
+                self.stats["tokens"] += 1
+                if done0[slot]:
+                    req.done = True
+                    self.finished.append(req)
+                    self.slots[slot] = None
+
+    def _decode_block(self):
+        """One fused device block; drain results in a single transfer."""
+        self.cache, self.state, toks, emit, done = self._engine_step(
+            self.params, self.cache, self.state)
+        toks, emit, done = jax.device_get((toks, emit, done))
+        self.stats["host_syncs"] += 1
+        self.stats["decode_blocks"] += 1
         for i, req in enumerate(self.slots):
             if req is None:
                 continue
-            n_active += 1
-            req.generated.append(int(next_np[i]))
-            hit_eos = (req.eos_id is not None
-                       and req.generated[-1] == req.eos_id)
-            out_of_room = int(self.cache["pos"][i]) + 1 >= self.ecfg.max_len
-            if len(req.generated) >= req.max_new_tokens or hit_eos \
-                    or out_of_room:
+            row = toks[i][emit[i]]
+            req.generated.extend(int(t) for t in row)
+            self.stats["tokens"] += int(emit[i].sum())
+            if done[i].any():
                 req.done = True
                 self.finished.append(req)
                 self.slots[i] = None
-                self.cache["pos"] = self.cache["pos"].at[i].set(0)
+
+    def step(self):
+        """Admit new requests, then decode one block for all active slots.
+        Returns the number of active slots decoded this block."""
+        self._fill_slots()
+        n_active = sum(s is not None for s in self.slots)
+        if n_active:
+            self._decode_block()
         return n_active
 
     def run(self, max_steps: int = 10_000):
         steps = 0
-        while (self.queue or self._active_mask().any()) \
+        while (self.queue or any(s is not None for s in self.slots)) \
                 and steps < max_steps:
             self.step()
             steps += 1
         return self.finished
+
+    def trace_count(self) -> int:
+        """Number of distinct XLA traces compiled by the serving hot path,
+        or -1 when jax's (private) jit-cache introspection is unavailable."""
+        total = 0
+        for fn in (self._prefill, self._engine_step):
+            size = getattr(fn, "_cache_size", None)
+            if size is None:
+                return -1
+            total += int(size())
+        return total

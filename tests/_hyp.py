@@ -1,0 +1,29 @@
+"""Import-or-skip shim for hypothesis.
+
+The container image does not always ship hypothesis; the suite must still
+collect and run its example-based tests. Property tests decorated with the
+fallback `given` are skipped (not silently passed)."""
+try:
+    from hypothesis import given, settings
+    from hypothesis import strategies as st
+except ImportError:            # pragma: no cover - depends on environment
+    import pytest
+
+    def given(*_a, **_k):
+        def deco(fn):
+            return pytest.mark.skip(
+                reason="hypothesis not installed")(fn)
+        return deco
+
+    def settings(*_a, **_k):
+        def deco(fn):
+            return fn
+        return deco
+
+    class _Strategies:
+        def __getattr__(self, _name):
+            return lambda *a, **k: None
+
+    st = _Strategies()
+
+__all__ = ["given", "settings", "st"]

@@ -4,8 +4,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings
-from hypothesis import strategies as st
+from _hyp import given, settings, st
 
 from repro.kernels.decode_attention import (decode_attention,
                                             decode_attention_reference)
@@ -82,6 +81,9 @@ class TestFlashAttention:
 
 
 class TestDecodeAttention:
+    """Caches are in the model's (B, M, Hkv, dh) layout — the kernel
+    consumes them with no transpose/pad on the serving hot path."""
+
     @pytest.mark.parametrize("b,h,hkv,m,dh", [
         (2, 8, 8, 1024, 64),
         (4, 8, 2, 2048, 128),
@@ -91,9 +93,9 @@ class TestDecodeAttention:
     def test_sweep_vs_oracle(self, b, h, hkv, m, dh, dtype):
         kq, kk, kv = jax.random.split(jax.random.PRNGKey(3), 3)
         q = jax.random.normal(kq, (b, h, dh), dtype)
-        kc = jax.random.normal(kk, (b, hkv, m, dh), dtype)
-        vc = jax.random.normal(kv, (b, hkv, m, dh), dtype)
-        kv_len = m // 2 + 17
+        kc = jax.random.normal(kk, (b, m, hkv, dh), dtype)
+        vc = jax.random.normal(kv, (b, m, hkv, dh), dtype)
+        kv_len = m // 2 + 17                    # scalar broadcasts
         from repro.kernels.decode_attention.kernel import decode_attention_fwd
         out = decode_attention_fwd(q, kc, vc, kv_len, interpret=True)
         ref = decode_attention_reference(q, kc, vc, kv_len)
@@ -101,28 +103,65 @@ class TestDecodeAttention:
             np.asarray(out, np.float32), np.asarray(ref, np.float32),
             atol=_tol(dtype), rtol=_tol(dtype))
 
+    @pytest.mark.parametrize("b,h,hkv,m,dh", [
+        (4, 8, 2, 1024, 64),
+        (3, 4, 4, 512, 128),
+    ])
+    def test_ragged_per_row_kv_len(self, b, h, hkv, m, dh):
+        """Each slot masks only its own cache tail — including an empty
+        slot (kv_len=0 -> exact zeros) and a nearly-full one (max_len-1)."""
+        kq, kk, kv = jax.random.split(jax.random.PRNGKey(11), 3)
+        q = jax.random.normal(kq, (b, h, dh))
+        kc = jax.random.normal(kk, (b, m, hkv, dh))
+        vc = jax.random.normal(kv, (b, m, hkv, dh))
+        lens = jnp.asarray([0, 1, m - 1, m // 2 + 3][:b], jnp.int32)
+        from repro.kernels.decode_attention.kernel import decode_attention_fwd
+        out = decode_attention_fwd(q, kc, vc, lens, interpret=True)
+        ref = decode_attention_reference(q, kc, vc, lens)
+        np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                                   atol=2e-5, rtol=2e-5)
+        assert np.all(np.asarray(out[0]) == 0.0)     # empty slot
+
+    def test_ragged_rows_match_scalar_per_row(self):
+        """Row i of a ragged call == a scalar-kv_len call at lens[i]."""
+        kq, kk, kv = jax.random.split(jax.random.PRNGKey(12), 3)
+        b, h, hkv, m, dh = 3, 4, 2, 512, 64
+        q = jax.random.normal(kq, (b, h, dh))
+        kc = jax.random.normal(kk, (b, m, hkv, dh))
+        vc = jax.random.normal(kv, (b, m, hkv, dh))
+        lens = [37, 256, 511]
+        from repro.kernels.decode_attention.kernel import decode_attention_fwd
+        ragged = decode_attention_fwd(q, kc, vc,
+                                      jnp.asarray(lens, jnp.int32),
+                                      interpret=True)
+        for i, n in enumerate(lens):
+            solo = decode_attention_fwd(q[i:i + 1], kc[i:i + 1],
+                                        vc[i:i + 1], n, interpret=True)
+            np.testing.assert_array_equal(np.asarray(ragged[i]),
+                                          np.asarray(solo[0]))
+
     def test_model_layout_wrapper(self):
         kq, kk = jax.random.split(jax.random.PRNGKey(4))
         q = jax.random.normal(kq, (2, 1, 8, 64))
         kc = jax.random.normal(kk, (2, 777, 2, 64))     # unpadded M
         vc = jax.random.normal(kk, (2, 777, 2, 64))
         out = decode_attention(q, kc, vc, 400, interpret=True)
-        ref = decode_attention_reference(
-            q[:, 0], kc.transpose(0, 2, 1, 3), vc.transpose(0, 2, 1, 3), 400)
+        ref = decode_attention_reference(q[:, 0], kc, vc, 400)
         np.testing.assert_allclose(np.asarray(out[:, 0]), np.asarray(ref),
                                    atol=2e-5, rtol=2e-5)
 
     def test_kv_len_masking_exact(self):
-        """Entries beyond kv_len must not influence the output at all."""
+        """Entries beyond each row's kv_len must not influence the output."""
         kq, kk = jax.random.split(jax.random.PRNGKey(5))
-        q = jax.random.normal(kq, (1, 4, 64))
-        kc = jax.random.normal(kk, (1, 2, 512, 64))
-        vc = jax.random.normal(kk, (1, 2, 512, 64))
+        q = jax.random.normal(kq, (2, 4, 64))
+        kc = jax.random.normal(kk, (2, 512, 2, 64))
+        vc = jax.random.normal(kk, (2, 512, 2, 64))
+        lens = jnp.asarray([100, 300], jnp.int32)
         from repro.kernels.decode_attention.kernel import decode_attention_fwd
-        out1 = decode_attention_fwd(q, kc, vc, 100, interpret=True)
-        kc2 = kc.at[:, :, 100:].set(1e4)
-        vc2 = vc.at[:, :, 100:].set(-1e4)
-        out2 = decode_attention_fwd(q, kc2, vc2, 100, interpret=True)
+        out1 = decode_attention_fwd(q, kc, vc, lens, interpret=True)
+        kc2 = kc.at[0, 100:].set(1e4).at[1, 300:].set(1e4)
+        vc2 = vc.at[0, 100:].set(-1e4).at[1, 300:].set(-1e4)
+        out2 = decode_attention_fwd(q, kc2, vc2, lens, interpret=True)
         np.testing.assert_array_equal(np.asarray(out1), np.asarray(out2))
 
 
