@@ -1,5 +1,9 @@
 """Benchmark harness: one entry per paper table/figure + the dry-run
-roofline. Prints ``name,us_per_call,derived`` CSV (assignment format)."""
+roofline. Prints ``name,us_per_call,derived`` CSV (assignment format).
+
+--skip mod1,mod2 excludes entries (CI runs the throughput benchmarks as
+dedicated steps and skips them here to avoid paying for them twice)."""
+import argparse
 
 
 def main() -> None:
@@ -10,6 +14,11 @@ def main() -> None:
     mods = [fig1_isl, fig2_constellation, j2_drift, radiation_table,
             fig4_launch, table1_power, diloco_traffic, roofline,
             train_throughput, serve_throughput]
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--skip", default="",
+                    help="comma-separated module names to exclude")
+    skip = {s.strip() for s in ap.parse_args().skip.split(",") if s.strip()}
+    mods = [m for m in mods if m.__name__.rsplit(".", 1)[-1] not in skip]
     print("name,us_per_call,derived")
     for mod in mods:
         try:

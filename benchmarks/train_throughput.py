@@ -1,34 +1,159 @@
-"""Measured CPU micro-benchmark: train/serve step wall time for the demo
-model (the only cell actually executable in this container)."""
+"""Measured CPU micro-benchmark: the fused device-resident DiLoCo round
+against the seed-style per-step host loop.
+
+The seed training path ran ONE jit call per step with a host sync for
+loss/grad-norm after every step (the fault-tolerance screens lived on the
+host), generated each batch host-side, and ran DiLoCo's outer sync as a
+separate eager host call. The fused round (train/diloco.py:
+make_diloco_round) moves all of it device-side: H inner steps x n_pods,
+in-graph data generation, in-graph SDC screens over a metrics ring buffer,
+and the masked Nesterov outer sync run in ONE donated jit, and the host
+drains a single (n_pods, H) metrics block per round — host syncs per
+global step are 1/H instead of ~2.
+
+The smoke config is deliberately tiny (d_model=32, seq 8): the quantity
+being measured is the eliminated per-step host overhead (dispatch + sync +
+eager outer), which a large model's compute would mask. Results land in
+BENCH_train.json (repo root) next to the serving baseline.
+"""
+import collections
+import json
+import os
 import time
 
 import jax
+import jax.numpy as jnp
+import numpy as np
 
 from repro.models import registry
-from repro.train import (AdamWConfig, DataConfig, SyntheticLM, TrainConfig,
-                         init_train_state, make_train_step)
+from repro.train import (AdamWConfig, DataConfig, DiLoCoConfig, SyntheticLM,
+                         TrainConfig, diloco_init, make_diloco_round,
+                         make_train_step, outer_step, pod_step_grid)
+
+N_PODS = 2
+H = 8                    # inner steps per round
+SEQ_LEN = 8
+BATCH = 2                # per pod
+WARM_ROUNDS = 1
+FUSED_ROUNDS = 10
+SEED_ROUNDS = 4
+
+
+def _bench_setup():
+    cfg = registry.get_reduced_config(
+        "suncatcher-lm-100m", n_layers=2, d_model=32, n_heads=2,
+        n_kv_heads=1, d_ff=64, vocab_size=256)
+    fns = registry.model_fns(cfg)
+    tcfg = TrainConfig(adamw=AdamWConfig(), warmup_steps=2,
+                       total_steps=1000)
+    data = SyntheticLM(DataConfig(vocab_size=cfg.vocab_size,
+                                  seq_len=SEQ_LEN, global_batch=BATCH))
+    dcfg = DiLoCoConfig(n_pods=N_PODS, inner_steps=H)
+    return cfg, fns, tcfg, data, dcfg
+
+
+def _seed_round(d_state, r, step, data, dcfg, screens):
+    """The seed loop shape: per-pod per-step jit calls, a loss + gnorm host
+    sync per step (host-side screens), host-side batch generation, eager
+    host outer step."""
+    losses, gnorms = screens
+    grid = pod_step_grid(r, dcfg.n_pods, dcfg.inner_steps)
+    pod_p, pod_o = [], []
+    syncs = 0
+    for p in range(dcfg.n_pods):
+        st = {"params": jax.tree.map(lambda x: x[p], d_state["pod_params"]),
+              "opt": jax.tree.map(lambda x: x[p], d_state["pod_opt"]),
+              "step": d_state["step"]}
+        for i in range(dcfg.inner_steps):
+            b = data.batch_at(int(grid[p, i]))
+            st, m = step(st, b)
+            loss = float(m["loss"])                      # host sync
+            gnorm = float(m["grad_norm"])                # host sync
+            syncs += 2
+            if np.isfinite(loss) and len(gnorms) >= 8:   # host screens
+                np.median(gnorms), np.median(losses)
+            losses.append(loss)
+            gnorms.append(gnorm)
+        pod_p.append(st["params"])
+        pod_o.append(st["opt"])
+    d_state = {**d_state,
+               "pod_params": jax.tree.map(lambda *xs: jnp.stack(xs), *pod_p),
+               "pod_opt": jax.tree.map(lambda *xs: jnp.stack(xs), *pod_o),
+               "step": d_state["step"] + dcfg.inner_steps}
+    return outer_step(d_state, dcfg), syncs
 
 
 def run():
-    cfg = registry.get_reduced_config("suncatcher-lm-100m")
-    fns = registry.model_fns(cfg)
-    tcfg = TrainConfig(adamw=AdamWConfig())
-    state = init_train_state(jax.random.PRNGKey(0), cfg, fns)
-    data = SyntheticLM(DataConfig(vocab_size=cfg.vocab_size, seq_len=64,
-                                  global_batch=8))
-    step = jax.jit(make_train_step(cfg, fns, tcfg))
-    batch = data.batch_at(0)
-    state, _ = step(state, batch)          # compile
-    t0 = time.time()
-    n = 10
-    for i in range(n):
-        state, m = step(state, data.batch_at(i + 1))
+    cfg, fns, tcfg, data, dcfg = _bench_setup()
+    params = fns.init(jax.random.PRNGKey(0), cfg)
+    mask = jnp.ones((N_PODS,), jnp.float32)
+    thresholds = jnp.asarray([1e9, 1e9], jnp.float32)   # screens armed, quiet
+
+    # ---- fused device-resident round (screens + in-graph data) ----------
+    rnd = make_diloco_round(cfg, fns, tcfg, dcfg, data=data,
+                            screen_window=32)
+    d_state = diloco_init(params, dcfg, screen_window=32)
+    for r in range(WARM_ROUNDS):
+        d_state, m = rnd(d_state, jnp.asarray(pod_step_grid(r, N_PODS, H)), mask,
+                         thresholds)
     jax.block_until_ready(m["loss"])
-    us = (time.time() - t0) * 1e6 / n
-    tokens = 8 * 64
-    derived = f"{tokens/ (us/1e6):.0f} tokens/s on 1 CPU core (smoke cfg)"
-    return [("train_step_cpu_micro", us, derived)], None
+    fused_syncs = 0
+    t0 = time.time()
+    for r in range(WARM_ROUNDS, WARM_ROUNDS + FUSED_ROUNDS):
+        d_state, m = rnd(d_state, jnp.asarray(pod_step_grid(r, N_PODS, H)), mask,
+                         thresholds)
+        jax.device_get(m)                  # the one drain per round
+        fused_syncs += 1
+    dt_fused = (time.time() - t0) / FUSED_ROUNDS
+
+    # ---- seed-style per-step host loop ----------------------------------
+    step = jax.jit(make_train_step(cfg, fns, tcfg))
+    screens = (collections.deque(maxlen=32), collections.deque(maxlen=32))
+    d_seed = diloco_init(fns.init(jax.random.PRNGKey(0), cfg), dcfg)
+    d_seed, _ = _seed_round(d_seed, 0, step, data, dcfg, screens)   # warm
+    seed_syncs = 0
+    t0 = time.time()
+    for r in range(1, 1 + SEED_ROUNDS):
+        d_seed, syncs = _seed_round(d_seed, r, step, data, dcfg, screens)
+        seed_syncs += syncs
+    dt_seed = (time.time() - t0) / SEED_ROUNDS
+
+    tokens = N_PODS * H * BATCH * SEQ_LEN          # per round
+    fused_tps = tokens / dt_fused
+    seed_tps = tokens / dt_seed
+    speedup = dt_seed / dt_fused
+    syncs_per_step_fused = fused_syncs / (FUSED_ROUNDS * H)
+    syncs_per_step_seed = seed_syncs / (SEED_ROUNDS * H)
+
+    extras = {
+        "fused_round_ms": round(dt_fused * 1e3, 2),
+        "seed_loop_round_ms": round(dt_seed * 1e3, 2),
+        "speedup_vs_seed_loop": round(speedup, 2),
+        "fused_tokens_per_s": round(fused_tps, 1),
+        "seed_loop_tokens_per_s": round(seed_tps, 1),
+        "host_syncs_per_step": round(syncs_per_step_fused, 4),
+        "seed_host_syncs_per_step": round(syncs_per_step_seed, 2),
+        "n_pods": N_PODS,
+        "inner_steps": H,
+    }
+    with open(os.path.join(os.path.dirname(__file__), "..",
+                           "BENCH_train.json"), "w") as f:
+        json.dump(extras, f, indent=2)
+        f.write("\n")
+
+    out = [
+        ("train_fused_diloco_round", dt_fused * 1e6,
+         f"{fused_tps:.0f} tok/s, {syncs_per_step_fused:.3f} host-syncs/"
+         f"step ({N_PODS} pods x H={H}, screens in-graph)"),
+        ("train_seed_step_loop", dt_seed * 1e6,
+         f"{seed_tps:.0f} tok/s, {syncs_per_step_seed:.1f} host-syncs/step "
+         f"(per-step jit + host screens + eager outer)"),
+        ("train_diloco_speedup", 0.0,
+         f"{speedup:.2f}x fused round over seed-style per-step loop"),
+    ]
+    return out, extras
 
 
 if __name__ == "__main__":
-    print(run()[0][0])
+    for row in run()[0]:
+        print(row)

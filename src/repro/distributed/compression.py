@@ -69,23 +69,32 @@ def ef_init(tree):
     return jax.tree.map(lambda x: jnp.zeros(x.shape, jnp.float32), tree)
 
 
+def ef_roundtrip(x, ef, method: str = "int8", **kw):
+    """One error-feedback hop for a single leaf — THE wire-hop invariant,
+    shared by ef_compress_tree and the fused DiLoCo round's per-pod delta
+    compression. Returns (compressed, sent, new_residual) with
+    sent + new_residual == x + ef exactly."""
+    comp_fn = {"int8": int8_compress,
+               "topk": lambda v: topk_compress(v, **kw)}[method]
+    dec_fn = {"int8": int8_decompress, "topk": topk_decompress}[method]
+    target = x.astype(jnp.float32) + ef
+    c = comp_fn(target)
+    sent = dec_fn(c)
+    return c, sent, target - sent
+
+
 def ef_compress_tree(tree, ef, method: str = "int8", **kw):
     """Returns (compressed_tree, new_ef, wire_bytes). The decompressed value
     of what was sent is (x + ef) - residual; the residual is carried."""
-    comp_fn = {"int8": int8_compress,
-               "topk": lambda x: topk_compress(x, **kw)}[method]
-    dec_fn = {"int8": int8_decompress, "topk": topk_decompress}[method]
     size_fn = {"int8": int8_bytes, "topk": topk_bytes}[method]
 
     compressed, new_ef, total = [], [], 0
     leaves, treedef = jax.tree.flatten(tree)
     ef_leaves = jax.tree.leaves(ef)
     for x, e in zip(leaves, ef_leaves):
-        target = x.astype(jnp.float32) + e
-        c = comp_fn(target)
-        sent = dec_fn(c)
+        c, _, resid = ef_roundtrip(x, e, method, **kw)
         compressed.append(c)
-        new_ef.append(target - sent)
+        new_ef.append(resid)
         total += size_fn(c)
     return (jax.tree.unflatten(treedef, compressed),
             jax.tree.unflatten(treedef, new_ef), total)

@@ -20,7 +20,10 @@ head counts don't divide the model axis — noted per-family below.
 """
 from __future__ import annotations
 
+import math
+
 import jax
+from jax.sharding import NamedSharding
 from jax.sharding import PartitionSpec as P
 
 # NOTE: model config classes are imported lazily inside the dispatchers —
@@ -30,6 +33,58 @@ from jax.sharding import PartitionSpec as P
 
 def batch_axes(multi_pod: bool):
     return ("pod", "data") if multi_pod else ("data",)
+
+
+# --------------------------------------------------------------------------
+# spec -> NamedSharding plumbing (shared by launch/dryrun.py, launch/train.py
+# and train/loop.py / train/diloco.py)
+# --------------------------------------------------------------------------
+def _is_spec_leaf(x):
+    return x is None or isinstance(x, P)
+
+
+def _axis_sizes(mesh):
+    return dict(zip(mesh.axis_names, mesh.devices.shape))
+
+
+def sanitize_specs(spec_tree, sds_tree, mesh):
+    """Drop sharding on axes whose size doesn't divide (e.g. batch=1 cells,
+    4-head archs on a 16-way model axis, 2 DiLoCo pods on a 1-pod mesh)."""
+    sizes = _axis_sizes(mesh)
+
+    def fix(spec, sds):
+        if spec is None or not isinstance(spec, P):
+            spec = P()
+        parts = list(spec) + [None] * (len(sds.shape) - len(spec))
+        out = []
+        for dim, ax in zip(sds.shape, parts):
+            if ax is None:
+                out.append(None)
+                continue
+            axs = ax if isinstance(ax, tuple) else (ax,)
+            if any(a not in sizes for a in axs):
+                out.append(None)
+                continue
+            n = math.prod(sizes[a] for a in axs)
+            out.append(ax if dim % n == 0 else None)
+        return P(*out)
+
+    return jax.tree.map(fix, spec_tree, sds_tree, is_leaf=_is_spec_leaf)
+
+
+def shardings_for(spec_tree, sds_tree, mesh):
+    """PartitionSpec tree -> NamedSharding tree, sanitized against the mesh
+    axis sizes and the concrete array shapes in `sds_tree`."""
+    specs = sanitize_specs(spec_tree, sds_tree, mesh)
+    return jax.tree.map(lambda s: NamedSharding(mesh, s), specs,
+                        is_leaf=_is_spec_leaf)
+
+
+def prepend_axis(spec_tree, axis=None):
+    """Prefix every spec with one leading dim (DiLoCo pod-replica axis,
+    fused-step block axis, ...). axis=None keeps the new dim unsharded."""
+    return jax.tree.map(lambda s: P(*((axis,) + tuple(s or P()))),
+                        spec_tree, is_leaf=_is_spec_leaf)
 
 
 def _transformer_specs(cfg: TransformerConfig, fsdp: bool, dp):
@@ -174,3 +229,30 @@ def cache_specs(cfg, multi_pod: bool = False):
 def opt_state_specs(pspecs):
     """Adam m/v shard exactly like params (ZeRO)."""
     return {"m": pspecs, "v": pspecs, "step": P()}
+
+
+def train_state_specs(pspecs):
+    """Spec tree matching train/loop.py's {params, opt, step} state."""
+    return {"params": pspecs, "opt": opt_state_specs(pspecs), "step": P()}
+
+
+def diloco_specs(pspecs, *, compress: bool = False,
+                 screen: bool = False):
+    """Spec tree matching train/diloco.py's diloco_init structure: global
+    params/momentum shard like a single replica; the per-pod replicas carry
+    an explicit leading axis sharded over "pod" (pod-local inner compute)."""
+    pod = lambda t: prepend_axis(t, "pod")
+    specs = {
+        "global_params": pspecs,
+        "outer_m": pspecs,
+        "pod_params": pod(pspecs),
+        "pod_opt": pod(opt_state_specs(pspecs)),
+        "step": P(),
+    }
+    if compress:
+        specs["pod_ef"] = pod(pspecs)
+    if screen:
+        specs["screen"] = {"loss": P("pod", None),
+                           "gnorm": P("pod", None),
+                           "count": P("pod")}
+    return specs

@@ -32,14 +32,14 @@ from functools import partial
 
 import jax
 import jax.numpy as jnp
-from jax.sharding import NamedSharding
 from jax.sharding import PartitionSpec as P
 
 from repro.analysis.analytic import analytic_roofline
 from repro.analysis.hlo import collective_bytes, collective_bytes_loop_aware
 from repro.analysis.roofline import model_flops_for, roofline
 from repro.distributed.sharding import (batch_specs, cache_specs,
-                                        opt_state_specs, param_specs)
+                                        opt_state_specs, param_specs,
+                                        sanitize_specs, shardings_for)
 from repro.launch.mesh import make_production_mesh
 from repro.models import registry
 from repro.train.loop import TrainConfig, make_train_step
@@ -64,45 +64,6 @@ TRAIN_MICROBATCHES = {
     "qwen2-vl-2b": 1,
     "suncatcher-lm-100m": 1,
 }
-
-
-def _is_spec_leaf(x):
-    return x is None or isinstance(x, P)
-
-
-def _axis_sizes(mesh):
-    return dict(zip(mesh.axis_names, mesh.devices.shape))
-
-
-def sanitize_specs(spec_tree, sds_tree, mesh):
-    """Drop sharding on axes whose size doesn't divide (e.g. batch=1 cells,
-    4-head archs on a 16-way model axis)."""
-    sizes = _axis_sizes(mesh)
-
-    def fix(spec, sds):
-        if spec is None or not isinstance(spec, P):
-            spec = P()
-        parts = list(spec) + [None] * (len(sds.shape) - len(spec))
-        out = []
-        for dim, ax in zip(sds.shape, parts):
-            if ax is None:
-                out.append(None)
-                continue
-            axs = ax if isinstance(ax, tuple) else (ax,)
-            if any(a not in sizes for a in axs):
-                out.append(None)
-                continue
-            n = math.prod(sizes[a] for a in axs)
-            out.append(ax if dim % n == 0 else None)
-        return P(*out)
-
-    return jax.tree.map(fix, spec_tree, sds_tree, is_leaf=_is_spec_leaf)
-
-
-def shardings_for(spec_tree, sds_tree, mesh):
-    specs = sanitize_specs(spec_tree, sds_tree, mesh)
-    return jax.tree.map(lambda s: NamedSharding(mesh, s), specs,
-                        is_leaf=_is_spec_leaf)
 
 
 def _sds(tree, dtype_map=None):

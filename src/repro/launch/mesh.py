@@ -27,3 +27,20 @@ def make_test_mesh(n_devices: int | None = None):
     """Degenerate mesh over whatever devices exist (CPU tests: 1 device)."""
     n = n_devices or len(jax.devices())
     return jax.make_mesh((1, n, 1), ("pod", "data", "model"))
+
+
+def mesh_for(kind: str):
+    """CLI-facing dispatcher: --mesh {none,test,single,multi}.
+
+    "test" fits whatever devices exist (the CPU container); "single"/"multi"
+    are the 256/512-chip production meshes (dry-run scale — they require the
+    matching device count, e.g. via XLA_FLAGS host-device emulation)."""
+    if kind == "none":
+        return None
+    if kind == "test":
+        return make_test_mesh()
+    if kind == "single":
+        return make_production_mesh(multi_pod=False)
+    if kind == "multi":
+        return make_production_mesh(multi_pod=True)
+    raise ValueError(f"unknown mesh kind {kind!r}")

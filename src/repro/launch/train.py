@@ -3,19 +3,129 @@
 On this CPU container it runs reduced configs (--reduced, default); on a real
 TPU cluster the same driver takes the full config + production mesh.
 
+  # fault-tolerant single-replica training, fused K-step drains
+  PYTHONPATH=src python -m repro.launch.train --arch suncatcher-lm-100m \
+      --steps 50 --drain-every 8 --mesh test
+
+  # DiLoCo: 2 pods, fused device-resident rounds, int8 EF-compressed
+  # outer sync on the FSO wire hop
   PYTHONPATH=src python -m repro.launch.train --arch granite-moe-1b-a400m \
-      --steps 50 --diloco-pods 2
+      --steps 50 --diloco-pods 2 --inner-steps 8 --compress int8
 """
 import argparse
 import tempfile
 
 import jax
+import jax.numpy as jnp
+import numpy as np
 
 from repro.core.radiation import RadiationEnvironment, SDCInjector
+from repro.launch.mesh import mesh_for
 from repro.models import registry
-from repro.train import (AdamWConfig, DataConfig, FTConfig,
-                         FaultTolerantTrainer, SyntheticLM, TrainConfig,
-                         init_train_state, make_train_step)
+from repro.train import (AdamWConfig, DataConfig, DetectionPolicy,
+                         DiLoCoConfig, FTConfig, FaultTolerantTrainer,
+                         SyntheticLM, TrainConfig, diloco_init,
+                         init_train_state, isl_bytes_per_step,
+                         make_diloco_round, make_fused_steps,
+                         make_sharded_fused_steps, make_sharded_train_step,
+                         make_train_step, outer_wire_bytes, pod_step_grid)
+
+
+def _run_diloco(args, cfg, fns, tcfg, data):
+    """Device-resident DiLoCo rounds with in-graph screens; the host drains
+    one (n_pods, H) metrics block per round and keeps a rollback snapshot."""
+    dcfg = DiLoCoConfig(n_pods=args.diloco_pods,
+                        inner_steps=args.inner_steps)
+    compress = None if args.compress == "none" else args.compress
+    mesh = mesh_for(args.mesh)
+    ft = FTConfig()
+    params = fns.init(jax.random.PRNGKey(0), cfg)
+    d_state = diloco_init(params, dcfg, compress=compress,
+                          screen_window=ft.gnorm_window)
+    rnd = make_diloco_round(cfg, fns, tcfg, dcfg, compress=compress,
+                            data=data, screen_window=ft.gnorm_window,
+                            min_screen=ft.min_screen, mesh=mesh)
+    mask = jnp.ones((dcfg.n_pods,), jnp.float32)
+    policy = DetectionPolicy(ft)
+
+    n_rounds = -(-args.steps // dcfg.inner_steps)
+    snap_every = max(1, ft.checkpoint_every // dcfg.inner_steps)
+    snap = jax.tree.map(np.asarray, d_state)
+    snap_round = 0
+    stats = {"rollbacks": 0, "drains": 0}
+    mean_losses = []
+    r = 0
+    while r < n_rounds:
+        grid = pod_step_grid(r, dcfg.n_pods, dcfg.inner_steps)
+        thresholds = jnp.asarray(
+            [policy.loss_threshold, policy.gnorm_threshold], jnp.float32)
+        d_state, metrics = rnd(d_state, jnp.asarray(grid), mask, thresholds)
+        metrics = jax.device_get(metrics)   # the ONE host sync per round
+        stats["drains"] += 1
+        if metrics["suspect"].any():
+            policy.on_detection(
+                f"round {r}", "non-finite" if metrics["nonfinite"].any()
+                else "spike")
+            stats["rollbacks"] += 1
+            d_state = jax.device_put(snap)
+            r = snap_round
+            continue
+        mean_losses.append(float(metrics["loss"].mean()))
+        r += 1
+        if r % snap_every == 0:
+            snap = jax.tree.map(np.asarray, d_state)
+            snap_round = r
+    stats.update(policy.stats)
+
+    acct = isl_bytes_per_step(cfg.param_count(), dcfg.inner_steps, compress)
+    wire = outer_wire_bytes(params, compress)
+    print(f"{cfg.name}: DiLoCo {dcfg.n_pods} pods x H={dcfg.inner_steps}, "
+          f"{n_rounds} rounds, mean pod loss "
+          f"{mean_losses[0]:.3f} -> {mean_losses[-1]:.3f}, stats {stats}")
+    print(f"  ISL wire: {wire/1e6:.2f} MB/pod/outer-sync "
+          f"({args.compress}), {acct['reduction']:.0f}x less pod-axis "
+          f"traffic than sync DP")
+
+
+def _run_supervised(args, cfg, fns, tcfg, data):
+    """Single-replica fault-tolerant loop (per-step or fused drains)."""
+    mesh = mesh_for(args.mesh)
+    state = init_train_state(jax.random.PRNGKey(0), cfg, fns)
+    if mesh is not None:
+        step = make_sharded_train_step(cfg, fns, tcfg, mesh,
+                                       data.batch_at(0), donate=False)
+    else:
+        step = jax.jit(make_train_step(cfg, fns, tcfg))
+
+    injector = None
+    if args.sdc_rate_multiplier:
+        injector = SDCInjector(RadiationEnvironment(), n_chips=81 * 256,
+                               step_time_s=1.0,
+                               rate_multiplier=args.sdc_rate_multiplier)
+    fused = None
+    if args.drain_every > 1 and injector is None:
+        if mesh is not None:
+            fused = make_sharded_fused_steps(
+                cfg, fns, tcfg, mesh, data.batch_at(0),
+                drain_every=args.drain_every)
+        else:
+            fused = jax.jit(make_fused_steps(cfg, fns, tcfg),
+                            donate_argnums=(0, 1))
+    with tempfile.TemporaryDirectory() as d:
+        trainer = FaultTolerantTrainer(
+            step, state, data,
+            FTConfig(checkpoint_dirs=(d,), checkpoint_every=20,
+                     drain_every=args.drain_every),
+            injector=injector, fused_steps=fused)
+        if fused is not None:
+            hist = trainer.run_fused(args.steps)
+        else:
+            hist = trainer.run(args.steps)
+    mode = (f"fused drains (K={args.drain_every})" if fused is not None
+            else "per-step host loop")
+    print(f"{cfg.name}: {len(hist)} steps [{mode}], loss "
+          f"{hist[0]['loss']:.3f} -> {hist[-1]['loss']:.3f}, "
+          f"ft stats {trainer.stats}")
 
 
 def main():
@@ -30,6 +140,20 @@ def main():
                     help="full-size config (TPU-scale; default reduced)")
     ap.add_argument("--sdc-rate-multiplier", type=float, default=0.0)
     ap.add_argument("--schedule", default=None, help="cosine|wsd")
+    ap.add_argument("--diloco-pods", type=int, default=0,
+                    help="run DiLoCo with this many pods (0 = off)")
+    ap.add_argument("--inner-steps", type=int, default=8,
+                    help="DiLoCo H: local steps between outer syncs")
+    ap.add_argument("--compress", default="none",
+                    choices=["none", "int8", "topk"],
+                    help="error-feedback compression on the outer wire hop")
+    ap.add_argument("--mesh", default="test",
+                    choices=["none", "test", "single", "multi"],
+                    help="device mesh for explicit shardings "
+                         "(single/multi need the production chip count)")
+    ap.add_argument("--drain-every", type=int, default=8,
+                    help="metrics-block drain cadence K (1 = seed-style "
+                         "per-step host loop)")
     args = ap.parse_args()
 
     cfg = (registry.get_config(args.arch) if args.full
@@ -45,23 +169,15 @@ def main():
         global_batch=args.batch,
         n_codebooks=getattr(cfg, "n_codebooks", 1),
         kind=registry.input_kind(args.arch)))
-    state = init_train_state(jax.random.PRNGKey(0), cfg, fns)
-    step = jax.jit(make_train_step(cfg, fns, tcfg))
 
-    injector = None
-    if args.sdc_rate_multiplier:
-        injector = SDCInjector(RadiationEnvironment(), n_chips=81 * 256,
-                               step_time_s=1.0,
-                               rate_multiplier=args.sdc_rate_multiplier)
-    with tempfile.TemporaryDirectory() as d:
-        trainer = FaultTolerantTrainer(
-            step, state, data, FTConfig(checkpoint_dirs=(d,),
-                                        checkpoint_every=20),
-            injector=injector)
-        hist = trainer.run(args.steps)
-    print(f"{cfg.name}: {len(hist)} steps, loss "
-          f"{hist[0]['loss']:.3f} -> {hist[-1]['loss']:.3f}, "
-          f"ft stats {trainer.stats}")
+    if args.diloco_pods > 0:
+        if args.sdc_rate_multiplier:
+            ap.error("--sdc-rate-multiplier needs the host-driven injector "
+                     "and is not supported with --diloco-pods (the DiLoCo "
+                     "round is fully device-resident); drop one of the two")
+        _run_diloco(args, cfg, fns, tcfg, data)
+    else:
+        _run_supervised(args, cfg, fns, tcfg, data)
 
 
 if __name__ == "__main__":

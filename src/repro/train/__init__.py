@@ -1,10 +1,14 @@
 """Training substrate: optimizer, schedules, loop, data, checkpointing,
 fault tolerance, DiLoCo."""
 from .checkpoint import restore_into, restore_latest, save, save_replicated
-from .data import DataConfig, SyntheticLM
+from .data import DataConfig, SyntheticLM, pod_step_grid
 from .diloco import (DiLoCoConfig, diloco_init, isl_bytes_per_step,
-                     make_inner_steps, outer_step)
-from .fault_tolerance import FaultTolerantTrainer, FTConfig
-from .loop import TrainConfig, init_train_state, make_eval_step, make_train_step
+                     make_diloco_round, make_inner_steps, outer_step,
+                     outer_wire_bytes)
+from .fault_tolerance import (DetectionPolicy, FaultTolerantTrainer,
+                              FTConfig, screen_init, screen_update)
+from .loop import (TrainConfig, init_train_state, make_eval_step,
+                   make_fused_steps, make_sharded_fused_steps,
+                   make_sharded_train_step, make_train_step)
 from .optimizer import AdamWConfig, adamw_update, global_norm, init_opt_state
 from .schedule import get_schedule, warmup_cosine, wsd

@@ -25,6 +25,16 @@ import jax
 import numpy as np
 
 
+def _fsync_dir(path: str):
+    """fsync a directory so the entries themselves are durable (the rename
+    in `save` is only atomic-AND-durable once the parent dir is synced)."""
+    fd = os.open(path, os.O_RDONLY)
+    try:
+        os.fsync(fd)
+    finally:
+        os.close(fd)
+
+
 def _leaf_paths(tree):
     flat, _ = jax.tree_util.tree_flatten_with_path(tree)
     out = {}
@@ -50,12 +60,25 @@ def save(state, directory: str, step: int, keep: int = 3) -> str:
         arrays[safe] = arr
         meta["checksums"][safe] = hashlib.sha256(
             np.ascontiguousarray(arr).tobytes()).hexdigest()
-    np.savez(os.path.join(tmp, "arrays.npz"), **arrays)
+    with open(os.path.join(tmp, "arrays.npz"), "wb") as f:
+        np.savez(f, **arrays)
+        f.flush()
+        os.fsync(f.fileno())
     with open(os.path.join(tmp, "metadata.json"), "w") as f:
         json.dump(meta, f)
+        f.flush()
+        os.fsync(f.fileno())
+    _fsync_dir(tmp)
     if os.path.exists(final):
-        shutil.rmtree(final)
+        try:
+            shutil.rmtree(final)
+        except FileNotFoundError:
+            pass   # concurrent _prune got there first
     os.rename(tmp, final)
+    # durability point: rename is only on stable storage once the parent
+    # directory entry is synced — a power/SEFI event before this line may
+    # resurface tmp-<step>, never a torn step-<step>
+    _fsync_dir(directory)
     _prune(directory, keep)
     return final
 
@@ -73,9 +96,19 @@ def save_async(state, directory: str, step: int, keep: int = 3):
 
 
 def _prune(directory: str, keep: int):
-    steps = sorted(d for d in os.listdir(directory) if d.startswith("step-"))
+    # save_async threads race each other here: a directory listed by this
+    # thread may already have been pruned (or renamed away) by another, so
+    # every removal tolerates the entry vanishing underneath it.
+    try:
+        steps = sorted(d for d in os.listdir(directory)
+                       if d.startswith("step-"))
+    except FileNotFoundError:
+        return
     for d in steps[:-keep]:
-        shutil.rmtree(os.path.join(directory, d))
+        try:
+            shutil.rmtree(os.path.join(directory, d))
+        except FileNotFoundError:
+            pass
 
 
 def _verify_and_load(path: str):

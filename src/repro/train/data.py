@@ -32,6 +32,17 @@ def _zipf_probs(vocab: int) -> np.ndarray:
     return p / p.sum()
 
 
+def pod_step_grid(round_idx: int, n_pods: int, inner_steps: int,
+                  pod_stride: int = 1_000_000) -> np.ndarray:
+    """(n_pods, H) step-id grid for DiLoCo round `round_idx`: each pod
+    draws from a disjoint stride-offset partition of the deterministic
+    stream. Shared by the launcher and the throughput benchmark so both
+    train/measure the SAME data partition, and rollback replay of a round
+    regenerates it bit-exactly."""
+    return ((round_idx * inner_steps + np.arange(inner_steps))[None]
+            + (np.arange(n_pods) * pod_stride)[:, None]).astype(np.int32)
+
+
 class SyntheticLM:
     """Deterministic, replayable synthetic LM token stream."""
 
@@ -65,3 +76,21 @@ class SyntheticLM:
         while True:
             yield step, self.batch_at(step)
             step += 1
+
+    def batch_block(self, steps):
+        """Batches for an arbitrary-dim array of step ids in ONE jitted
+        device call: leading axes = steps.shape (fused K-step blocks use
+        (K,), DiLoCo rounds (n_pods, H)). batch_at is a pure function of
+        (seed, step), so this is bit-identical to stacking batch_at calls.
+        """
+        steps = jnp.asarray(steps, jnp.int32)
+        if not hasattr(self, "_block_fns"):
+            self._block_fns = {}
+        fn = self._block_fns.get(steps.ndim)
+        if fn is None:
+            fn = self.batch_at
+            for _ in range(steps.ndim):
+                fn = jax.vmap(fn)
+            fn = jax.jit(fn)
+            self._block_fns[steps.ndim] = fn
+        return fn(steps)

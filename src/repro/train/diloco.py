@@ -10,20 +10,32 @@ more with int8 delta compression from repro.distributed.compression).
 Implementation: per-pod replicas are an explicit leading axis of the param
 pytree. Inner steps vmap over that axis (on the production mesh the axis is
 sharded over "pod", so vmap = pod-local compute, zero cross-pod collectives);
-the outer step is a masked mean over pods + Nesterov momentum on the delta.
+the outer step is a masked mean over per-pod deltas + Nesterov momentum.
 
 The pod mask makes satellite loss / straggler drop-out a *first-class*
 operation: a pod that died or fell behind is excluded from the outer
 average (bounded-staleness semantics) and simply re-broadcasts the new
-global params when it rejoins — elastic scaling without restart.
+global params when it rejoins — elastic scaling without restart. A round
+in which EVERY pod is masked is a no-op (global params and outer momentum
+unchanged): there is no delta to average, so nothing may move.
+
+`make_diloco_round` is the device-resident hot path: ONE donated, jitted
+call runs the H inner AdamW steps (lax.scan), the in-graph SDC screens
+(fault_tolerance.screen_update over a per-pod metrics ring buffer), the
+optional int8/top-k error-feedback compression on the wire hop, and the
+masked Nesterov outer sync — the host drains one (n_pods, H) metrics block
+per round instead of syncing loss/gnorm every step.
 """
 from __future__ import annotations
 
+import math
 from dataclasses import dataclass
+from functools import partial
 
 import jax
 import jax.numpy as jnp
 
+from .fault_tolerance import screen_init, screen_update
 from .loop import TrainConfig, make_train_step
 from .optimizer import init_opt_state
 
@@ -36,11 +48,17 @@ class DiLoCoConfig:
     outer_momentum: float = 0.9
 
 
-def diloco_init(params, dcfg: DiLoCoConfig):
-    """Global state: master params + outer momentum + per-pod replicas."""
+def diloco_init(params, dcfg: DiLoCoConfig, compress: str | None = None,
+                screen_window: int = 0):
+    """Global state: master params + outer momentum + per-pod replicas.
+
+    compress: "int8"/"topk" adds per-pod error-feedback residuals for the
+    compressed wire hop; screen_window > 0 adds per-pod metrics ring
+    buffers for the in-graph SDC screens.
+    """
     rep = jax.tree.map(
         lambda x: jnp.broadcast_to(x, (dcfg.n_pods,) + x.shape), params)
-    return {
+    state = {
         "global_params": params,
         "outer_m": jax.tree.map(lambda x: jnp.zeros(x.shape, jnp.float32),
                                 params),
@@ -50,6 +68,35 @@ def diloco_init(params, dcfg: DiLoCoConfig):
             init_opt_state(params)),
         "step": jnp.zeros((), jnp.int32),
     }
+    if compress is not None:
+        state["pod_ef"] = jax.tree.map(
+            lambda x: jnp.zeros((dcfg.n_pods,) + x.shape, jnp.float32),
+            params)
+    if screen_window:
+        state["screen"] = jax.tree.map(
+            lambda x: jnp.broadcast_to(x, (dcfg.n_pods,) + x.shape).copy(),
+            screen_init(screen_window))
+    return state
+
+
+def _make_pod_inner(model_cfg, fns, tcfg: TrainConfig, collect):
+    """H local AdamW steps on one pod's replica, vmapped over the pod axis.
+    `collect(metrics)` picks what the scan stacks per step — the training
+    math is IDENTICAL regardless of what is collected, which is what makes
+    the fused round bit-identical to make_inner_steps + outer_step."""
+    step_fn = make_train_step(model_cfg, fns, tcfg)
+
+    def pod_inner(params, opt, step0, batches):
+        state = {"params": params, "opt": opt, "step": step0}
+
+        def body(state, batch):
+            state, metrics = step_fn(state, batch)
+            return state, collect(metrics)
+
+        state, out = jax.lax.scan(body, state, batches)
+        return state["params"], state["opt"], out
+
+    return jax.vmap(pod_inner, in_axes=(0, 0, None, 0))
 
 
 def make_inner_steps(model_cfg, fns, tcfg: TrainConfig,
@@ -59,72 +106,231 @@ def make_inner_steps(model_cfg, fns, tcfg: TrainConfig,
     batches: pytree with leading axes (n_pods, H, ...). Pod-local: contains
     no cross-pod collectives by construction.
     """
-    step_fn = make_train_step(model_cfg, fns, tcfg)
-
-    def pod_inner(params, opt, step0, batches):
-        state = {"params": params, "opt": opt, "step": step0}
-
-        def body(state, batch):
-            state, metrics = step_fn(state, batch)
-            return state, metrics["loss"]
-
-        state, losses = jax.lax.scan(body, state, batches)
-        return state["params"], state["opt"], jnp.mean(losses)
-
-    vmapped = jax.vmap(pod_inner, in_axes=(0, 0, None, 0))
+    vmapped = _make_pod_inner(model_cfg, fns, tcfg,
+                              collect=lambda m: m["loss"])
 
     def inner(d_state, batches):
-        new_p, new_o, loss = vmapped(d_state["pod_params"],
-                                     d_state["pod_opt"], d_state["step"],
-                                     batches)
+        new_p, new_o, losses = vmapped(d_state["pod_params"],
+                                       d_state["pod_opt"], d_state["step"],
+                                       batches)
         return {**d_state, "pod_params": new_p, "pod_opt": new_o,
-                "step": d_state["step"] + dcfg.inner_steps}, loss
+                "step": d_state["step"] + dcfg.inner_steps}, \
+            jnp.mean(losses, axis=-1)
 
     return inner
 
 
-def outer_step(d_state, dcfg: DiLoCoConfig, pod_mask=None):
+def _compress_pod_deltas(deltas, ef, pod_mask, method: str,
+                         topk_frac: float):
+    """Error-feedback compress/decompress each pod's outer delta — the FSO
+    wire hop. Dead pods transmit nothing: their EF residual is preserved,
+    not overwritten with a bogus round-trip of itself."""
+    from repro.distributed.compression import ef_roundtrip
+    kw = {"frac": topk_frac} if method == "topk" else {}
+
+    def per_leaf(d, e):
+        def one(d1, e1):
+            # the compressed payload stays inside the vmap (its static
+            # shape/n fields can't cross the batching boundary)
+            _, sent, resid = ef_roundtrip(d1, e1, method, **kw)
+            return sent, resid
+        return jax.vmap(one)(d, e)
+
+    pairs = jax.tree.map(per_leaf, deltas, ef)
+    is_pair = lambda x: isinstance(x, tuple)
+    sent = jax.tree.map(lambda p: p[0], pairs, is_leaf=is_pair)
+    resid = jax.tree.map(lambda p: p[1], pairs, is_leaf=is_pair)
+
+    def keep_ef(r, e):
+        w = pod_mask.reshape((-1,) + (1,) * (e.ndim - 1))
+        return jnp.where(w > 0, r, e)
+
+    return sent, jax.tree.map(keep_ef, resid, ef)
+
+
+def outer_step(d_state, dcfg: DiLoCoConfig, pod_mask=None,
+               compress: str | None = None, topk_frac: float = 0.01):
     """Nesterov outer update on the pod-averaged delta; re-broadcast.
 
     pod_mask: (n_pods,) 0/1 — dead/straggling pods excluded from the average
     (they are overwritten with the new global params regardless: rejoin).
+    An all-dead round is a NO-OP on global params and outer momentum —
+    without the guard the clamped denominator would turn "no surviving
+    deltas" into a huge bogus `global - 0` Nesterov update.
+
+    compress: "int8"/"topk" runs each surviving pod's delta through the
+    error-feedback compressor (d_state must carry "pod_ef", see
+    diloco_init) — this is the quantized FSO wire hop.
     """
     if pod_mask is None:
         pod_mask = jnp.ones((dcfg.n_pods,), jnp.float32)
-    denom = jnp.maximum(jnp.sum(pod_mask), 1.0)
+    pod_mask = pod_mask.astype(jnp.float32)
+    n_alive = jnp.sum(pod_mask)
+    alive = n_alive > 0
+    denom = jnp.maximum(n_alive, 1.0)
 
-    def delta(gp, pp):
+    def per_pod_delta(gp, pp):
         w = pod_mask.reshape((-1,) + (1,) * gp.ndim)
-        # zero out dead pods BEFORE the multiply: a NaN-poisoned replica
-        # times a 0 mask is still NaN
-        pp = jnp.where(w > 0, pp.astype(jnp.float32), 0.0)
-        avg = jnp.sum(pp * w, axis=0) / denom
-        return gp.astype(jnp.float32) - avg     # "outer gradient"
+        # zero out dead pods BEFORE any arithmetic: a NaN-poisoned replica
+        # must not leak through the average OR the error-feedback state
+        return jnp.where(
+            w > 0, gp.astype(jnp.float32)[None] - pp.astype(jnp.float32),
+            0.0)
 
-    deltas = jax.tree.map(delta, d_state["global_params"],
+    deltas = jax.tree.map(per_pod_delta, d_state["global_params"],
                           d_state["pod_params"])
+
+    new_ef = None
+    if compress is not None:
+        deltas, new_ef = _compress_pod_deltas(
+            deltas, d_state["pod_ef"], pod_mask, compress, topk_frac)
+
+    def masked_mean(d):
+        w = pod_mask.reshape((-1,) + (1,) * (d.ndim - 1))
+        return jnp.sum(d * w, axis=0) / denom
+
+    grad = jax.tree.map(masked_mean, deltas)       # "outer gradient"
     m = jax.tree.map(
-        lambda m_, d: dcfg.outer_momentum * m_ + d,
-        d_state["outer_m"], deltas)
+        lambda m_, g: dcfg.outer_momentum * m_ + g,
+        d_state["outer_m"], grad)
     new_global = jax.tree.map(
-        lambda gp, m_, d: (gp.astype(jnp.float32)
-                           - dcfg.outer_lr * (dcfg.outer_momentum * m_ + d)
-                           ).astype(gp.dtype),
-        d_state["global_params"], m, deltas)
+        lambda gp, m_, g: jnp.where(
+            alive,
+            (gp.astype(jnp.float32)
+             - dcfg.outer_lr * (dcfg.outer_momentum * m_ + g)
+             ).astype(gp.dtype),
+            gp),
+        d_state["global_params"], m, grad)
+    new_m = jax.tree.map(lambda m_new, m_old: jnp.where(alive, m_new, m_old),
+                         m, d_state["outer_m"])
     new_pods = jax.tree.map(
         lambda gp: jnp.broadcast_to(gp, (dcfg.n_pods,) + gp.shape),
         new_global)
-    return {**d_state, "global_params": new_global, "outer_m": m,
-            "pod_params": new_pods}
+    out = {**d_state, "global_params": new_global, "outer_m": new_m,
+           "pod_params": new_pods}
+    if new_ef is not None:
+        out["pod_ef"] = new_ef
+    return out
+
+
+def make_diloco_round(model_cfg, fns, tcfg: TrainConfig, dcfg: DiLoCoConfig,
+                      *, compress: str | None = None, topk_frac: float = 0.01,
+                      data=None, screen_window: int = 0, min_screen: int = 8,
+                      mesh=None, fsdp: bool = True, donate: bool = True):
+    """ONE jitted, donated DiLoCo round — the device-resident training twin
+    of the serving engine's fused decode block.
+
+    Returns round(d_state, batches, pod_mask, thresholds) -> (d_state,
+    metrics):
+      - batches: pytree with leading (n_pods, H) axes — or, when `data` (a
+        SyntheticLM) is given, an (n_pods, H) int32 array of step ids whose
+        batches are generated in-graph (zero host data movement).
+      - pod_mask: (n_pods,) 0/1 liveness; masked pods' inner work is
+        discarded by the outer average and they rejoin on re-broadcast.
+      - thresholds: traced (loss_thr, gnorm_thr) for the in-graph screens
+        (ignored when screen_window=0; widenable without recompile; the
+        d_state must come from diloco_init with the same screen_window).
+      - metrics: (n_pods, H) loss/grad_norm + screen flags — the single
+        per-round host drain.
+
+    The inner H steps, screens, EF compression, and masked Nesterov outer
+    sync all run inside the one jit: zero host round-trips inside the
+    round. With `mesh`, in/out NamedShardings come from
+    repro.distributed.sharding (pod replicas on "pod", FSDP on "data",
+    tensor-parallel on "model"), sanitized so the same builder runs on the
+    1-device CPU container and the (2, 16, 16) production mesh.
+    """
+    inner = _make_pod_inner(model_cfg, fns, tcfg,
+                            collect=lambda m: (m["loss"], m["grad_norm"]))
+
+    def round_fn(d_state, batches, pod_mask, thresholds):
+        if data is not None:
+            batches = jax.vmap(jax.vmap(data.batch_at))(batches)
+        new_p, new_o, (losses, gnorms) = inner(
+            d_state["pod_params"], d_state["pod_opt"], d_state["step"],
+            batches)
+        d_state = {**d_state, "pod_params": new_p, "pod_opt": new_o,
+                   "step": d_state["step"] + dcfg.inner_steps}
+
+        if screen_window:
+            def pod_screen(s, l, g):
+                def body(s, lg):
+                    return screen_update(s, lg[0], lg[1], thresholds[0],
+                                         thresholds[1], min_screen)
+                return jax.lax.scan(body, s, (l, g))
+
+            scr, flags = jax.vmap(pod_screen)(
+                d_state["screen"], losses, gnorms)
+            d_state = {**d_state, "screen": scr}
+        else:
+            nonfinite = ~(jnp.isfinite(losses) & jnp.isfinite(gnorms))
+            no = jnp.zeros_like(nonfinite)
+            flags = {"nonfinite": nonfinite, "loss_spike": no,
+                     "gnorm_spike": no, "suspect": nonfinite}
+
+        d_state = outer_step(d_state, dcfg, pod_mask, compress=compress,
+                             topk_frac=topk_frac)
+        return d_state, {"loss": losses, "grad_norm": gnorms, **flags}
+
+    donate_args = (0,) if donate else ()
+    if mesh is None:
+        return jax.jit(round_fn, donate_argnums=donate_args)
+
+    from repro.distributed.sharding import (diloco_specs, param_specs,
+                                            shardings_for)
+    from jax.sharding import NamedSharding
+    from jax.sharding import PartitionSpec as P
+    params_sds = jax.eval_shape(
+        lambda: fns.init(jax.random.PRNGKey(0), model_cfg))
+    d_sds = jax.eval_shape(
+        partial(diloco_init, dcfg=dcfg, compress=compress,
+                screen_window=screen_window),
+        params_sds)
+    pspecs = param_specs(model_cfg, fsdp=fsdp)
+    state_sh = shardings_for(
+        diloco_specs(pspecs, compress=compress is not None,
+                     screen=screen_window > 0),
+        d_sds, mesh)
+    steps_sh = None
+    if data is not None:
+        steps_sh = shardings_for(
+            P("pod", None),
+            jax.ShapeDtypeStruct((dcfg.n_pods, dcfg.inner_steps),
+                                 jnp.int32), mesh)
+    mask_sh = NamedSharding(mesh, P())
+    return jax.jit(round_fn,
+                   in_shardings=(state_sh, steps_sh, mask_sh, None),
+                   out_shardings=(state_sh, None),
+                   donate_argnums=donate_args)
+
+
+def outer_wire_bytes(params, compress: str | None = None,
+                     topk_frac: float = 0.01) -> int:
+    """Per-pod FSO bytes for ONE outer sync, from static shapes."""
+    total = 0
+    for x in jax.tree.leaves(params):
+        n = math.prod(x.shape) if x.shape else 1
+        if compress == "int8":
+            rows = -(-n // 256)
+            total += rows * 256 + rows * 4       # int8 payload + f32 scales
+        elif compress == "topk":
+            k = max(1, int(n * topk_frac))
+            total += 8 * k                       # f32 values + i32 indices
+        else:
+            total += 4 * n
+    return total
 
 
 def isl_bytes_per_step(n_params: int, inner_steps: int,
-                       compress: str | None = None) -> dict:
+                       compress: str | None = None,
+                       topk_frac: float = 0.01) -> dict:
     """ISL (pod-axis) traffic accounting: sync DP vs DiLoCo (§3/ref 41)."""
     sync = 4 * n_params                       # f32 grad all-reduce every step
     outer = 4 * n_params / inner_steps        # amortized delta sync
     if compress == "int8":
-        outer /= 4
+        outer /= 4                            # int8 payload vs f32
+    elif compress == "topk":
+        outer *= 8 * topk_frac / 4            # f32 value + i32 index per kept
     return {"sync_bytes_per_step": sync,
             "diloco_bytes_per_step": outer,
             "reduction": sync / outer}

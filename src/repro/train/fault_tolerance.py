@@ -12,11 +12,28 @@ Failure model (measured rates in repro.core.radiation):
 The checkpoint cadence defaults to the Young/Daly optimum from the radiation
 environment. Detection triggers a rollback to the last checkpoint rather
 than a skip: a flipped *parameter* bit would otherwise persist forever.
+
+Two supervisor modes:
+  - `run()`: seed-style per-step host loop — one jit call + a loss/gnorm
+    host sync per step (screens on the host).
+  - `run_fused()`: the screens themselves run in-graph (`screen_update`)
+    over a device-resident metrics ring buffer inside a fused K-step scan
+    (train/loop.py:make_fused_steps); the host drains one (K, metrics)
+    block per K steps — the training twin of the serving engine's
+    token-block drain.
+
+Livelock guard (both modes): a *genuine* spike (not transient SDC) would
+re-trigger the same screen after every rollback because replay is
+bit-deterministic. After `max_rollbacks_per_step` consecutive rollbacks
+triggered at the same step, the spike thresholds are widened by
+`widen_factor` per further detection until the step passes; a *persistent*
+non-finite loss (real divergence — no threshold can admit it) raises
+instead of spinning forever.
 """
 from __future__ import annotations
 
 import collections
-from dataclasses import dataclass, field
+from dataclasses import dataclass
 
 import jax
 import jax.numpy as jnp
@@ -35,34 +52,143 @@ class FTConfig:
     gnorm_threshold: float = 10.0     # x running median -> suspect SDC
     loss_threshold: float = 3.0       # x running median
     verify_every: int = 0             # duplicate-step checksum cadence (0=off)
+    min_screen: int = 8               # median screens need this many samples
+    drain_every: int = 8              # fused mode: steps per host drain (K)
+    max_rollbacks_per_step: int = 3   # livelock cap before widening
+    widen_factor: float = 2.0         # spike-threshold multiplier past cap
+
+
+# --------------------------------------------------------------------------
+# device-side screens: pure-jnp ring buffer + running-median spike checks,
+# shared by train/loop.py:make_fused_steps and train/diloco.py rounds
+# --------------------------------------------------------------------------
+def screen_init(window: int = 32):
+    """Metrics ring buffer; lives on device inside the fused step state."""
+    return {"loss": jnp.zeros((window,), jnp.float32),
+            "gnorm": jnp.zeros((window,), jnp.float32),
+            "count": jnp.zeros((), jnp.int32)}
+
+
+def _masked_median(ring, n):
+    """Median of the first-n-valid entries (entries are written densely
+    before the ring wraps, so validity is exactly `index < n`)."""
+    w = ring.shape[0]
+    vals = jnp.sort(jnp.where(jnp.arange(w) < n, ring, jnp.inf))
+    n = jnp.maximum(n, 1)
+    return 0.5 * (vals[(n - 1) // 2] + vals[n // 2])
+
+
+def screen_update(screen, loss, gnorm, loss_thr, gnorm_thr,
+                  min_count: int = 8):
+    """One in-graph screen step. Returns (screen, flags).
+
+    Mirrors the host `_suspicious` semantics: non-finite always flags;
+    spike screens arm once `min_count` clean samples are in the window;
+    flagged samples are NOT appended (they'd poison the running median).
+    loss_thr/gnorm_thr are traced scalars so the supervisor can widen them
+    after a rollback livelock without recompiling.
+    """
+    w = screen["loss"].shape[0]
+    loss = loss.astype(jnp.float32)
+    gnorm = gnorm.astype(jnp.float32)
+    nonfinite = ~(jnp.isfinite(loss) & jnp.isfinite(gnorm))
+    n = jnp.minimum(screen["count"], w)
+    active = n >= min_count
+    med_l = _masked_median(screen["loss"], n)
+    med_g = _masked_median(screen["gnorm"], n)
+    loss_spike = active & ~nonfinite & \
+        (loss > loss_thr * jnp.maximum(med_l, 1e-12))
+    gnorm_spike = active & ~nonfinite & \
+        (gnorm > gnorm_thr * jnp.maximum(med_g, 1e-12))
+    suspect = nonfinite | loss_spike | gnorm_spike
+
+    idx = screen["count"] % w
+    keep = ~suspect
+    new = {"loss": jnp.where(keep, screen["loss"].at[idx].set(loss),
+                             screen["loss"]),
+           "gnorm": jnp.where(keep, screen["gnorm"].at[idx].set(gnorm),
+                              screen["gnorm"]),
+           "count": screen["count"] + keep.astype(jnp.int32)}
+    flags = {"nonfinite": nonfinite, "loss_spike": loss_spike,
+             "gnorm_spike": gnorm_spike, "suspect": suspect}
+    return new, flags
+
+
+class DetectionPolicy:
+    """The rollback livelock guard, shared by every supervisor loop
+    (FaultTolerantTrainer and the DiLoCo launcher): cap consecutive
+    detections at the same point, widen the spike thresholds per further
+    detection past the cap, raise on persistent non-finite."""
+
+    def __init__(self, ft: FTConfig, stats: dict | None = None):
+        self.loss_threshold = ft.loss_threshold
+        self.gnorm_threshold = ft.gnorm_threshold
+        self._cap = ft.max_rollbacks_per_step
+        self._widen = ft.widen_factor
+        self.stats = stats if stats is not None else \
+            {"sdc_detected": 0, "threshold_widenings": 0}
+        self._last = None
+        self._consec = 0
+
+    def on_detection(self, at, reason: str):
+        """`at` labels the detection point (step/round) — consecutive
+        detections at the same label count toward the cap."""
+        self.stats["sdc_detected"] += 1
+        self._consec = self._consec + 1 if at == self._last else 1
+        self._last = at
+        if self._consec > self._cap:
+            if reason == "non-finite":
+                raise RuntimeError(
+                    f"persistent non-finite loss/gnorm at {at} after "
+                    f"{self._consec - 1} rollbacks: divergence, not "
+                    "transient SDC")
+            self.loss_threshold *= self._widen
+            self.gnorm_threshold *= self._widen
+            self.stats["threshold_widenings"] += 1
 
 
 class FaultTolerantTrainer:
-    """Host-side supervisor around a jitted train step."""
+    """Host-side supervisor around a jitted train step.
+
+    `fused_steps` (optional): a jitted (state, screen, batches, thresholds)
+    -> (state, screen, block) function from train/loop.py:make_fused_steps,
+    enabling `run_fused` — screens in-graph, one host drain per K steps.
+    """
 
     def __init__(self, train_step, state, data, ft: FTConfig,
-                 injector: SDCInjector | None = None):
+                 injector: SDCInjector | None = None, fused_steps=None):
         self.train_step = train_step
         self.state = state
         self.data = data
         self.ft = ft
         self.injector = injector
+        self.fused_steps = fused_steps
         self.gnorms = collections.deque(maxlen=ft.gnorm_window)
         self.losses = collections.deque(maxlen=ft.gnorm_window)
         self.stats = {"rollbacks": 0, "sdc_detected": 0, "sdc_injected": 0,
-                      "checkpoints": 0, "verify_failures": 0}
+                      "checkpoints": 0, "verify_failures": 0,
+                      "threshold_widenings": 0, "drains": 0}
+        self.policy = DetectionPolicy(ft, self.stats)
         self._save_initial()
+
+    @property
+    def loss_threshold(self):
+        return self.policy.loss_threshold
+
+    @property
+    def gnorm_threshold(self):
+        return self.policy.gnorm_threshold
 
     # -- detection ----------------------------------------------------------
     def _suspicious(self, loss: float, gnorm: float) -> str | None:
         if not np.isfinite(loss) or not np.isfinite(gnorm):
             return "non-finite"
-        if len(self.gnorms) >= 8:
+        if len(self.gnorms) >= self.ft.min_screen:
             med_g = float(np.median(self.gnorms))
             med_l = float(np.median(self.losses))
-            if gnorm > self.ft.gnorm_threshold * max(med_g, 1e-12):
+            if gnorm > self.gnorm_threshold * max(med_g, 1e-12):
                 return "grad-norm spike"
-            if loss > self.ft.loss_threshold * max(med_l, 1e-12):
+            if loss > self.loss_threshold * max(med_l, 1e-12):
                 return "loss spike"
         return None
 
@@ -91,6 +217,14 @@ class FaultTolerantTrainer:
         self.gnorms.clear()
         self.losses.clear()
         return step
+
+    def _maybe_checkpoint(self, old_step: int, new_step: int):
+        ce = self.ft.checkpoint_every
+        if new_step // ce > old_step // ce:
+            ckpt.save_replicated(jax.tree.map(np.asarray, self.state),
+                                 self.ft.checkpoint_dirs, new_step,
+                                 self.ft.keep)
+            self.stats["checkpoints"] += 1
 
     # -- main loop -------------------------------------------------------------
     def run(self, n_steps: int, forced_sdc_at: dict | None = None):
@@ -122,7 +256,7 @@ class FaultTolerantTrainer:
                 if not self._verify(batch):
                     reason = "duplicate-step mismatch"
             if reason is not None:
-                self.stats["sdc_detected"] += 1
+                self.policy.on_detection(f"step {step}", reason)
                 self._rollback()
                 continue
 
@@ -130,10 +264,63 @@ class FaultTolerantTrainer:
             self.gnorms.append(gnorm)
             self.losses.append(loss)
             history.append({"step": step, "loss": loss, "gnorm": gnorm})
+            self._maybe_checkpoint(step, step + 1)
+        return history
 
-            if (step + 1) % self.ft.checkpoint_every == 0:
-                ckpt.save_replicated(jax.tree.map(np.asarray, self.state),
-                                     self.ft.checkpoint_dirs, step + 1,
-                                     self.ft.keep)
-                self.stats["checkpoints"] += 1
+    def run_fused(self, n_steps: int):
+        """Device-screened mode: K steps per jit call, screens in-graph,
+        one (K, metrics) host drain per block. Requires `fused_steps`."""
+        assert self.fused_steps is not None, \
+            "construct with fused_steps=jit(make_fused_steps(...))"
+        if self.injector is not None or self.ft.verify_every:
+            # both are host-driven per-step mechanisms; silently skipping
+            # them would report a spuriously clean fault-injection run
+            raise ValueError(
+                "run_fused does not support the host-driven SDCInjector or "
+                "verify_every duplicate-step checksums — use run() for "
+                "those, or drop them from the config")
+        K = self.ft.drain_every
+        history = []
+        screen = screen_init(self.ft.gnorm_window)
+        while int(self.state["step"]) < n_steps:
+            step = int(self.state["step"])
+            if n_steps - step < K:
+                # ragged tail: finish on the per-step path (avoids a second
+                # trace for a partial block)
+                history.extend(self.run(n_steps))
+                break
+            batches = self.data.batch_block(np.arange(step, step + K))
+            thresholds = jnp.asarray(
+                [self.policy.loss_threshold, self.policy.gnorm_threshold],
+                jnp.float32)
+            new_state, new_screen, block = self.fused_steps(
+                self.state, screen, batches, thresholds)
+            block = jax.device_get(block)    # THE host sync: one per K steps
+            self.stats["drains"] += 1
+
+            suspects = np.asarray(block["suspect"])
+            if suspects.any():
+                i = int(np.argmax(suspects))
+                if bool(block["nonfinite"][i]):
+                    reason = "non-finite"
+                elif bool(block["gnorm_spike"][i]):
+                    reason = "grad-norm spike"
+                else:
+                    reason = "loss spike"
+                self.policy.on_detection(f"step {step + i}", reason)
+                self._rollback()
+                screen = screen_init(self.ft.gnorm_window)
+                continue
+
+            self.state = new_state
+            screen = new_screen
+            for i in range(K):
+                history.append({"step": step + i,
+                                "loss": float(block["loss"][i]),
+                                "gnorm": float(block["grad_norm"][i])})
+            # mirror the drained block into the host deques so the spike
+            # screens stay armed when a ragged tail falls back to run()
+            self.losses.extend(float(x) for x in block["loss"])
+            self.gnorms.extend(float(x) for x in block["grad_norm"])
+            self._maybe_checkpoint(step, step + K)
         return history

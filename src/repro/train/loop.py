@@ -75,3 +75,103 @@ def make_eval_step(model_cfg, fns) -> Callable:
     def eval_step(state, batch):
         return fns.loss_fn(state["params"], batch, model_cfg)
     return eval_step
+
+
+def make_fused_steps(model_cfg, fns, tcfg: TrainConfig,
+                     min_screen: int = 8, step_fn: Callable | None = None
+                     ) -> Callable:
+    """K train steps in one lax.scan with the SDC screens in-graph.
+
+    Returns fused(state, screen, batches, thresholds) -> (state, screen,
+    block): `batches` carries a leading K axis, `screen` is a
+    fault_tolerance.screen_init ring buffer, `thresholds` is a traced
+    (loss_thr, gnorm_thr) pair (widenable without recompile), and `block`
+    is the (K,)-shaped metrics + screen-flag bundle the host drains in ONE
+    transfer per K steps — the training twin of the serving engine's
+    token-block drain. jit with donate_argnums=(0, 1).
+
+    `step_fn` overrides the inner step (tests use it to inject faults).
+    """
+    from .fault_tolerance import screen_update
+    step_fn = step_fn or make_train_step(model_cfg, fns, tcfg)
+
+    def fused(state, screen, batches, thresholds):
+        def body(carry, batch):
+            state, screen = carry
+            state, m = step_fn(state, batch)
+            screen, flags = screen_update(
+                screen, m["loss"], m["grad_norm"],
+                thresholds[0], thresholds[1], min_screen)
+            out = {"loss": m["loss"], "grad_norm": m["grad_norm"],
+                   "lr_scale": m["lr_scale"], **flags}
+            return (state, screen), out
+        (state, screen), block = jax.lax.scan(body, (state, screen), batches)
+        return state, screen, block
+
+    return fused
+
+
+def _sds_of(tree):
+    return jax.tree.map(
+        lambda x: jax.ShapeDtypeStruct(jnp.shape(x), x.dtype), tree)
+
+
+def make_sharded_train_step(model_cfg, fns, tcfg: TrainConfig, mesh,
+                            example_batch, *, multi_pod: bool = False,
+                            fsdp: bool = True, donate: bool = True
+                            ) -> Callable:
+    """jit(make_train_step) with explicit in/out NamedShardings from
+    repro.distributed.sharding on the given mesh (launch/mesh.py), and the
+    state donated so params/opt buffers update in place.
+
+    Specs that don't divide on this mesh (e.g. the CPU test mesh) are
+    sanitized away, so the same call works from the 1-device container up
+    to the (2, 16, 16) production mesh.
+    """
+    from repro.distributed.sharding import (batch_specs, param_specs,
+                                            shardings_for, train_state_specs)
+    step = make_train_step(model_cfg, fns, tcfg)
+    state_sds = jax.eval_shape(
+        lambda: init_train_state(jax.random.PRNGKey(0), model_cfg, fns))
+    pspecs = param_specs(model_cfg, fsdp=fsdp, multi_pod=multi_pod)
+    state_sh = shardings_for(train_state_specs(pspecs), state_sds, mesh)
+    kind = "vlm" if "positions" in example_batch else "tokens"
+    batch_sh = shardings_for(batch_specs(kind, multi_pod),
+                             _sds_of(example_batch), mesh)
+    return jax.jit(step, in_shardings=(state_sh, batch_sh),
+                   out_shardings=(state_sh, None),
+                   donate_argnums=(0,) if donate else ())
+
+
+def make_sharded_fused_steps(model_cfg, fns, tcfg: TrainConfig, mesh,
+                             example_batch, *, drain_every: int,
+                             window: int = 32, min_screen: int = 8,
+                             multi_pod: bool = False, fsdp: bool = True
+                             ) -> Callable:
+    """jit(make_fused_steps) with explicit NamedShardings: state donated
+    and sharded like make_sharded_train_step, the screen ring replicated,
+    and the (K, ...) batch block sharded on its batch axes with the scan
+    axis unsharded."""
+    from jax.sharding import PartitionSpec as P
+    from repro.distributed.sharding import (batch_specs, param_specs,
+                                            prepend_axis, shardings_for,
+                                            train_state_specs)
+    from .fault_tolerance import screen_init
+    fused = make_fused_steps(model_cfg, fns, tcfg, min_screen)
+    state_sds = jax.eval_shape(
+        lambda: init_train_state(jax.random.PRNGKey(0), model_cfg, fns))
+    pspecs = param_specs(model_cfg, fsdp=fsdp, multi_pod=multi_pod)
+    state_sh = shardings_for(train_state_specs(pspecs), state_sds, mesh)
+    screen_sds = jax.eval_shape(lambda: screen_init(window))
+    screen_sh = shardings_for(jax.tree.map(lambda _: P(), screen_sds),
+                              screen_sds, mesh)
+    kind = "vlm" if "positions" in example_batch else "tokens"
+    block_sds = jax.tree.map(
+        lambda x: jax.ShapeDtypeStruct((drain_every,) + jnp.shape(x),
+                                       x.dtype), example_batch)
+    batch_sh = shardings_for(prepend_axis(batch_specs(kind, multi_pod)),
+                             block_sds, mesh)
+    return jax.jit(fused,
+                   in_shardings=(state_sh, screen_sh, batch_sh, None),
+                   out_shardings=(state_sh, screen_sh, None),
+                   donate_argnums=(0, 1))
