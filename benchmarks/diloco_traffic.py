@@ -1,10 +1,66 @@
-"""§3 (ref 41) DiLoCo: pod-axis (ISL) traffic vs synchronous DP, and what
-the §2.1 link budget supports at formation distances."""
+"""§3 (ref 41) DiLoCo: pod-axis (ISL) traffic vs synchronous DP, what the
+§2.1 link budget supports at formation distances, and the constellation-in-
+the-loop liveness profile (masked-round stats under orbital outages)."""
+import tempfile
 import time
 
 from repro.core.isl import OpticalTerminal
 from repro.models import registry
 from repro.train.diloco import isl_bytes_per_step
+
+CONSTELLATION_ROUNDS = 12
+
+
+def _constellation_stats():
+    """Micro DiLoCo run with pod masks derived from the orbital/ISL/
+    radiation stack: rounds survived, masked-pod fraction, loss under
+    orbital outages — plus the full-orbit mask profile."""
+    import jax
+    from repro.core.isl import ConstellationLinkModel, LivenessConfig
+    from repro.train import (AdamWConfig, DataConfig, DiLoCoConfig,
+                             DiLoCoSupervisor, FTConfig, SyntheticLM,
+                             TrainConfig, diloco_init, make_diloco_round,
+                             outer_wire_bytes)
+
+    cfg = registry.get_reduced_config(
+        "suncatcher-lm-100m", n_layers=2, d_model=32, n_heads=2,
+        n_kv_heads=1, d_ff=64, vocab_size=256)
+    fns = registry.model_fns(cfg)
+    tcfg = TrainConfig(adamw=AdamWConfig(lr=3e-3), warmup_steps=2,
+                       total_steps=200)
+    dcfg = DiLoCoConfig(n_pods=2, inner_steps=4)
+    data = SyntheticLM(DataConfig(vocab_size=cfg.vocab_size, seq_len=8,
+                                  global_batch=2))
+    params = fns.init(jax.random.PRNGKey(0), cfg)
+    model = ConstellationLinkModel(cfg=LivenessConfig(
+        n_pods=dcfg.n_pods, outer_wire_bytes=outer_wire_bytes(params)))
+    # exactly one orbit of rounds (n_rounds is in ROUNDS, not phase samples)
+    rounds_per_orbit = max(1, round(model.period / model.round_time_s))
+    _, orbit = model.mask_series(rounds_per_orbit)
+
+    rnd = make_diloco_round(cfg, fns, tcfg, dcfg, data=data,
+                            screen_window=16, supervise=True)
+    with tempfile.TemporaryDirectory() as d:
+        sup = DiLoCoSupervisor(
+            rnd, diloco_init(params, dcfg, screen_window=16), dcfg,
+            FTConfig(checkpoint_dirs=(d + "/a", d + "/b"),
+                     checkpoint_every=16),
+            liveness=model)
+        hist = sup.run(CONSTELLATION_ROUNDS)
+    n = dcfg.n_pods * len(hist)
+    return {
+        "rounds_survived": len(hist),
+        "masked_pod_fraction": sup.stats["masked_pod_rounds"] / n,
+        "straggler_pod_rounds": sup.stats["straggler_pod_rounds"],
+        "outage_pod_rounds": sup.stats["outage_pod_rounds"],
+        "mask_transitions": sup.stats["mask_transitions"],
+        "first_loss": hist[0]["loss"],
+        "last_loss": hist[-1]["loss"],
+        "orbit_masked_pod_fraction": orbit["masked_pod_fraction"],
+        "orbit_mask_transitions": orbit["mask_transitions"],
+        "round_time_s": orbit["round_time_s"],
+        "round_deadline_s": orbit["round_deadline_s"],
+    }
 
 
 def run():
@@ -25,8 +81,24 @@ def run():
     derived = (f"ISL@150m={isl_bps/1e12:.0f}Tbps; command-r sync sync-DP"
                f" {sync_s*1e3:.1f}ms/step vs DiLoCo(H=500,int8)"
                f" {diloco_s*1e3:.3f}ms/step ({cr[2]['reduction']:.0f}x)")
-    return [("diloco_isl_traffic", us, derived)], rows
+
+    t1 = time.time()
+    cst = _constellation_stats()
+    us_cst = (time.time() - t1) * 1e6 / CONSTELLATION_ROUNDS
+    derived_cst = (
+        f"{cst['rounds_survived']}/{CONSTELLATION_ROUNDS} rounds survived, "
+        f"{cst['masked_pod_fraction']:.0%} pod-rounds masked "
+        f"({cst['straggler_pod_rounds']} straggler/"
+        f"{cst['outage_pod_rounds']} outage), "
+        f"{cst['mask_transitions']} mask transitions, loss "
+        f"{cst['first_loss']:.2f}->{cst['last_loss']:.2f}; orbit profile "
+        f"{cst['orbit_masked_pod_fraction']:.0%} masked, "
+        f"{cst['orbit_mask_transitions']} transitions")
+    out = [("diloco_isl_traffic", us, derived),
+           ("diloco_constellation_liveness", us_cst, derived_cst)]
+    return out, {"traffic": rows, "constellation": cst}
 
 
 if __name__ == "__main__":
-    print(run()[0][0][2])
+    for _, _, derived in run()[0]:
+        print(derived)

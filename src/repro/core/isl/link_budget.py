@@ -70,17 +70,21 @@ class OpticalTerminal:
         a = d / 2.0
         return np.pi * a * a / self.wavelength_m
 
-    def received_power_w(self, distance_m):
+    def received_power_w(self, distance_m, gain=None):
         """Friis far-field received power, clamped to the near-field plateau.
 
         For d below the confocal distance essentially all transmitted power is
         captured (up to efficiency/other losses), so P_r saturates there.
+        `gain` overrides the antenna gain on both ends (the spatial-mux path
+        passes the D/n sub-aperture gain); the near-field plateau depends
+        only on efficiency, not aperture.
         """
         distance_m = np.asarray(distance_m, dtype=float)
-        g = self.antenna_gain
+        g = self.antenna_gain if gain is None else gain
         l_other = 10.0 ** (self.other_losses_db / 10.0)
-        pr_far = (self.tx_power_w * g * g * l_other *
-                  (self.wavelength_m / (4.0 * np.pi * distance_m)) ** 2)
+        with np.errstate(divide="ignore", invalid="ignore"):
+            pr_far = (self.tx_power_w * g * g * l_other *
+                      (self.wavelength_m / (4.0 * np.pi * distance_m)) ** 2)
         pr_near = (self.tx_power_w * self.aperture_efficiency ** 2 * l_other)
         return np.minimum(pr_far, pr_near)
 
@@ -122,23 +126,27 @@ class OpticalTerminal:
         return np.maximum(n, 1.0)
 
     def aggregate_bandwidth_bps(self, distance_m,
-                                channels: int = DWDM_CHANNELS_100GHZ):
+                                channels: int = DWDM_CHANNELS_100GHZ,
+                                rate_per_channel: float = DWDM_RATE_PER_CHANNEL,
+                                power_per_channel: float = DWDM_POWER_PER_CHANNEL):
         """Aggregate per-link bandwidth with spatial multiplexing (Fig. 1):
-        n(d)^2 parallel DWDM streams through D/n sub-apertures."""
+        n(d)^2 parallel DWDM streams through D/n sub-apertures.
+
+        Fully vectorized: the n x n array of D/n sub-apertures is inlined as
+        a gain rescale (each sub-link carries its own EDFA power budget, per
+        the per-terminal transceiver bank), so an (N, N) bandwidth matrix
+        costs one array expression instead of N^2 terminal constructions.
+        """
         distance_m = np.asarray(distance_m, dtype=float)
         n = self.spatial_mux_count(distance_m)
-        sub = OpticalTerminal(self.aperture_m / 1.0, self.tx_power_w,
-                              self.wavelength_m, self.aperture_efficiency,
-                              self.other_losses_db)
-        # each sub-link carries its own EDFA power budget (per-terminal bank)
-        rates = []
-        for ni, di in zip(np.atleast_1d(n), np.atleast_1d(distance_m)):
-            t = OpticalTerminal(self.aperture_m / ni, self.tx_power_w,
-                                self.wavelength_m, self.aperture_efficiency,
-                                self.other_losses_db)
-            rates.append(ni * ni * t.dwdm_rate_bps(di, channels))
-        out = np.array(rates)
-        return out[0] if np.ndim(distance_m) == 0 else out
+        # sub-aperture gain eta * (pi (D/n) / lambda)^2 through the one
+        # shared link-budget formula
+        g = self.aperture_efficiency * (
+            np.pi * self.aperture_m / (n * self.wavelength_m)) ** 2
+        pr = self.received_power_w(distance_m, gain=g)
+        feasible = np.floor(pr / power_per_channel)
+        out = n * n * np.minimum(feasible, channels) * rate_per_channel
+        return float(out) if np.ndim(distance_m) == 0 else out
 
 
 def required_pointing_accuracy_rad(aperture_m: float = 0.10,

@@ -37,16 +37,28 @@ class ISLNetwork:
         return bw
 
     def neighbor_graph(self, positions: np.ndarray, k: int = 8):
-        """k-nearest-neighbor ISL graph: (edges (E,2), bandwidth (E,))."""
+        """k-nearest-neighbor ISL graph: (edges (E,2), bandwidth (E,)).
+
+        kNN is asymmetric (j may be in i's k-nearest without i being in
+        j's), so the edge set is the symmetrized UNION of every row's
+        k-nearest: a terminal pair exists as soon as either side points at
+        the other. Filtering each row's own argsort with `i < j` instead
+        (the old behavior) silently dropped real links at the lattice
+        edges/corners, where a satellite's nearest neighbors are not
+        mutual. Edges are returned with i < j, sorted, deduplicated.
+        """
         d = self.distance_matrix(positions)
         bw = self.bandwidth_matrix(positions)
-        edges, caps = [], []
-        for i in range(d.shape[0]):
-            for j in np.argsort(d[i])[:k]:
-                if i < j:
-                    edges.append((i, int(j)))
-                    caps.append(bw[i, int(j)])
-        return np.array(edges), np.array(caps)
+        n = d.shape[0]
+        k = min(k, n - 1)
+        nn = np.argsort(d, axis=1, kind="stable")[:, :k]
+        rows = np.repeat(np.arange(n), k)
+        cols = nn.ravel()
+        pairs = np.stack([np.minimum(rows, cols), np.maximum(rows, cols)],
+                         axis=1)
+        edges = np.unique(pairs, axis=0)
+        caps = bw[edges[:, 0], edges[:, 1]]
+        return edges, caps
 
     def worst_link_over_orbit(self, hill_positions: np.ndarray, k: int = 8):
         """Min over time of the per-satellite aggregate neighbor bandwidth.
@@ -77,9 +89,12 @@ def pod_axis_bandwidth_bytes(positions: np.ndarray | None = None,
     """
     if positions is not None:
         net = ISLNetwork()
-        bw = net.bandwidth_matrix(positions)
-        finite = bw[np.isfinite(bw) & (bw > 0)]
-        link = float(np.min(finite)) if conservative else float(np.mean(finite))
+        # budget against the neighbor graph actually routed over, NOT all
+        # N^2 pairs: the old all-pairs min was the ~2.2 km corner-to-corner
+        # pair of the 81-sat cluster, a link no collective ever crosses
+        _, caps = net.neighbor_graph(positions)
+        caps = caps[np.isfinite(caps) & (caps > 0)]
+        link = float(np.min(caps)) if conservative else float(np.mean(caps))
         return link / 8.0
     link = 9.6e12 if conservative else 4 * 4 * 9.6e12
     return link / 8.0

@@ -11,80 +11,85 @@ TPU cluster the same driver takes the full config + production mesh.
   # outer sync on the FSO wire hop
   PYTHONPATH=src python -m repro.launch.train --arch granite-moe-1b-a400m \
       --steps 50 --diloco-pods 2 --inner-steps 8 --compress int8
+
+  # constellation-in-the-loop: pod liveness derived from the orbital/ISL/
+  # radiation stack (cluster breathing -> straggler masking, SEFI/UECC
+  # outages -> repair windows), per-pod in-graph rollback
+  PYTHONPATH=src python -m repro.launch.train --arch suncatcher-lm-100m \
+      --steps 50 --diloco-pods 2 --constellation
 """
 import argparse
+import os
 import tempfile
 
 import jax
-import jax.numpy as jnp
-import numpy as np
 
 from repro.core.radiation import RadiationEnvironment, SDCInjector
 from repro.launch.mesh import mesh_for
 from repro.models import registry
-from repro.train import (AdamWConfig, DataConfig, DetectionPolicy,
-                         DiLoCoConfig, FTConfig, FaultTolerantTrainer,
+from repro.train import (AdamWConfig, DataConfig, DiLoCoConfig,
+                         DiLoCoSupervisor, FTConfig, FaultTolerantTrainer,
                          SyntheticLM, TrainConfig, diloco_init,
                          init_train_state, isl_bytes_per_step,
                          make_diloco_round, make_fused_steps,
                          make_sharded_fused_steps, make_sharded_train_step,
-                         make_train_step, outer_wire_bytes, pod_step_grid)
+                         make_train_step, outer_wire_bytes)
 
 
 def _run_diloco(args, cfg, fns, tcfg, data):
-    """Device-resident DiLoCo rounds with in-graph screens; the host drains
-    one (n_pods, H) metrics block per round and keeps a rollback snapshot."""
+    """Device-resident DiLoCo rounds under the DiLoCoSupervisor: per-pod
+    in-graph rollback, replicated async checkpoints, and (with
+    --constellation) pod masks derived from the orbital/ISL/radiation
+    stack instead of a hand-fed constant."""
     dcfg = DiLoCoConfig(n_pods=args.diloco_pods,
                         inner_steps=args.inner_steps)
     compress = None if args.compress == "none" else args.compress
     mesh = mesh_for(args.mesh)
-    ft = FTConfig()
     params = fns.init(jax.random.PRNGKey(0), cfg)
+    ft_proto = FTConfig()
     d_state = diloco_init(params, dcfg, compress=compress,
-                          screen_window=ft.gnorm_window)
+                          screen_window=ft_proto.gnorm_window)
     rnd = make_diloco_round(cfg, fns, tcfg, dcfg, compress=compress,
-                            data=data, screen_window=ft.gnorm_window,
-                            min_screen=ft.min_screen, mesh=mesh)
-    mask = jnp.ones((dcfg.n_pods,), jnp.float32)
-    policy = DetectionPolicy(ft)
+                            data=data, screen_window=ft_proto.gnorm_window,
+                            min_screen=ft_proto.min_screen, mesh=mesh,
+                            supervise=True)
+    wire = outer_wire_bytes(params, compress)
+
+    liveness = None
+    if args.constellation:
+        from repro.core.isl import ConstellationLinkModel, LivenessConfig
+        liveness = ConstellationLinkModel(cfg=LivenessConfig(
+            n_pods=dcfg.n_pods, outer_wire_bytes=wire,
+            round_time_s=args.round_time_s,
+            round_deadline_s=args.round_deadline_s,
+            outage_rate_multiplier=args.outage_rate_multiplier))
 
     n_rounds = -(-args.steps // dcfg.inner_steps)
-    snap_every = max(1, ft.checkpoint_every // dcfg.inner_steps)
-    snap = jax.tree.map(np.asarray, d_state)
-    snap_round = 0
-    stats = {"rollbacks": 0, "drains": 0}
-    mean_losses = []
-    r = 0
-    while r < n_rounds:
-        grid = pod_step_grid(r, dcfg.n_pods, dcfg.inner_steps)
-        thresholds = jnp.asarray(
-            [policy.loss_threshold, policy.gnorm_threshold], jnp.float32)
-        d_state, metrics = rnd(d_state, jnp.asarray(grid), mask, thresholds)
-        metrics = jax.device_get(metrics)   # the ONE host sync per round
-        stats["drains"] += 1
-        if metrics["suspect"].any():
-            policy.on_detection(
-                f"round {r}", "non-finite" if metrics["nonfinite"].any()
-                else "spike")
-            stats["rollbacks"] += 1
-            d_state = jax.device_put(snap)
-            r = snap_round
-            continue
-        mean_losses.append(float(metrics["loss"].mean()))
-        r += 1
-        if r % snap_every == 0:
-            snap = jax.tree.map(np.asarray, d_state)
-            snap_round = r
-    stats.update(policy.stats)
+    forced = ([args.force_rollback_at]
+              if args.force_rollback_at is not None else None)
+    with tempfile.TemporaryDirectory() as d:
+        ft = FTConfig(checkpoint_dirs=(os.path.join(d, "replica-a"),
+                                       os.path.join(d, "replica-b")))
+        sup = DiLoCoSupervisor(rnd, d_state, dcfg, ft, liveness=liveness)
+        hist = sup.run(n_rounds, forced_rollback_at=forced)
+    stats = {k: v for k, v in sup.stats.items() if v}
 
     acct = isl_bytes_per_step(cfg.param_count(), dcfg.inner_steps, compress)
-    wire = outer_wire_bytes(params, compress)
+    losses = sup.mean_losses
     print(f"{cfg.name}: DiLoCo {dcfg.n_pods} pods x H={dcfg.inner_steps}, "
-          f"{n_rounds} rounds, mean pod loss "
-          f"{mean_losses[0]:.3f} -> {mean_losses[-1]:.3f}, stats {stats}")
+          f"{len(hist)} rounds, mean pod loss "
+          f"{losses[0]:.3f} -> {losses[-1]:.3f}, stats {stats}")
     print(f"  ISL wire: {wire/1e6:.2f} MB/pod/outer-sync "
           f"({args.compress}), {acct['reduction']:.0f}x less pod-axis "
           f"traffic than sync DP")
+    if liveness is not None:
+        masked = sup.stats["masked_pod_rounds"] / (n_rounds * dcfg.n_pods)
+        print(f"  constellation: round_time {liveness.round_time_s:.0f}s, "
+              f"deadline {liveness.round_deadline_s:.2e}s, "
+              f"{sup.stats['mask_transitions']} mask transitions, "
+              f"{masked:.0%} pod-rounds masked "
+              f"({sup.stats['straggler_pod_rounds']} straggler, "
+              f"{sup.stats['outage_pod_rounds']} outage)")
 
 
 def _run_supervised(args, cfg, fns, tcfg, data):
@@ -154,6 +159,24 @@ def main():
     ap.add_argument("--drain-every", type=int, default=8,
                     help="metrics-block drain cadence K (1 = seed-style "
                          "per-step host loop)")
+    ap.add_argument("--constellation", action="store_true",
+                    help="derive DiLoCo pod masks from the orbital/ISL/"
+                         "radiation stack (cluster breathing + SEFI/UECC "
+                         "outages) instead of a hand-fed constant")
+    ap.add_argument("--round-deadline-s", type=float, default=None,
+                    help="outer-sync deadline; a pod whose cross-pod ISL "
+                         "transfer exceeds it is masked as a straggler "
+                         "(default: auto percentile over the orbit)")
+    ap.add_argument("--round-time-s", type=float, default=None,
+                    help="wall time one DiLoCo round maps to on the orbit "
+                         "(default: period/16, sweeping the full orbit in "
+                         "a smoke run)")
+    ap.add_argument("--outage-rate-multiplier", type=float, default=1.0,
+                    help="scale on the measured SEFI+HBM-UECC restart "
+                         "rates feeding the outage model")
+    ap.add_argument("--force-rollback-at", type=int, default=None,
+                    help="force ONE whole-round rollback at this round "
+                         "(exercises the bit-deterministic replay path)")
     args = ap.parse_args()
 
     cfg = (registry.get_config(args.arch) if args.full

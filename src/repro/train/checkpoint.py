@@ -95,6 +95,19 @@ def save_async(state, directory: str, step: int, keep: int = 3):
     return t
 
 
+def save_replicated_async(state, directories, step: int, keep: int = 3):
+    """Replicated `save_async`: one serializer thread per replica directory
+    (in orbit: distinct satellites), sharing a single device->host copy.
+    Returns the Threads (join() to wait)."""
+    state = jax.tree.map(np.asarray, state)
+    threads = []
+    for d in directories:
+        t = threading.Thread(target=save, args=(state, d, step, keep))
+        t.start()
+        threads.append(t)
+    return threads
+
+
 def _prune(directory: str, keep: int):
     # save_async threads race each other here: a directory listed by this
     # thread may already have been pruned (or renamed away) by another, so
@@ -114,14 +127,18 @@ def _prune(directory: str, keep: int):
 def _verify_and_load(path: str):
     with open(os.path.join(path, "metadata.json")) as f:
         meta = json.load(f)
-    data = np.load(os.path.join(path, "arrays.npz"))
-    out = {}
-    for key, arr in data.items():
-        digest = hashlib.sha256(
-            np.ascontiguousarray(arr).tobytes()).hexdigest()
-        if digest != meta["checksums"][key]:
-            raise IOError(f"checksum mismatch in {path}:{key}")
-        out[key] = arr
+    # close the npz (it holds an open fd): the per-pod rollback path
+    # restores far more often than whole-run rollback ever did, and leaked
+    # handles also pin pruned checkpoint dirs' disk space
+    with np.load(os.path.join(path, "arrays.npz")) as data:
+        out = {}
+        for key in data.files:
+            arr = data[key]
+            digest = hashlib.sha256(
+                np.ascontiguousarray(arr).tobytes()).hexdigest()
+            if digest != meta["checksums"][key]:
+                raise IOError(f"checksum mismatch in {path}:{key}")
+            out[key] = arr
     return meta["step"], out
 
 

@@ -216,7 +216,8 @@ def outer_step(d_state, dcfg: DiLoCoConfig, pod_mask=None,
 def make_diloco_round(model_cfg, fns, tcfg: TrainConfig, dcfg: DiLoCoConfig,
                       *, compress: str | None = None, topk_frac: float = 0.01,
                       data=None, screen_window: int = 0, min_screen: int = 8,
-                      mesh=None, fsdp: bool = True, donate: bool = True):
+                      mesh=None, fsdp: bool = True, donate: bool = True,
+                      supervise: bool = False):
     """ONE jitted, donated DiLoCo round — the device-resident training twin
     of the serving engine's fused decode block.
 
@@ -239,6 +240,23 @@ def make_diloco_round(model_cfg, fns, tcfg: TrainConfig, dcfg: DiLoCoConfig,
     repro.distributed.sharding (pod replicas on "pod", FSDP on "data",
     tensor-parallel on "model"), sanitized so the same builder runs on the
     1-device CPU container and the (2, 16, 16) production mesh.
+
+    supervise=True is the DiLoCoSupervisor contract — PER-POD rollback,
+    entirely in-graph:
+      - a pod any of whose inner steps tripped a screen is excluded from
+        the outer average (its corrupted delta never touches the outer
+        state) and rejoins on the re-broadcast global params, exactly as
+        if the host had rolled the round back and replayed it with that
+        pod masked — but with zero extra host syncs or snapshots;
+      - the flagged pod's error-feedback residual, inner optimizer
+        moments, and screen ring buffer are reset (its own state is
+        suspect and would otherwise carry the corruption — NaN Adam
+        moments especially — into the next round; a merely-unreachable
+        pod keeps all three);
+      - metrics gain "pod_bad" (n_pods,), "pod_alive" (the effective mask
+        the outer step used) and "outer_ok" (global params + outer
+        momentum all-finite) — the supervisor escalates to a whole-round
+        rollback only when outer_ok is False.
     """
     inner = _make_pod_inner(model_cfg, fns, tcfg,
                             collect=lambda m: (m["loss"], m["grad_norm"]))
@@ -268,9 +286,41 @@ def make_diloco_round(model_cfg, fns, tcfg: TrainConfig, dcfg: DiLoCoConfig,
             flags = {"nonfinite": nonfinite, "loss_spike": no,
                      "gnorm_spike": no, "suspect": nonfinite}
 
-        d_state = outer_step(d_state, dcfg, pod_mask, compress=compress,
+        metrics = {"loss": losses, "grad_norm": gnorms, **flags}
+        eff_mask = pod_mask
+        if supervise:
+            pod_bad = jnp.any(flags["suspect"], axis=1)
+            eff_mask = pod_mask * (1.0 - pod_bad.astype(jnp.float32))
+        d_state = outer_step(d_state, dcfg, eff_mask, compress=compress,
                              topk_frac=topk_frac)
-        return d_state, {"loss": losses, "grad_norm": gnorms, **flags}
+        if supervise:
+            def reset_rows(tree, init_row=None):
+                def per_leaf(x, i=None):
+                    w = pod_bad.reshape((-1,) + (1,) * (x.ndim - 1))
+                    zero = jnp.zeros_like(x) if i is None else \
+                        jnp.broadcast_to(i.astype(x.dtype), x.shape)
+                    return jnp.where(w, zero, x)
+                if init_row is None:
+                    return jax.tree.map(per_leaf, tree)
+                return jax.tree.map(per_leaf, tree, init_row)
+
+            # pod_opt zeros == a fresh init_opt_state row: the rejoining
+            # pod restarts from the re-broadcast globals with clean moments
+            d_state = {**d_state, "pod_opt": reset_rows(d_state["pod_opt"])}
+            if "pod_ef" in d_state:
+                d_state = {**d_state, "pod_ef": reset_rows(d_state["pod_ef"])}
+            if screen_window:
+                init = jax.tree.map(lambda x: x[None],
+                                    screen_init(screen_window))
+                d_state = {**d_state,
+                           "screen": reset_rows(d_state["screen"], init)}
+            outer_ok = jnp.stack(
+                [jnp.all(jnp.isfinite(x.astype(jnp.float32)))
+                 for x in (jax.tree.leaves(d_state["global_params"])
+                           + jax.tree.leaves(d_state["outer_m"]))]).all()
+            metrics.update(pod_bad=pod_bad, pod_alive=eff_mask,
+                           outer_ok=outer_ok)
+        return d_state, metrics
 
     donate_args = (0,) if donate else ()
     if mesh is None:

@@ -41,6 +41,7 @@ import numpy as np
 
 from repro.core.radiation import RadiationEnvironment, SDCInjector
 from . import checkpoint as ckpt
+from .data import pod_step_grid
 
 
 @dataclass
@@ -324,3 +325,203 @@ class FaultTolerantTrainer:
             self.gnorms.extend(float(x) for x in block["grad_norm"])
             self._maybe_checkpoint(step, step + K)
         return history
+
+
+class DiLoCoSupervisor:
+    """Constellation-in-the-loop DiLoCo supervisor.
+
+    Replaces the launcher's ad-hoc round loop. Per round it:
+      1. derives the pod liveness mask from the orbital/ISL/radiation state
+         (a `repro.core.isl.liveness.ConstellationLinkModel`; None = all
+         pods always live) — the mask is a pure function of the round id,
+         so rollback replay regenerates it bit-exactly;
+      2. runs ONE donated jitted round (`make_diloco_round(...,
+         supervise=True)`) and drains its (n_pods, H) metrics block — the
+         single host sync;
+      3. relies on the round's IN-GRAPH per-pod rollback: a flagged pod was
+         already excluded from the outer average, re-broadcast from the
+         global params, and had its EF residual + screen reset — the host
+         only does the bookkeeping (DetectionPolicy livelock handling:
+         a pod flagged past the consecutive cap widens the spike
+         thresholds; persistently non-finite raises);
+      4. escalates to a WHOLE-round rollback only when the outer state
+         itself is suspect (`outer_ok` False — the in-graph masking means
+         a corrupted pod cannot normally reach it) or when a rollback is
+         forced: restores the host snapshot, truncates the loss history
+         back to the snapshot round (the old launcher re-appended replayed
+         rounds, skewing the printed first->last loss), and verifies the
+         replayed rounds' losses bit-exactly against the truncated tail;
+      5. snapshots on the checkpoint cadence: host snapshot for rollback +
+         replicated `save_replicated`/`save_async`-style background writes
+         off the drain boundary (`checkpoint.save_replicated_async`).
+    """
+
+    def __init__(self, round_fn, d_state, dcfg, ft: FTConfig,
+                 liveness=None, grid_fn=None):
+        self.round_fn = round_fn
+        self.d_state = d_state
+        self.dcfg = dcfg
+        self.ft = ft
+        self.liveness = liveness
+        self.grid_fn = grid_fn or (lambda r: jnp.asarray(
+            pod_step_grid(r, dcfg.n_pods, dcfg.inner_steps), jnp.int32))
+        self.stats = {
+            "drains": 0, "rollbacks": 0, "pod_rollbacks": 0,
+            "masked_pod_rounds": 0, "straggler_pod_rounds": 0,
+            "outage_pod_rounds": 0, "mask_transitions": 0,
+            "checkpoints": 0, "replay_verified_rounds": 0,
+            "replay_mismatches": 0, "sdc_detected": 0,
+            "threshold_widenings": 0}
+        self.policy = DetectionPolicy(ft, self.stats)
+        self.history = []            # one dict per completed round
+        self.round = 0
+        self._outer_consec = 0       # consecutive outer-suspect rollbacks
+        self._last_outer_round = None
+        self._replayed_until = 0     # rounds below this are replays
+        self._ckpt_threads = []
+        self._snap_round = 0
+        self._snap = jax.tree.map(np.asarray, d_state)
+        self._save_replicated()
+
+    @property
+    def mean_losses(self):
+        return [h["loss"] for h in self.history]
+
+    def _save_replicated(self):
+        for t in self._ckpt_threads:   # bound thread pileup to one cadence
+            t.join()
+        self._ckpt_threads = ckpt.save_replicated_async(
+            self._snap, self.ft.checkpoint_dirs,
+            int(np.asarray(self._snap["step"])), self.ft.keep)
+        self.stats["checkpoints"] += len(self.ft.checkpoint_dirs)
+
+    def _mask_for(self, r: int):
+        if self.liveness is None:
+            return np.ones(self.dcfg.n_pods, np.float32), None
+        return self.liveness.mask_at(r)
+
+    def _whole_round_rollback(self, expected: dict):
+        """Restore the snapshot; stash the truncated history tail so the
+        bit-deterministic replay can be verified against it."""
+        self.stats["rollbacks"] += 1
+        self._replayed_until = max(self._replayed_until, self.round)
+        for h in self.history[self._snap_round:]:
+            expected[h["round"]] = (h["loss_bytes"], h["thresholds"])
+        del self.history[self._snap_round:]
+        self.d_state = jax.device_put(self._snap)
+        self.round = self._snap_round
+
+    def restore_from_checkpoint(self):
+        """Restart-class (SEFI/UECC) recovery path: newest verifiable
+        replica wins, the round counter follows the restored step."""
+        template = jax.tree.map(np.asarray, self._snap)
+        step, state = ckpt.restore_latest(template, self.ft.checkpoint_dirs)
+        self._snap = state
+        self._snap_round = int(step) // self.dcfg.inner_steps
+        self.d_state = jax.device_put(state)
+        self.round = self._snap_round
+        del self.history[self._snap_round:]
+        return self._snap_round
+
+    def run(self, n_rounds: int, forced_rollback_at=None):
+        """Run to `n_rounds`, deriving masks per round. forced_rollback_at:
+        iterable of round ids at which a whole-round rollback is forced
+        once (exercises the rollback/replay path deterministically)."""
+        forced = set(forced_rollback_at or ())
+        expected = {}                 # round -> stashed (loss_bytes, thr)
+        n_pods = self.dcfg.n_pods
+        snap_every = max(1, self.ft.checkpoint_every
+                         // self.dcfg.inner_steps)
+        while self.round < n_rounds:
+            r = self.round
+            mask_np, info = self._mask_for(r)
+            thr = (self.policy.loss_threshold, self.policy.gnorm_threshold)
+            self.d_state, metrics = self.round_fn(
+                self.d_state, self.grid_fn(r),
+                jnp.asarray(mask_np, jnp.float32),
+                jnp.asarray(thr, jnp.float32))
+            metrics = jax.device_get(metrics)   # the ONE sync per round
+            self.stats["drains"] += 1
+
+            outer_ok = bool(np.asarray(metrics.get("outer_ok", True)))
+            if not outer_ok or r in forced:
+                forced.discard(r)
+                if not outer_ok:
+                    # supervisor-side livelock cap: DetectionPolicy's
+                    # consecutive-label tracking can be defeated by a
+                    # per-pod detection interleaving between successive
+                    # outer detections during replay, so persistent outer
+                    # corruption is counted (and raised) here directly
+                    self._outer_consec = (self._outer_consec + 1
+                                          if r == self._last_outer_round
+                                          else 1)
+                    self._last_outer_round = r
+                    if self._outer_consec > self.ft.max_rollbacks_per_step:
+                        raise RuntimeError(
+                            f"persistent outer-state corruption at round "
+                            f"{r} after {self._outer_consec - 1} "
+                            "rollbacks: replay is bit-deterministic, so "
+                            "this is divergence, not transient SDC")
+                    self.policy.on_detection(f"round {r}", "non-finite")
+                self._whole_round_rollback(expected)
+                continue
+
+            pod_bad = np.asarray(
+                metrics.get("pod_bad", np.zeros(n_pods, bool)))
+            nonfinite = np.asarray(metrics["nonfinite"])
+            if r >= self._replayed_until:
+                # replays of already-counted rounds deterministically trip
+                # the same screens: count (and advance the livelock
+                # policy on) fresh evidence only
+                for p in np.nonzero(pod_bad)[0]:
+                    self.stats["pod_rollbacks"] += 1
+                    self.policy.on_detection(
+                        f"pod {int(p)}",
+                        "non-finite" if nonfinite[p].any() else "spike")
+
+            alive = np.asarray(metrics.get("pod_alive", mask_np))
+            loss = np.asarray(metrics["loss"])
+            # the recorded/printed loss must survive a survived fault:
+            # flagged pods' rows are NaN-prone and were excluded from the
+            # outer state, so exclude them from the headline mean too
+            good = ~pod_bad
+            loss_mean = (float(loss[good].mean()) if good.any()
+                         else float("nan"))
+            stash = expected.pop(r, None)
+            if stash is not None and stash[1] == thr:
+                self.stats["replay_verified_rounds"] += 1
+                if stash[0] != loss.tobytes():
+                    self.stats["replay_mismatches"] += 1
+            self.history.append({
+                "round": r, "loss": loss_mean,
+                "alive": alive.astype(np.float32),
+                "straggler": (int(info["straggler"].sum())
+                              if info is not None else 0),
+                "outage": (int(info["outage"].sum())
+                           if info is not None else 0),
+                "loss_bytes": loss.tobytes(), "thresholds": thr})
+            self.round = r + 1
+            if self.round % snap_every == 0:
+                self._snap = jax.tree.map(np.asarray, self.d_state)
+                self._snap_round = self.round
+                self._save_replicated()
+        for t in self._ckpt_threads:
+            t.join()
+        self._finalize_mask_stats()
+        return self.history
+
+    def _finalize_mask_stats(self):
+        """Mask accounting from the (rollback-truncated) history: replayed
+        rounds must not double-count, so these are derived, not summed
+        incrementally."""
+        n_pods = self.dcfg.n_pods
+        alive = np.array([h["alive"] for h in self.history]) \
+            if self.history else np.zeros((0, n_pods), np.float32)
+        self.stats["masked_pod_rounds"] = int(
+            (n_pods - alive.sum(axis=1)).sum())
+        self.stats["straggler_pod_rounds"] = sum(h["straggler"]
+                                                 for h in self.history)
+        self.stats["outage_pod_rounds"] = sum(h["outage"]
+                                              for h in self.history)
+        self.stats["mask_transitions"] = int(
+            (alive[1:] != alive[:-1]).sum()) if len(alive) > 1 else 0

@@ -79,6 +79,15 @@ class TestLinkBudget:
         assert bw_results[1] == pytest.approx(16 * 9.6e12)
         assert bw_results[2] == pytest.approx(64 * 9.6e12)
 
+    def test_aggregate_bandwidth_vectorized_matches_scalar(self, term):
+        """The vectorized path (used for whole (N, N) matrices) must agree
+        with per-distance evaluation, including the far-field tail."""
+        ds = np.array([79.0, 316.0, 1.25e3, 4e3, 2e5, 1e6])
+        vec = term.aggregate_bandwidth_bps(ds)
+        assert vec.shape == ds.shape
+        for d, v in zip(ds, vec):
+            assert v == term.aggregate_bandwidth_bps(float(d))
+
 
 class TestTopology:
     def test_formation_distances_support_full_stack(self):
@@ -99,3 +108,63 @@ class TestTopology:
         bw = ISLNetwork().bandwidth_matrix(pos)
         np.testing.assert_allclose(bw, bw.T)
         assert (np.diag(bw) == 0).all()
+
+    def test_neighbor_graph_symmetrizes_asymmetric_knn(self):
+        """Regression: kNN is asymmetric, and the old per-row `i < j`
+        filter dropped link (i, j) whenever j was in i's k-nearest but not
+        vice versa. On a sheared 3x3 lattice (100 m x, 200 m y — the HCW
+        2:1 shape) with k=3 that silently loses three real terminals."""
+        xs, ys = np.meshgrid(np.arange(3) * 100.0, np.arange(3) * 200.0,
+                             indexing="ij")
+        pos = np.stack([xs.ravel(), ys.ravel(), np.zeros(9)], axis=-1)
+        net = ISLNetwork()
+        d = net.distance_matrix(pos)
+        k = 3
+        edges, caps = net.neighbor_graph(pos, k=k)
+        assert len(caps) == len(edges)
+        assert (edges[:, 0] < edges[:, 1]).all()        # normalized
+        eset = {tuple(e) for e in edges}
+        # union property: every row's own k-nearest must be present
+        for i in range(9):
+            for j in np.argsort(d[i])[:k]:
+                assert (min(i, int(j)), max(i, int(j))) in eset
+        old = {(i, int(j)) for i in range(9)
+               for j in np.argsort(d[i], kind="stable")[:k] if i < int(j)}
+        assert old < eset                                # strictly more
+
+    def test_neighbor_graph_9x9_retains_physical_neighbors(self):
+        """Acceptance: on the paper's 9x9 lattice every satellite keeps
+        its direct formation links (the edges the pod fabric routes over)
+        in the symmetrized k=8 graph."""
+        import jax
+        jax.config.update("jax_enable_x64", True)
+        from repro.core.orbital import ClusterDesign, hcw_state
+        d = ClusterDesign()
+        pos = np.asarray(hcw_state(d.alpha_beta(), d.n, 0.0)[..., :3])
+        edges, _ = ISLNetwork().neighbor_graph(pos, k=8)
+        eset = {tuple(e) for e in edges}
+        for r in range(9):
+            for c in range(9):
+                i = r * 9 + c
+                for rr, cc in ((r + 1, c), (r, c + 1)):
+                    if rr < 9 and cc < 9:
+                        j = rr * 9 + cc
+                        assert (min(i, j), max(i, j)) in eset, (i, j)
+
+    def test_pod_axis_conservative_is_worst_neighbor_link(self):
+        """Regression: the conservative pod-axis figure must be the worst
+        routed (neighbor-graph) link, not the ~2.2 km corner-to-corner
+        pair of the all-pairs matrix that nothing routes over."""
+        import jax
+        jax.config.update("jax_enable_x64", True)
+        from repro.core.isl import pod_axis_bandwidth_bytes
+        from repro.core.orbital import ClusterDesign, hcw_state
+        d = ClusterDesign()
+        pos = np.asarray(hcw_state(d.alpha_beta(), d.n, 0.0)[..., :3])
+        net = ISLNetwork()
+        _, caps = net.neighbor_graph(pos, k=8)
+        got = pod_axis_bandwidth_bytes(pos)
+        assert got == caps.min() / 8.0
+        bw = net.bandwidth_matrix(pos)
+        all_pairs_worst = bw[np.isfinite(bw) & (bw > 0)].min() / 8.0
+        assert got > all_pairs_worst

@@ -11,9 +11,10 @@ import pytest
 from _hyp import given, settings, st
 
 from repro.models import registry
-from repro.train import (AdamWConfig, DataConfig, DiLoCoConfig, FTConfig,
-                         FaultTolerantTrainer, SyntheticLM, TrainConfig,
-                         diloco_init, init_train_state, make_diloco_round,
+from repro.train import (AdamWConfig, DataConfig, DiLoCoConfig,
+                         DiLoCoSupervisor, FTConfig, FaultTolerantTrainer,
+                         SyntheticLM, TrainConfig, diloco_init,
+                         init_train_state, make_diloco_round,
                          make_fused_steps, make_inner_steps,
                          make_sharded_train_step, make_train_step,
                          outer_step, screen_init, screen_update)
@@ -481,6 +482,178 @@ class TestDiLoCoFused:
         leaf = jax.tree.leaves(d0["pod_params"])[0]
         assert leaf.is_deleted()
         assert int(d1["step"]) == dcfg.inner_steps
+
+
+class TestDiLoCoSupervisor:
+    """Constellation-in-the-loop supervisor: in-graph per-pod rollback,
+    whole-round rollback only for suspect outer state, bit-deterministic
+    replay."""
+
+    def test_forced_rollback_replay_bit_identical(self, tmp_path):
+        """A whole-round rollback replays bit-deterministically: final
+        state and loss history identical to an uninterrupted run, and the
+        history is truncated at the snapshot round (regression: the old
+        launcher loop re-appended replayed rounds to mean_losses, skewing
+        the printed first->last loss)."""
+        cfg, fns, tcfg, dcfg, data, params = _micro_diloco_setup()
+        rnd = make_diloco_round(cfg, fns, tcfg, dcfg, data=data,
+                                screen_window=16, supervise=True)
+
+        def mk(sub):
+            ft = FTConfig(checkpoint_dirs=(str(tmp_path / sub / "a"),
+                                           str(tmp_path / sub / "b")),
+                          checkpoint_every=8)
+            return DiLoCoSupervisor(
+                rnd, diloco_init(params, dcfg, screen_window=16), dcfg, ft)
+
+        s1 = mk("clean")
+        h1 = s1.run(6)
+        s2 = mk("forced")
+        h2 = s2.run(6, forced_rollback_at=[3])
+        _assert_trees_equal(s1.d_state, s2.d_state)
+        assert [h["loss"] for h in h1] == [h["loss"] for h in h2]
+        assert len(s2.mean_losses) == 6    # no duplicated replay rounds
+        assert s2.stats["rollbacks"] == 1
+        # forced at round 3, snapshot cadence 2 -> replays rounds 2 and 3
+        assert s2.stats["drains"] == 8
+        assert s2.stats["replay_verified_rounds"] >= 1
+        assert s2.stats["replay_mismatches"] == 0
+        # replicated checkpoints landed in both replica directories
+        assert any((tmp_path / "forced" / "a").iterdir())
+        assert any((tmp_path / "forced" / "b").iterdir())
+
+    def test_restore_from_checkpoint_resumes_bit_identically(self,
+                                                             tmp_path):
+        """Restart-class (SEFI/UECC) recovery: a NEW supervisor process
+        restores the newest checksum-verified replica and finishes the run
+        bit-identically to an uninterrupted one."""
+        cfg, fns, tcfg, dcfg, data, params = _micro_diloco_setup()
+        rnd = make_diloco_round(cfg, fns, tcfg, dcfg, data=data,
+                                screen_window=16, supervise=True)
+
+        def mk(sub):
+            ft = FTConfig(checkpoint_dirs=(str(tmp_path / sub / "a"),
+                                           str(tmp_path / sub / "b")),
+                          checkpoint_every=8)
+            return DiLoCoSupervisor(
+                rnd, diloco_init(params, dcfg, screen_window=16), dcfg, ft)
+
+        s1 = mk("clean")
+        s1.run(6)
+
+        s2 = mk("crashed")
+        s2.run(4)          # snapshots land at rounds 2 and 4, then "SEFI"
+        s3 = mk("crashed")   # fresh process over the same replica dirs
+        assert s3.restore_from_checkpoint() == 4
+        s3.run(6)
+        _assert_trees_equal(s1.d_state, s3.d_state)
+
+    def test_persistent_outer_corruption_raises_not_livelock(self,
+                                                             tmp_path):
+        """Bit-deterministic replay re-produces a genuine outer corruption
+        forever; the supervisor must raise past the rollback cap even when
+        interleaved per-pod detections keep resetting DetectionPolicy's
+        consecutive-label counter."""
+        dcfg = DiLoCoConfig(n_pods=2, inner_steps=4)
+
+        def bad_round(d, grid, mask, thr):
+            # replay-deterministic fake: pod 0 trips a screen at round 0,
+            # the OUTER state is corrupt at round 1 -> every rollback
+            # replays 'pod 0' between two 'round 1' detections, so
+            # DetectionPolicy's same-label consecutive counter never
+            # exceeds 1 and only the supervisor-side cap can fire
+            r = int(np.asarray(grid)[0, 0]) // dcfg.inner_steps
+            z = jnp.zeros((2, 4), bool)
+            return d, {"loss": jnp.ones((2, 4)),
+                       "grad_norm": jnp.ones((2, 4)),
+                       "nonfinite": z, "loss_spike": z, "gnorm_spike": z,
+                       "suspect": z,
+                       "pod_bad": jnp.asarray([r == 0, False]),
+                       "pod_alive": mask,
+                       "outer_ok": jnp.asarray(r != 1)}
+
+        ft = FTConfig(checkpoint_dirs=(str(tmp_path),), checkpoint_every=8)
+        sup = DiLoCoSupervisor(bad_round,
+                               {"step": jnp.zeros((), jnp.int32)}, dcfg, ft)
+        with pytest.raises(RuntimeError, match="outer"):
+            sup.run(4)
+        # raised on the detection past the cap, before a 4th rollback
+        assert sup.stats["rollbacks"] == ft.max_rollbacks_per_step
+
+    def test_supervise_round_per_pod_rollback(self):
+        """A NaN-poisoned pod is rolled back per-pod, in-graph: its delta
+        never reaches the outer state (bit-identical to replaying the
+        round with that pod masked), it rejoins on the re-broadcast
+        globals, and its opt moments + screen are reset."""
+        cfg, fns, tcfg, dcfg, data, params = _micro_diloco_setup()
+        batches = data.batch_block(
+            np.arange(dcfg.n_pods * dcfg.inner_steps).reshape(dcfg.n_pods,
+                                                              -1))
+        thr = jnp.asarray([3.0, 10.0], jnp.float32)
+        ones = jnp.ones((dcfg.n_pods,), jnp.float32)
+
+        def poisoned():
+            d = diloco_init(params, dcfg, screen_window=16)
+            pp = jax.tree.map(lambda x: x.at[1].set(jnp.nan),
+                              d["pod_params"])
+            return {**d, "pod_params": pp}
+
+        sup = make_diloco_round(cfg, fns, tcfg, dcfg, screen_window=16,
+                                supervise=True, donate=False)
+        got, m = sup(poisoned(), batches, ones, thr)
+        np.testing.assert_array_equal(np.asarray(m["pod_bad"]),
+                                      [False, True])
+        assert bool(np.asarray(m["outer_ok"]))
+        np.testing.assert_array_equal(np.asarray(m["pod_alive"]),
+                                      [1.0, 0.0])
+        # reference: the same round replayed with pod 1 hand-masked
+        plain = make_diloco_round(cfg, fns, tcfg, dcfg, screen_window=16,
+                                  donate=False)
+        ref, _ = plain(poisoned(), batches,
+                       jnp.asarray([1.0, 0.0], jnp.float32), thr)
+        _assert_trees_equal(got, ref, keys=("global_params", "outer_m",
+                                            "pod_params"))
+        for leaf in jax.tree.leaves(got["global_params"]):
+            assert bool(jnp.all(jnp.isfinite(leaf.astype(jnp.float32))))
+        # pod 1 rejoined with fresh optimizer moments; pod 0 kept its own
+        for leaf in jax.tree.leaves(got["pod_opt"]):
+            np.testing.assert_array_equal(np.asarray(leaf[1]),
+                                          np.zeros_like(leaf[1]))
+        assert float(max(jnp.max(jnp.abs(leaf[0].astype(jnp.float32)))
+                         for leaf in jax.tree.leaves(got["pod_opt"]))) > 0
+        np.testing.assert_array_equal(np.asarray(got["screen"]["count"]),
+                                      [dcfg.inner_steps, 0])
+
+    def test_supervise_one_pod_equals_whole_round_rollback(self):
+        """1-pod config: flagging the only pod makes the round an outer
+        no-op — global params and outer momentum stay bit-identical to the
+        pre-round snapshot a whole-round rollback would restore, and the
+        pod rejoins on the (unchanged) re-broadcast globals."""
+        cfg, fns, tcfg, dcfg, data, params = _micro_diloco_setup(n_pods=1)
+        thr = jnp.asarray([3.0, 10.0], jnp.float32)
+        ones = jnp.ones((1,), jnp.float32)
+        rnd = make_diloco_round(cfg, fns, tcfg, dcfg, screen_window=16,
+                                supervise=True, donate=False)
+        # one clean round first so outer momentum is non-trivial
+        d1, m1 = rnd(diloco_init(params, dcfg, screen_window=16),
+                     data.batch_block(np.arange(dcfg.inner_steps)[None]),
+                     ones, thr)
+        assert not bool(np.asarray(m1["pod_bad"]).any())
+        pre = jax.tree.map(np.asarray, d1)
+        poisoned = {**d1, "pod_params": jax.tree.map(
+            lambda x: x * jnp.nan, d1["pod_params"])}
+        d2, m2 = rnd(poisoned,
+                     data.batch_block(
+                         (dcfg.inner_steps
+                          + np.arange(dcfg.inner_steps))[None]),
+                     ones, thr)
+        assert bool(np.asarray(m2["pod_bad"]).all())
+        assert bool(np.asarray(m2["outer_ok"]))
+        _assert_trees_equal(d2, pre, keys=("global_params", "outer_m"))
+        for gp, pp in zip(jax.tree.leaves(d2["global_params"]),
+                          jax.tree.leaves(d2["pod_params"])):
+            np.testing.assert_array_equal(np.asarray(pp[0]),
+                                          np.asarray(gp))
 
 
 class TestDeviceScreens:
