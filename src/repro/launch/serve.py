@@ -1,7 +1,10 @@
 """Serving launcher: --arch <id>, device-resident continuous batching.
 
   PYTHONPATH=src python -m repro.launch.serve --arch suncatcher-lm-100m \
-      --requests 8 --decode-block 8
+      --requests 8 --slots 4 --max-len 128 --decode-block 8
+
+For serving WHILE training (hot-swapped DiLoCo outer params), see
+repro.launch.coserve.
 """
 import argparse
 import time
@@ -13,19 +16,25 @@ from repro.models import registry
 from repro.serving import EngineConfig, Request, ServingEngine
 
 
-def main():
+def build_parser():
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="suncatcher-lm-100m",
                     choices=registry.ARCH_IDS)
     ap.add_argument("--requests", type=int, default=8)
     ap.add_argument("--max-new-tokens", type=int, default=16)
-    ap.add_argument("--slots", type=int, default=4)
-    ap.add_argument("--max-len", type=int, default=128)
+    ap.add_argument("--slots", type=int, default=4,
+                    help="decode slots (EngineConfig.max_batch)")
+    ap.add_argument("--max-len", type=int, default=128,
+                    help="KV-cache length per slot")
     ap.add_argument("--decode-block", type=int, default=8,
                     help="tokens decoded per host round-trip")
     ap.add_argument("--temperature", type=float, default=0.0)
     ap.add_argument("--full", action="store_true")
-    args = ap.parse_args()
+    return ap
+
+
+def main():
+    args = build_parser().parse_args()
 
     cfg = (registry.get_config(args.arch) if args.full
            else registry.get_reduced_config(args.arch))

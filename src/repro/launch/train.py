@@ -1,7 +1,7 @@
 """Training launcher: --arch <id> with the full space-runtime stack.
 
-On this CPU container it runs reduced configs (--reduced, default); on a real
-TPU cluster the same driver takes the full config + production mesh.
+On this CPU container it runs reduced configs by default; on a real TPU
+cluster the same driver takes the full config (--full) + production mesh.
 
   # fault-tolerant single-replica training, fused K-step drains
   PYTHONPATH=src python -m repro.launch.train --arch suncatcher-lm-100m \
@@ -133,7 +133,7 @@ def _run_supervised(args, cfg, fns, tcfg, data):
           f"ft stats {trainer.stats}")
 
 
-def main():
+def build_parser():
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="suncatcher-lm-100m",
                     choices=registry.ARCH_IDS)
@@ -177,6 +177,11 @@ def main():
     ap.add_argument("--force-rollback-at", type=int, default=None,
                     help="force ONE whole-round rollback at this round "
                          "(exercises the bit-deterministic replay path)")
+    return ap
+
+
+def main():
+    ap = build_parser()
     args = ap.parse_args()
 
     cfg = (registry.get_config(args.arch) if args.full

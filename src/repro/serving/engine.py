@@ -20,6 +20,16 @@ that advances once per decode sub-step and is sampled per-row (vmap'd
 categorical), so outputs are bit-identical across decode_block settings,
 slot placements, and co-batched traffic.
 
+Hot-swap (serving/training co-residency): `swap_params` stages a new
+param pytree (same treedef/shapes/dtypes — enforced, so the jitted hot
+path gets a cache hit and `trace_count()` stays flat) and the engine
+applies it at the next idle slot boundary. In-flight requests keep
+decoding against the snapshot they were admitted under — admission is
+held while a swap is pending, active slots drain, then the reference is
+swapped atomically — so every request's full generation (prefill + all
+decode blocks) is a pure function of ONE param snapshot and is
+bit-identical to a fresh engine built on that snapshot.
+
 The engine requires a model exposing a (k, v, pos) KV cache in the
 (L, B, M, Hkv, dh) layout (the transformer family) plus a `decode_step`
 accepting per-row positions and `last_idx` — see models/transformer.py.
@@ -37,6 +47,19 @@ import numpy as np
 
 @dataclass
 class Request:
+    """One generation request.
+
+    Fields:
+      uid: caller-chosen id, echoed back on the finished request.
+      prompt: (S,) int32 token ids; S must be <= EngineConfig.max_len.
+      max_new_tokens: decode budget; generation stops after this many
+        tokens even without an eos hit.
+      temperature: 0 = greedy argmax; > 0 samples top-k at this
+        temperature from the request's own PRNG stream.
+      eos_id: stop token (None = budget/max_len only).
+      generated: output token ids (filled in by the engine).
+      done: set once the request left its slot (eos/budget/out-of-room).
+    """
     uid: int
     prompt: np.ndarray              # (S,) int32
     max_new_tokens: int = 32
@@ -47,10 +70,29 @@ class Request:
     done: bool = False
     # engine-internal: submission order, keys the request's PRNG stream
     _seq: int = -1
+    # engine-internal: params_version the request was admitted (and will
+    # fully decode) under — the co-residency determinism witness
+    _params_version: int = -1
 
 
 @dataclass(frozen=True)
 class EngineConfig:
+    """Serving-engine knobs.
+
+    Fields:
+      max_batch: decode-slot count — the fixed batch of the shared KV
+        cache; also the prefill batch (continuous batching admits into
+        free slots).
+      max_len: KV-cache length per slot; prompt_len + generated tokens
+        are truncated to it (out-of-room rows finish early).
+      top_k: sampling pool size for temperature > 0 requests.
+      seed: base PRNG key; each request's stream is
+        fold_in(seed, submit_order).
+      decode_block: tokens decoded per fused device call (and per host
+        round-trip) — host syncs per token are ~1/decode_block.
+      min_bucket: smallest power-of-two prefill bucket; prompts pad up
+        to their bucket so traces stay bounded by len(buckets) + 1.
+    """
     max_batch: int = 8
     max_len: int = 512
     top_k: int = 50
@@ -93,7 +135,10 @@ class ServingEngine:
         self.slots: list[Optional[Request]] = [None] * b
         self.queue: list[Request] = []
         self.finished: list[Request] = []
-        self.stats = {"tokens": 0, "host_syncs": 0, "decode_blocks": 0}
+        self.params_version = 0
+        self._pending_params = None
+        self.stats = {"tokens": 0, "host_syncs": 0, "decode_blocks": 0,
+                      "swaps": 0}
 
         self._prefill = jax.jit(self._prefill_impl)
         self._engine_step = jax.jit(self._engine_step_impl)
@@ -212,6 +257,49 @@ class ServingEngine:
         }
         return new_cache, new_state, first, done0
 
+    # --- param hot-swap (serving/training co-residency) --------------------
+    def swap_params(self, new_params):
+        """Stage `new_params` as the next param snapshot to serve from.
+
+        The swap is applied at the next moment no request is in flight
+        (`step` holds admissions while a swap is pending, so active slots
+        drain in at most max_new_tokens decode blocks): a request admitted
+        under snapshot v decodes its WHOLE generation against v, never a
+        mix. Applying the swap is a host-side reference assignment — no
+        cache reset, no device sync — and the new tree must match the old
+        one's structure/shapes/dtypes exactly, so the jitted prefill /
+        decode hot path re-runs on a jit cache HIT (`trace_count()` is
+        flat across swaps; asserted in tests).
+
+        Staging twice before the swap applies keeps only the newest
+        params (the older staged snapshot was never served).
+
+        Returns the version number the new params will serve under.
+        """
+        old, new = jax.tree.structure(self.params), \
+            jax.tree.structure(new_params)
+        if old != new:
+            raise ValueError(f"swap_params: tree structure mismatch "
+                             f"({new} != {old})")
+        for o, n in zip(jax.tree.leaves(self.params),
+                        jax.tree.leaves(new_params)):
+            if o.shape != n.shape or o.dtype != n.dtype:
+                raise ValueError(
+                    f"swap_params: leaf mismatch {n.shape}/{n.dtype} != "
+                    f"{o.shape}/{o.dtype} — a swap must be re-trace-free")
+        self._pending_params = new_params
+        self._maybe_apply_swap()
+        return self.params_version + (self._pending_params is not None)
+
+    def _maybe_apply_swap(self):
+        """Apply a staged swap once no generation is in flight."""
+        if self._pending_params is not None and \
+                all(s is None for s in self.slots):
+            self.params = self._pending_params
+            self._pending_params = None
+            self.params_version += 1
+            self.stats["swaps"] += 1
+
     # --- host-side slot management ----------------------------------------
     def submit(self, req: Request):
         if len(req.prompt) > self.ecfg.max_len:
@@ -246,6 +334,7 @@ class ServingEngine:
             budgets = np.ones((b,), np.int32)
             seqs = np.zeros((b,), np.int32)
             for slot, req in grp:
+                req._params_version = self.params_version
                 tokens[slot, :len(req.prompt)] = req.prompt
                 lens[slot] = len(req.prompt)
                 admit[slot] = True
@@ -292,11 +381,19 @@ class ServingEngine:
 
     def step(self):
         """Admit new requests, then decode one block for all active slots.
-        Returns the number of active slots decoded this block."""
-        self._fill_slots()
+        Returns the number of active slots decoded this block.
+
+        While a param swap is staged, admission is held (queued requests
+        wait) so the in-flight generation drains against its original
+        snapshot; the swap applies at the first empty-slot boundary and
+        admission resumes under the new version."""
+        self._maybe_apply_swap()
+        if self._pending_params is None:
+            self._fill_slots()
         n_active = sum(s is not None for s in self.slots)
         if n_active:
             self._decode_block()
+            self._maybe_apply_swap()   # the block may have drained the pool
         return n_active
 
     def run(self, max_steps: int = 10_000):

@@ -5,10 +5,11 @@ from .checkpoint import (restore_into, restore_latest, save, save_async,
 from .data import DataConfig, SyntheticLM, pod_step_grid
 from .diloco import (DiLoCoConfig, diloco_init, isl_bytes_per_step,
                      make_diloco_round, make_inner_steps, outer_step,
-                     outer_wire_bytes)
+                     outer_wire_bytes, snapshot_global_params)
 from .fault_tolerance import (DetectionPolicy, DiLoCoSupervisor,
                               FaultTolerantTrainer, FTConfig, screen_init,
                               screen_update)
+from .publish import ParamPublisher, PublishConfig
 from .loop import (TrainConfig, init_train_state, make_eval_step,
                    make_fused_steps, make_sharded_fused_steps,
                    make_sharded_train_step, make_train_step)

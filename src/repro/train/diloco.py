@@ -42,6 +42,17 @@ from .optimizer import init_opt_state
 
 @dataclass(frozen=True)
 class DiLoCoConfig:
+    """DiLoCo outer-loop knobs.
+
+    Fields:
+      n_pods: satellite-pod replicas — the leading axis of the replicated
+        param pytree; on the production mesh it is sharded over "pod".
+      inner_steps: H, local AdamW steps between outer syncs; ISL
+        pod-axis traffic drops by ~H vs sync data-parallel.
+      outer_lr: Nesterov SGD learning rate on the pod-averaged delta
+        (DiLoCo paper default).
+      outer_momentum: Nesterov momentum on the outer "gradient".
+    """
     n_pods: int = 2
     inner_steps: int = 10           # H
     outer_lr: float = 0.7           # Nesterov SGD on deltas (DiLoCo defaults)
@@ -352,6 +363,26 @@ def make_diloco_round(model_cfg, fns, tcfg: TrainConfig, dcfg: DiLoCoConfig,
                    in_shardings=(state_sh, steps_sh, mask_sh, None),
                    out_shardings=(state_sh, None),
                    donate_argnums=donate_args)
+
+
+_snapshot_jit = jax.jit(lambda p: jax.tree.map(jnp.copy, p))
+
+
+def snapshot_global_params(d_state):
+    """Fresh device buffers holding the outer (global) params at the drain
+    boundary — the co-residency publish hook.
+
+    The fused round donates its input state, so any reference held into
+    `d_state` (including the initial `params` passed to `diloco_init`,
+    which ARE `d_state["global_params"]`'s buffers) is deleted by the next
+    round call. This returns a jitted device->device tree copy: no
+    device->host transfer, no host sync, and — jit without donation never
+    aliases outputs to inputs — buffers that stay valid for as long as a
+    `ParamPublisher` / `ServingEngine` holds them. Shapes and dtypes are
+    identical across snapshots, so an engine serving from successive
+    snapshots re-traces nothing.
+    """
+    return _snapshot_jit(d_state["global_params"])
 
 
 def outer_wire_bytes(params, compress: str | None = None,

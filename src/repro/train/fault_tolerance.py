@@ -46,6 +46,32 @@ from .data import pod_step_grid
 
 @dataclass
 class FTConfig:
+    """Fault-tolerance supervisor knobs.
+
+    Fields:
+      checkpoint_dirs: replica directories snapshots fan out to (in
+        orbit: distinct satellites); restore picks the newest replica
+        that passes its checksum.
+      checkpoint_every: steps between checkpoints (the DiLoCo supervisor
+        rounds this down to a whole number of rounds). Default is of the
+        order of the Young/Daly optimum for the measured restart rates.
+      keep: retained checkpoints per replica dir (older ones pruned).
+      gnorm_window: running-median window (steps) for the spike screens;
+        also the device ring-buffer length in fused/round mode.
+      gnorm_threshold: gradient-norm spike multiplier over the running
+        median that flags suspect SDC.
+      loss_threshold: loss spike multiplier over the running median.
+      verify_every: duplicate-step checksum cadence — recompute the loss
+        and compare bit-exactly every N steps (0 = off; host-loop mode
+        only).
+      min_screen: clean samples required before the spike screens arm.
+      drain_every: fused mode: steps per host metrics drain (K).
+      max_rollbacks_per_step: consecutive same-point rollbacks tolerated
+        before the livelock guard starts widening thresholds (or raises,
+        for persistent non-finite).
+      widen_factor: spike-threshold multiplier applied per detection past
+        the cap.
+    """
     checkpoint_dirs: tuple = ("/tmp/repro-ckpt",)
     checkpoint_every: int = 50
     keep: int = 3
@@ -353,16 +379,22 @@ class DiLoCoSupervisor:
          replayed rounds' losses bit-exactly against the truncated tail;
       5. snapshots on the checkpoint cadence: host snapshot for rollback +
          replicated `save_replicated`/`save_async`-style background writes
-         off the drain boundary (`checkpoint.save_replicated_async`).
+         off the drain boundary (`checkpoint.save_replicated_async`);
+      6. with a `publisher` (train/publish.py:ParamPublisher), stages the
+         outer params after every successful round and releases them to
+         the serving sink only once the snapshot watermark (plus the
+         publisher's holdback) has passed them — a rollback drops the
+         unverified candidates, so a rolled-back round is never served.
     """
 
     def __init__(self, round_fn, d_state, dcfg, ft: FTConfig,
-                 liveness=None, grid_fn=None):
+                 liveness=None, grid_fn=None, publisher=None):
         self.round_fn = round_fn
         self.d_state = d_state
         self.dcfg = dcfg
         self.ft = ft
         self.liveness = liveness
+        self.publisher = publisher
         self.grid_fn = grid_fn or (lambda r: jnp.asarray(
             pod_step_grid(r, dcfg.n_pods, dcfg.inner_steps), jnp.int32))
         self.stats = {
@@ -387,6 +419,13 @@ class DiLoCoSupervisor:
     def mean_losses(self):
         return [h["loss"] for h in self.history]
 
+    @property
+    def verified_round(self):
+        """The publication watermark: rounds at or below the newest host
+        snapshot can never be rolled back again (snapshots only advance
+        and are only taken of state that passed the outer screens)."""
+        return self._snap_round
+
     def _save_replicated(self):
         for t in self._ckpt_threads:   # bound thread pileup to one cadence
             t.join()
@@ -410,6 +449,8 @@ class DiLoCoSupervisor:
         del self.history[self._snap_round:]
         self.d_state = jax.device_put(self._snap)
         self.round = self._snap_round
+        if self.publisher is not None:
+            self.publisher.on_rollback(self.round)
 
     def restore_from_checkpoint(self):
         """Restart-class (SEFI/UECC) recovery path: newest verifiable
@@ -421,12 +462,18 @@ class DiLoCoSupervisor:
         self.d_state = jax.device_put(state)
         self.round = self._snap_round
         del self.history[self._snap_round:]
+        if self.publisher is not None:
+            self.publisher.on_rollback(self.round)
         return self._snap_round
 
-    def run(self, n_rounds: int, forced_rollback_at=None):
+    def run(self, n_rounds: int, forced_rollback_at=None, on_round=None):
         """Run to `n_rounds`, deriving masks per round. forced_rollback_at:
         iterable of round ids at which a whole-round rollback is forced
-        once (exercises the rollback/replay path deterministically)."""
+        once (exercises the rollback/replay path deterministically).
+        on_round(self) is called after every drain — success or rollback —
+        which is where a co-resident serving engine pumps its queue
+        (launch/coserve.py): the round jit has just returned, so the
+        device is idle until the next round is dispatched."""
         forced = set(forced_rollback_at or ())
         expected = {}                 # round -> stashed (loss_bytes, thr)
         n_pods = self.dcfg.n_pods
@@ -464,6 +511,8 @@ class DiLoCoSupervisor:
                             "this is divergence, not transient SDC")
                     self.policy.on_detection(f"round {r}", "non-finite")
                 self._whole_round_rollback(expected)
+                if on_round is not None:
+                    on_round(self)
                 continue
 
             pod_bad = np.asarray(
@@ -501,10 +550,18 @@ class DiLoCoSupervisor:
                            if info is not None else 0),
                 "loss_bytes": loss.tobytes(), "thresholds": thr})
             self.round = r + 1
+            if self.publisher is not None:
+                # stage BEFORE the next round donates d_state's buffers;
+                # the stage is a device->device copy, not a host transfer
+                self.publisher.on_round_complete(self.round, self.d_state)
             if self.round % snap_every == 0:
                 self._snap = jax.tree.map(np.asarray, self.d_state)
                 self._snap_round = self.round
                 self._save_replicated()
+            if self.publisher is not None:
+                self.publisher.advance(self.round, self._snap_round)
+            if on_round is not None:
+                on_round(self)
         for t in self._ckpt_threads:
             t.join()
         self._finalize_mask_stats()

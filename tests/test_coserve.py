@@ -1,0 +1,289 @@
+"""Serving/training co-residency tests: rollback-aware publication (a
+rolled-back round is never served), param hot-swap bit-identity against a
+fresh engine, trace flatness across swaps, and the end-to-end coserve
+loop."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.launch.coserve import run_coserve
+from repro.models import registry
+from repro.serving import EngineConfig, Request, ServingEngine
+from repro.train import (AdamWConfig, DataConfig, DiLoCoConfig,
+                         DiLoCoSupervisor, FTConfig, ParamPublisher,
+                         PublishConfig, SyntheticLM, TrainConfig,
+                         diloco_init, make_diloco_round, pod_step_grid,
+                         snapshot_global_params)
+
+
+@pytest.fixture(scope="module")
+def micro():
+    """Tiny (d_model=32) model shared by the training AND serving halves —
+    co-residency is one model in one process."""
+    cfg = registry.get_reduced_config(
+        "suncatcher-lm-100m", n_layers=2, d_model=32, n_heads=2,
+        n_kv_heads=1, d_ff=64, vocab_size=256)
+    fns = registry.model_fns(cfg)
+    tcfg = TrainConfig(adamw=AdamWConfig(lr=3e-3), warmup_steps=2,
+                       total_steps=100)
+    dcfg = DiLoCoConfig(n_pods=2, inner_steps=4)
+    data = SyntheticLM(DataConfig(vocab_size=cfg.vocab_size, seq_len=8,
+                                  global_batch=2))
+    return cfg, fns, tcfg, dcfg, data
+
+
+@pytest.fixture(scope="module")
+def round_fn(micro):
+    cfg, fns, tcfg, dcfg, data = micro
+    return make_diloco_round(cfg, fns, tcfg, dcfg, data=data,
+                             screen_window=16, supervise=True)
+
+
+def _fake_state(r):
+    return {"global_params": {"w": jnp.full((3,), float(r), jnp.float32)}}
+
+
+class TestParamPublisher:
+    """Horizon semantics on a fake sink: no jit, no supervisor."""
+
+    def _mk(self, **kw):
+        rec = []
+        pub = ParamPublisher(lambda p: rec.append(float(p["w"][0])),
+                             PublishConfig(**kw))
+        return pub, rec
+
+    def test_watermark_and_holdback_gate_release(self):
+        pub, rec = self._mk(holdback_rounds=1)
+        pub.on_round_complete(1, _fake_state(1))
+        assert pub.advance(1, 0) is None        # watermark still at 0
+        pub.on_round_complete(2, _fake_state(2))
+        assert pub.advance(2, 2) == 1           # head - holdback gates at 1
+        assert rec == [1.0]
+        assert pub.advance(2, 2) is None        # nothing new cleared
+        pub.on_round_complete(3, _fake_state(3))
+        pub.on_round_complete(4, _fake_state(4))
+        assert pub.advance(4, 4) == 3
+        assert rec == [1.0, 3.0]
+        assert pub.stats == {"staged": 4, "published": 2, "superseded": 1,
+                             "dropped_rollback": 0}
+
+    def test_rollback_drops_candidates_above_restore_point(self):
+        pub, rec = self._mk(holdback_rounds=0)
+        for r in (1, 2, 3):
+            pub.on_round_complete(r, _fake_state(r))
+        assert pub.advance(3, 2) == 2           # 1 superseded, 3 held
+        pub.on_rollback(2)
+        assert pub.stats["dropped_rollback"] == 1
+        assert pub.advance(3, 3) is None        # round 3 is GONE, not held
+        assert rec == [2.0] and pub.published_round == 2
+        # the replay re-stages round 3; only then may it be served
+        pub.on_round_complete(3, _fake_state(3))
+        assert pub.advance(3, 3) == 3
+
+    def test_publish_every_cadence(self):
+        pub, rec = self._mk(publish_every=2, holdback_rounds=0)
+        for r in (1, 2, 3, 4):
+            pub.on_round_complete(r, _fake_state(r))
+        assert pub.stats["staged"] == 2         # rounds 2 and 4 only
+        assert pub.advance(4, 4) == 4
+        assert pub.stats["superseded"] == 1 and rec == [4.0]
+
+    def test_bad_config_rejected(self):
+        with pytest.raises(ValueError):
+            PublishConfig(publish_every=0)
+        with pytest.raises(ValueError):
+            PublishConfig(holdback_rounds=-1)
+
+
+def test_snapshot_survives_round_donation(micro, round_fn):
+    """The fused round donates its input buffers; the publish snapshot
+    must be a fresh device copy that stays valid (and bit-stable) after
+    the donor is consumed — with zero device->host traffic at stage
+    time."""
+    cfg, fns, tcfg, dcfg, data = micro
+    d = diloco_init(fns.init(jax.random.PRNGKey(0), cfg), dcfg,
+                    screen_window=16)
+    snap = snapshot_global_params(d)
+    before = jax.device_get(snap)
+    d2, _ = round_fn(d, jnp.asarray(pod_step_grid(0, 2, 4)),
+                     jnp.ones((2,), jnp.float32),
+                     jnp.asarray([3.0, 10.0], jnp.float32))
+    assert jax.tree.leaves(d["global_params"])[0].is_deleted()
+    after = jax.device_get(snap)
+    for a, b in zip(jax.tree.leaves(before), jax.tree.leaves(after)):
+        np.testing.assert_array_equal(a, b)
+    # and the snapshot differs from the post-round globals (it is a
+    # boundary snapshot, not a live view)
+    post = jax.device_get(snapshot_global_params(d2))
+    assert any(not np.array_equal(a, b)
+               for a, b in zip(jax.tree.leaves(before),
+                               jax.tree.leaves(post)))
+
+
+def test_forced_rollback_round_is_never_published(micro, round_fn,
+                                                  tmp_path):
+    """THE co-residency invariant: under --force-rollback-at the staged
+    candidate of the rolled-back round is dropped, the sink sees only
+    watermark-verified rounds, and each published tree is bit-identical
+    to the clean run's publication of the same round."""
+    cfg, fns, tcfg, dcfg, data = micro
+    params = fns.init(jax.random.PRNGKey(0), cfg)
+
+    def run(sub, forced):
+        rec = []
+        pub = ParamPublisher(
+            lambda p: rec.append((pub.published_round, jax.device_get(p))),
+            PublishConfig(holdback_rounds=0))
+        ft = FTConfig(checkpoint_dirs=(str(tmp_path / sub),),
+                      checkpoint_every=8)          # snap every 2 rounds
+        sup = DiLoCoSupervisor(round_fn,
+                               diloco_init(params, dcfg, screen_window=16),
+                               dcfg, ft, publisher=pub)
+        sup.run(6, forced_rollback_at=forced)
+        return sup, pub, rec
+
+    s1, p1, clean = run("clean", None)
+    s2, p2, forced = run("forced", [3])
+
+    assert s2.stats["rollbacks"] == 1
+    # the candidate staged by the round that was rolled back was dropped
+    assert p2.stats["dropped_rollback"] == 1
+    rounds = [r for r, _ in forced]
+    assert rounds == sorted(rounds)                  # monotone releases
+    assert all(r <= s2.verified_round for r, _ in forced)
+    # same publication schedule and bit-identical payloads as clean run
+    assert rounds == [r for r, _ in clean]
+    for (r1, t1), (r2, t2) in zip(clean, forced):
+        for a, b in zip(jax.tree.leaves(t1), jax.tree.leaves(t2)):
+            np.testing.assert_array_equal(a, b)
+
+
+# --------------------------------------------------------------------------
+# engine hot-swap
+# --------------------------------------------------------------------------
+@pytest.fixture(scope="module")
+def two_params(micro):
+    cfg, fns, *_ = micro
+    return (fns.init(jax.random.PRNGKey(0), cfg),
+            fns.init(jax.random.PRNGKey(1), cfg))
+
+
+def _serve(cfg, fns, params, prompts, max_new=6, slots=2):
+    eng = ServingEngine(cfg, fns, params,
+                        EngineConfig(max_batch=slots, max_len=64))
+    for uid, p in enumerate(prompts):
+        eng.submit(Request(uid=uid, prompt=p, max_new_tokens=max_new))
+    return {r.uid: r.generated for r in eng.run()}
+
+
+def test_swap_bit_identity_and_trace_flat(micro, two_params):
+    """Served output after a swap == a fresh engine built on the swapped
+    params, and the swap compiles NOTHING (trace_count flat)."""
+    cfg, fns, *_ = micro
+    pa, pb = two_params
+    prompts = [np.arange(4, dtype=np.int32) + i for i in range(3)]
+    eng = ServingEngine(cfg, fns, pa, EngineConfig(max_batch=2, max_len=64))
+    for uid, p in enumerate(prompts):
+        eng.submit(Request(uid=uid, prompt=p, max_new_tokens=6))
+    before = {r.uid: r.generated for r in eng.run()}
+    t0 = eng.trace_count()
+
+    eng.swap_params(pb)
+    assert eng.params_version == 1 and eng.stats["swaps"] == 1  # idle: now
+    for uid, p in enumerate(prompts):
+        eng.submit(Request(uid=uid + 10, prompt=p, max_new_tokens=6))
+    eng.run()
+    after = {r.uid - 10: r.generated for r in eng.finished if r.uid >= 10}
+    t1 = eng.trace_count()
+    if t0 >= 0:
+        assert t0 == t1
+    assert before == _serve(cfg, fns, pa, prompts)
+    assert after == _serve(cfg, fns, pb, prompts)
+    assert before != after       # the swap actually changed what serves
+
+
+def test_inflight_request_decodes_whole_generation_on_one_snapshot(
+        micro, two_params):
+    """A swap staged mid-generation must not touch the in-flight request:
+    it drains on its admission snapshot (admissions held), then the swap
+    applies and the queued request decodes wholly on the new one."""
+    cfg, fns, *_ = micro
+    pa, pb = two_params
+    long_p, short_p = np.arange(5, dtype=np.int32), \
+        np.arange(7, dtype=np.int32)
+    eng = ServingEngine(cfg, fns, pa,
+                        EngineConfig(max_batch=2, max_len=64,
+                                     decode_block=4))
+    eng.submit(Request(uid=0, prompt=long_p, max_new_tokens=16))
+    eng.step()                                   # prefill + 1 block
+    assert any(s is not None for s in eng.slots)
+    eng.swap_params(pb)
+    assert eng.params_version == 0               # staged, NOT applied
+    eng.submit(Request(uid=1, prompt=short_p, max_new_tokens=5))
+    done = {r.uid: r for r in eng.run()}
+    assert eng.params_version == 1 and eng.stats["swaps"] == 1
+    assert done[0].generated == _serve(cfg, fns, pa, [long_p],
+                                       max_new=16)[0]
+    assert done[1].generated == _serve(cfg, fns, pb, [short_p],
+                                       max_new=5)[0]
+    assert done[0]._params_version == 0 and done[1]._params_version == 1
+
+
+def test_swap_rejects_retrace_hazards(micro, two_params):
+    cfg, fns, *_ = micro
+    pa, _ = two_params
+    eng = ServingEngine(cfg, fns, pa, EngineConfig(max_batch=1, max_len=64))
+    with pytest.raises(ValueError, match="structure"):
+        eng.swap_params({"not": jnp.zeros(())})
+    bad_shape = jax.tree.map(lambda x: jnp.zeros(x.shape + (1,), x.dtype),
+                             pa)
+    with pytest.raises(ValueError, match="re-trace"):
+        eng.swap_params(bad_shape)
+    bad_dtype = jax.tree.map(lambda x: x.astype(jnp.float16), pa)
+    with pytest.raises(ValueError, match="re-trace"):
+        eng.swap_params(bad_dtype)
+    assert eng.params_version == 0 and eng._pending_params is None
+
+
+def test_coserve_end_to_end(micro, round_fn, tmp_path):
+    """launch/coserve's loop: rounds + serving + publication + forced
+    rollback in one process; traffic completes, swaps land, the publisher
+    honors the watermark, and serving the final published params matches
+    a fresh engine built on them."""
+    cfg, fns, tcfg, dcfg, data = micro
+    d_state = diloco_init(fns.init(jax.random.PRNGKey(0), cfg), dcfg,
+                          screen_window=16)
+    eng = ServingEngine(cfg, fns, snapshot_global_params(d_state),
+                        EngineConfig(max_batch=2, max_len=64))
+    published = []
+    pub = ParamPublisher(
+        lambda p: (published.append(p), eng.swap_params(p)),
+        PublishConfig(holdback_rounds=0))
+    ft = FTConfig(checkpoint_dirs=(str(tmp_path / "a"),),
+                  checkpoint_every=8)
+    sup = DiLoCoSupervisor(round_fn, d_state, dcfg, ft, publisher=pub)
+    rng = np.random.default_rng(0)
+    reqs = [Request(uid=i,
+                    prompt=rng.integers(0, cfg.vocab_size,
+                                        size=int(rng.integers(4, 16))
+                                        ).astype(np.int32),
+                    max_new_tokens=6)
+            for i in range(6)]
+    done = run_coserve(sup, eng, reqs, 6, forced_rollback_at=[3])
+
+    assert len(done) == 6 and all(r.done for r in done)
+    assert pub.stats["dropped_rollback"] >= 1
+    assert 1 <= eng.stats["swaps"] <= pub.stats["published"]
+    assert pub.published_round <= sup.verified_round
+    traces = eng.trace_count()
+    if traces >= 0:
+        assert traces <= len(eng.buckets()) + 2
+    # all swaps drained by run_coserve's tail: the engine now serves the
+    # newest published params; probe vs a fresh engine on that snapshot
+    assert eng._pending_params is None
+    probe = np.arange(6, dtype=np.int32)
+    eng.submit(Request(uid=99, prompt=probe, max_new_tokens=5))
+    eng.run()
+    got = next(r.generated for r in eng.finished if r.uid == 99)
+    assert got == _serve(cfg, fns, published[-1], [probe], max_new=5)[0]

@@ -1,0 +1,84 @@
+"""Doc-consistency: every `--flag` mentioned in README.md, docs/*.md, and
+the launcher module docstrings must exist in the corresponding argparse
+parser — the drift this catches (a README one-liner advertising flags a
+launcher doesn't have, or omitting renamed ones) is permanent otherwise.
+
+Launchers expose `build_parser()` so the real parser is introspected
+without running `main`; modules with import-time side effects (dryrun
+pins XLA_FLAGS before jax init) are scanned at source level instead.
+"""
+import importlib
+import re
+from pathlib import Path
+
+import pytest
+
+ROOT = Path(__file__).resolve().parents[1]
+FLAG_RE = re.compile(r"--[A-Za-z0-9][A-Za-z0-9_-]*")
+
+
+def _parser_flags(modname):
+    mod = importlib.import_module(modname)
+    return {opt for action in mod.build_parser()._actions
+            for opt in action.option_strings}
+
+
+def _source_flags(relpath):
+    text = (ROOT / relpath).read_text()
+    return set(re.findall(r"add_argument\(\s*['\"](--[A-Za-z0-9][\w-]*)",
+                          text))
+
+
+# module named in a `python -m <module>` command -> its accepted flags
+FLAG_SOURCES = {
+    "repro.launch.train": lambda: _parser_flags("repro.launch.train"),
+    "repro.launch.serve": lambda: _parser_flags("repro.launch.serve"),
+    "repro.launch.coserve": lambda: _parser_flags("repro.launch.coserve"),
+    "repro.launch.dryrun":
+        lambda: _source_flags("src/repro/launch/dryrun.py"),
+    "benchmarks.run": lambda: _source_flags("benchmarks/run.py"),
+}
+
+# launchers whose module docstring (usage examples) is checked too;
+# dryrun is excluded from import on purpose (XLA_FLAGS side effect)
+DOCSTRING_MODULES = ["repro.launch.train", "repro.launch.serve",
+                     "repro.launch.coserve"]
+
+
+def _commands(text):
+    """(module, flags) per `python -m <known module> ...` command, with
+    backslash line-continuations joined first."""
+    text = re.sub(r"\\\s*\n", " ", text)
+    out = []
+    for line in text.splitlines():
+        m = re.search(r"python -m ([\w.]+)", line)
+        if m and m.group(1) in FLAG_SOURCES:
+            out.append((m.group(1), set(FLAG_RE.findall(line))))
+    return out
+
+
+def _doc_files():
+    return [ROOT / "README.md", *sorted((ROOT / "docs").glob("*.md"))]
+
+
+@pytest.mark.parametrize("path", _doc_files(), ids=lambda p: p.name)
+def test_doc_commands_use_real_flags(path):
+    cache = {}
+    cmds = _commands(path.read_text())
+    for mod, flags in cmds:
+        known = cache.setdefault(mod, FLAG_SOURCES[mod]())
+        missing = flags - known
+        assert not missing, (f"{path.name} advertises {sorted(missing)} "
+                             f"which {mod}'s parser does not accept")
+    if path.name == "README.md":     # the quickstart must stay checkable
+        assert cmds, "README.md no longer shows any launcher commands"
+
+
+@pytest.mark.parametrize("modname", DOCSTRING_MODULES)
+def test_launcher_docstring_flags_exist(modname):
+    mod = importlib.import_module(modname)
+    flags = set(FLAG_RE.findall(mod.__doc__ or ""))
+    assert flags, f"{modname} docstring lost its usage examples"
+    missing = flags - _parser_flags(modname)
+    assert not missing, (f"{modname} docstring mentions {sorted(missing)} "
+                         "which its parser does not accept")
