@@ -1,0 +1,167 @@
+"""Measured CPU micro-benchmark for the constellation serving plane.
+
+Three phases on the same smoke model and workload distribution:
+
+  1. single engine — the one-pod baseline (same per-pod slot count);
+  2. plane — N replicas behind the liveness router, all pods alive;
+  3. plane + forced outage — same plane, but mid-run the busiest pod is
+     struck and its in-flight generations migrate bit-exactly to the
+     surviving replicas.
+
+Reported: tokens/s and p50 router-step latency per phase, the
+migrated-slot count, and the outage-vs-clean p50 ratio. The invariants
+the plane exists for are CHECKED, not just recorded: a forced outage
+must complete every request (zero drops) and must actually migrate
+(otherwise the drain path silently didn't run). Absolute tok/s on the
+shared CPU is noise; the signal is the ratios and the zero-drop
+migration accounting. Results land in BENCH_fleet.json (repo root).
+"""
+import json
+import os
+import time
+
+import jax
+import numpy as np
+
+from repro.models import registry
+from repro.serving import (ConstellationRouter, EngineConfig, ForcedOutage,
+                           Request, ServingEngine)
+
+REPLICAS = 3
+SLOTS = 2                # per replica
+MAX_LEN = 64
+MAX_NEW = 12
+N_REQUESTS = 12
+OUTAGE_TICK = 2
+
+
+def _requests(cfg, rng, n=N_REQUESTS):
+    return [Request(uid=i,
+                    prompt=rng.integers(
+                        0, cfg.vocab_size,
+                        size=int(rng.integers(4, 40))).astype(np.int32),
+                    max_new_tokens=MAX_NEW,
+                    temperature=0.0 if i % 2 == 0 else 0.8)
+            for i in range(n)]
+
+
+def _drain(plane, reqs):
+    """Submit + run to completion, timing each step. Returns
+    (finished, dt_s, p50_step_ms, tokens)."""
+    tok0 = (sum(e.stats["tokens"] for e in plane.engines)
+            if isinstance(plane, ConstellationRouter)
+            else plane.stats["tokens"])
+    n0 = len(plane.finished)
+    for r in reqs:
+        plane.submit(r)
+    steps_s = []
+    t0 = time.time()
+    while plane.queue or any(s is not None for s in plane.slots) or (
+            isinstance(plane, ConstellationRouter)
+            and any(e.queue for e in plane.engines)):
+        t1 = time.perf_counter()
+        n = plane.step()
+        if n:
+            steps_s.append(time.perf_counter() - t1)
+    dt = time.time() - t0
+    tok1 = (sum(e.stats["tokens"] for e in plane.engines)
+            if isinstance(plane, ConstellationRouter)
+            else plane.stats["tokens"])
+    return plane.finished[n0:], dt, \
+        float(np.percentile(steps_s, 50) * 1e3), tok1 - tok0
+
+
+def _warm_engine(eng, cfg):
+    """Compile every prefill bucket + the decode block on one engine, so
+    the timed phases measure steady state, not first-touch compiles."""
+    for j, n in enumerate((5, 20, 40)):               # buckets 16/32/64
+        eng.submit(Request(uid=-1 - j,
+                           prompt=np.arange(n, dtype=np.int32) % 7,
+                           max_new_tokens=2, temperature=0.5))
+    eng.run()
+    eng.finished.clear()
+
+
+def run():
+    cfg = registry.get_reduced_config("suncatcher-lm-100m")
+    fns = registry.model_fns(cfg)
+    params = fns.init(jax.random.PRNGKey(0), cfg)
+    ecfg = EngineConfig(max_batch=SLOTS, max_len=MAX_LEN, decode_block=8)
+    rng = np.random.default_rng(0)
+
+    # ---- single-engine (one-pod) baseline ------------------------------
+    single = ServingEngine(cfg, fns, params, ecfg)
+    _warm_engine(single, cfg)
+    _, dt_1, p50_1, tok_1 = _drain(single, _requests(cfg, rng))
+
+    # ---- plane, all pods alive -----------------------------------------
+    engines = [ServingEngine(cfg, fns, params, ecfg)
+               for _ in range(REPLICAS)]
+    for e in engines:
+        _warm_engine(e, cfg)
+    plane = ConstellationRouter(engines)
+    _, dt_p, p50_p, tok_p = _drain(plane, _requests(cfg, rng))
+
+    # ---- plane, forced mid-run outage (same warmed engines) ------------
+    outage = ConstellationRouter(
+        engines, forced_outage=ForcedOutage(at_tick=OUTAGE_TICK))
+    # warm the migration gather/scatter traces so the timed phase measures
+    # steady-state migration cost, not its one-time compile
+    warm = ConstellationRouter(
+        engines, forced_outage=ForcedOutage(at_tick=OUTAGE_TICK))
+    _drain(warm, _requests(cfg, rng))
+    done_o, dt_o, p50_o, tok_o = _drain(outage, _requests(cfg, rng))
+
+    if len(done_o) != N_REQUESTS:
+        raise RuntimeError(f"forced outage dropped requests: "
+                           f"{len(done_o)}/{N_REQUESTS} finished")
+    if outage.stats["migrated_slots"] < 1:
+        raise RuntimeError("forced outage caused no migrations")
+
+    extras = {
+        "replicas": REPLICAS,
+        "slots_per_replica": SLOTS,
+        "single_tokens_per_s": round(tok_1 / dt_1, 1),
+        "plane_tokens_per_s": round(tok_p / dt_p, 1),
+        "plane_outage_tokens_per_s": round(tok_o / dt_o, 1),
+        "single_p50_step_ms": round(p50_1, 2),
+        "plane_p50_step_ms": round(p50_p, 2),
+        "plane_outage_p50_step_ms": round(p50_o, 2),
+        # the replicas time-share ONE CPU here, so ~1.0 means the router
+        # adds negligible orchestration overhead — horizontal scaling
+        # needs real per-pod devices, which this container doesn't have
+        "plane_throughput_ratio_vs_single": round(
+            (tok_p / dt_p) / (tok_1 / dt_1), 2),
+        "outage_p50_over_clean": round(p50_o / p50_p, 2),
+        "migrations": outage.stats["migrations"],
+        "migrated_slots": outage.stats["migrated_slots"],
+        "masked_pod_ticks": outage.stats["masked_pod_ticks"],
+        "zero_drops_under_outage": True,
+        "traces": plane.trace_count(),
+    }
+    with open(os.path.join(os.path.dirname(__file__), "..",
+                           "BENCH_fleet.json"), "w") as f:
+        json.dump(extras, f, indent=2)
+        f.write("\n")
+
+    out = [
+        ("fleet_plane_tokens_per_s", dt_p * 1e6,
+         f"{tok_p / dt_p:.0f} tok/s on {REPLICAS}x{SLOTS} slots, p50 "
+         f"step {p50_p:.1f} ms "
+         f"({extras['plane_throughput_ratio_vs_single']}x one pod on a "
+         f"time-shared CPU)"),
+        ("fleet_single_pod_baseline", dt_1 * 1e6,
+         f"{tok_1 / dt_1:.0f} tok/s on 1x{SLOTS} slots, p50 step "
+         f"{p50_1:.1f} ms"),
+        ("fleet_forced_outage", dt_o * 1e6,
+         f"{tok_o / dt_o:.0f} tok/s with a pod struck at tick "
+         f"{OUTAGE_TICK}: zero drops, {outage.stats['migrated_slots']} "
+         f"slots migrated, p50 {p50_o:.1f} ms "
+         f"({extras['outage_p50_over_clean']}x clean)"),
+    ]
+    return out, extras
+
+
+if __name__ == "__main__":
+    for row in run()[0]:
+        print(row)

@@ -8,12 +8,13 @@ import argparse
 
 def main() -> None:
     from benchmarks import (coserve, diloco_traffic, fig1_isl,
-                            fig2_constellation, fig4_launch, j2_drift,
-                            radiation_table, roofline, serve_throughput,
-                            table1_power, train_throughput)
+                            fig2_constellation, fig4_launch, fleet_serve,
+                            j2_drift, radiation_table, roofline,
+                            serve_throughput, table1_power,
+                            train_throughput)
     mods = [fig1_isl, fig2_constellation, j2_drift, radiation_table,
             fig4_launch, table1_power, diloco_traffic, roofline,
-            train_throughput, serve_throughput, coserve]
+            train_throughput, serve_throughput, coserve, fleet_serve]
     ap = argparse.ArgumentParser()
     ap.add_argument("--skip", default="",
                     help="comma-separated module names to exclude")

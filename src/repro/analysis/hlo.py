@@ -35,8 +35,9 @@ WIRE_FACTOR = {"all-reduce": 2.0, "all-gather": 1.0, "reduce-scatter": 1.0,
                "all-to-all": 1.0, "collective-permute": 1.0}
 
 
-def _shape_bytes(shape_str: str) -> int:
-    total = 0
+def _shape_dtype_bytes(shape_str: str) -> dict:
+    """dtype -> bytes for one (possibly tuple) HLO result shape."""
+    out = defaultdict(int)
     for dtype, dims in _SHAPE_RE.findall(shape_str):
         if dtype not in _DTYPE_BYTES:
             continue
@@ -44,21 +45,34 @@ def _shape_bytes(shape_str: str) -> int:
         if dims:
             for d in dims.split(","):
                 n *= int(d)
-        total += n * _DTYPE_BYTES[dtype]
-    return total
+        out[dtype] += n * _DTYPE_BYTES[dtype]
+    return out
+
+
+def _shape_bytes(shape_str: str) -> int:
+    return sum(_shape_dtype_bytes(shape_str).values())
 
 
 def collective_bytes(hlo_text: str) -> dict:
-    """Per-collective-kind result bytes (per device) from partitioned HLO."""
+    """Per-collective-kind result bytes (per device) from partitioned HLO.
+
+    `bytes_by_dtype` additionally splits each kind's bytes per element
+    dtype — the compressed DiLoCo outer sync moves its payload as s8 (+
+    f32 scales) or f32/s32 top-k pairs, so the int8-vs-f32 wire split is
+    visible directly instead of inferred from totals."""
     out = defaultdict(int)
     counts = defaultdict(int)
+    by_dtype = defaultdict(lambda: defaultdict(int))
     for m in _OP_RE.finditer(hlo_text):
         shape_str, kind = m.group(1), m.group(2)
         if "-done(" in m.group(0):
             continue  # avoid double counting async start/done pairs
-        out[kind] += _shape_bytes(shape_str)
+        for dt, b in _shape_dtype_bytes(shape_str).items():
+            out[kind] += b
+            by_dtype[kind][dt] += b
         counts[kind] += 1
     return {"bytes": dict(out), "counts": dict(counts),
+            "bytes_by_dtype": {k: dict(v) for k, v in by_dtype.items()},
             "wire_bytes": sum(WIRE_FACTOR[k] * v for k, v in out.items())}
 
 

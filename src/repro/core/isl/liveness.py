@@ -1,7 +1,10 @@
-"""Constellation-in-the-loop liveness: orbital/ISL state -> DiLoCo pod mask.
+"""Constellation-in-the-loop liveness: orbital/ISL state -> pod masks for
+BOTH planes — the DiLoCo training mask (`mask_at`) and its serving twin
+(`serving_mask`, which also yields bandwidth-proportional admission
+weights for the request router in repro.serving.router).
 
 This is the bridge from `repro.core` (the physics half of the repo) to
-`repro.train` (the training half). The paper's failure model for orbital
+`repro.train` / `repro.serving` (the workload half). The paper's failure model for orbital
 training is set by the constellation itself, not by the accelerators:
 
   - The cluster "breathes" twice per orbit (§2.2, Fig. 3): direct-neighbor
@@ -33,6 +36,22 @@ from ..orbital.hcw import hcw_state
 from ..radiation.seu import (HBM_UECC_DOSE_PER_EVENT_RAD,
                              SEFI_DOSE_PER_EVENT_RAD, RadiationEnvironment)
 from .topology import ISLNetwork
+
+
+def normalize_admission_weights(alive, weights):
+    """(alive bool (n,), raw weights (n,)) -> admission distribution:
+    dead pods weigh 0, live weights sum to 1 (uniform-over-alive when the
+    raw live weights sum to 0), all-dead -> all zeros. Shared by
+    `ConstellationLinkModel.serving_mask` and the serving router's
+    forced-outage re-mask so the two can't drift."""
+    alive = np.asarray(alive, bool)
+    weights = np.where(alive, np.asarray(weights, float), 0.0)
+    total = weights.sum()
+    if total > 0:
+        return weights / total
+    if alive.any():
+        return alive / alive.sum()
+    return weights
 
 
 @dataclass(frozen=True)
@@ -192,6 +211,25 @@ class ConstellationLinkModel:
                 "straggler": straggler,
                 "outage": outage}
         return mask, info
+
+    def serving_mask(self, round_idx: int):
+        """(alive (n_pods,) bool, weights (n_pods,) f32, info) — the
+        SERVING twin of `mask_at`, for the request router.
+
+        Same straggler + outage machinery, same round index: a pod masked
+        for training round r is masked for serving at r, deterministically
+        (alive == mask_at(r)[0] > 0; asserted in tests). `weights` is each
+        live pod's share of cross-pod aggregate ISL bandwidth at the
+        round's orbit phase (dead pods weigh 0; all-dead rounds return
+        all-zero weights) — the admission policy's bias toward
+        well-connected pods, so traffic follows the cluster's breathing
+        exactly like the training deadline does.
+        """
+        mask, info = self.mask_at(round_idx)
+        alive = mask > 0
+        weights = normalize_admission_weights(
+            alive, info["pod_bandwidth_bps"])
+        return alive, weights.astype(np.float32), info
 
     def mask_series(self, n_rounds: int):
         """(masks (n_rounds, n_pods) f32, stats dict) — the orbit's outage/

@@ -22,6 +22,17 @@ re-trace: same shapes/dtypes).
 
   # pod liveness from the orbital/ISL/radiation stack while serving
   PYTHONPATH=src python -m repro.launch.coserve --steps 24 --constellation
+
+  # constellation serving plane: N engine replicas behind the liveness
+  # router; the publisher fans verified outer params to ALL replicas in
+  # lockstep, and serving traffic obeys the same mask as training
+  PYTHONPATH=src python -m repro.launch.coserve --steps 24 --replicas 2 \
+      --constellation --serving-constellation
+
+  # forced serving-pod outage mid-run: in-flight generations migrate
+  # bit-exactly to the surviving replica (zero drops)
+  PYTHONPATH=src python -m repro.launch.coserve --steps 16 --replicas 2 \
+      --force-outage-at 2
 """
 import argparse
 import os
@@ -32,7 +43,9 @@ import jax
 import numpy as np
 
 from repro.models import registry
-from repro.serving import EngineConfig, Request, ServingEngine
+from repro.serving import (ConstellationRouter, EngineConfig, ForcedOutage,
+                           Request, ServingEngine,
+                           check_forced_outage_contract, liveness_mask_fn)
 from repro.train import (AdamWConfig, DataConfig, DiLoCoConfig,
                          DiLoCoSupervisor, FTConfig, ParamPublisher,
                          PublishConfig, SyntheticLM, TrainConfig,
@@ -48,12 +61,23 @@ def run_coserve(sup, eng, requests, n_rounds, *, forced_rollback_at=None,
     requests and decodes up to `blocks_per_round` fused blocks; once
     training reaches `n_rounds` the remaining traffic drains. Publication
     happens inside the supervisor (its ParamPublisher), not here — this
-    loop only moves tokens. Returns the engine's finished-request list.
+    loop only moves tokens. `eng` may be a single ServingEngine or a
+    ConstellationRouter plane; while training runs, a router's liveness
+    tick is pinned to the supervisor's round index (a pod masked for
+    training round r is masked for serving while round r trains), and
+    once training finishes the pin is released so the serving clock — and
+    any pod's repair window — advances on the router's own ticks during
+    the drain. Returns the finished list.
     """
     pending = list(requests)
+    # a router plane admits across n_pods replicas; keep its queue sized
+    # to the PLANE, not to one replica
+    cap = getattr(eng, "n_pods", 1) * eng.ecfg.max_batch
 
     def pump(_sup):
-        while pending and len(eng.queue) < eng.ecfg.max_batch:
+        if hasattr(eng, "round_override"):
+            eng.round_override = _sup.round
+        while pending and len(eng.queue) < cap:
             eng.submit(pending.pop(0))
         for _ in range(blocks_per_round):
             if not (eng.queue or any(s is not None for s in eng.slots)):
@@ -62,10 +86,12 @@ def run_coserve(sup, eng, requests, n_rounds, *, forced_rollback_at=None,
 
     sup.run(n_rounds, forced_rollback_at=forced_rollback_at, on_round=pump)
 
+    if hasattr(eng, "round_override"):
+        eng.round_override = None     # drain on the router's own clock
     steps = 0
     while (pending or eng.queue
            or any(s is not None for s in eng.slots)) and steps < max_steps:
-        while pending and len(eng.queue) < eng.ecfg.max_batch:
+        while pending and len(eng.queue) < cap:
             eng.submit(pending.pop(0))
         eng.step()
         steps += 1
@@ -90,7 +116,19 @@ def build_parser():
                          "publication watermark advances on this cadence")
     ap.add_argument("--serve-slots", type=int, default=2,
                     help="serving engine decode slots (EngineConfig."
-                         "max_batch)")
+                         "max_batch), per replica")
+    ap.add_argument("--replicas", type=int, default=1,
+                    help="serving-pod engine replicas behind the liveness "
+                         "router (1 = single engine, no router)")
+    ap.add_argument("--serving-constellation", action="store_true",
+                    help="route serving traffic by the constellation "
+                         "liveness mask (the serving twin of "
+                         "--constellation; reuses the training link model "
+                         "when pod counts match)")
+    ap.add_argument("--force-outage-at", type=int, default=None,
+                    help="strike the busiest serving pod at this router "
+                         "tick: its in-flight generations must migrate "
+                         "(requires --replicas >= 2)")
     ap.add_argument("--requests", type=int, default=8)
     ap.add_argument("--max-new-tokens", type=int, default=8)
     ap.add_argument("--max-len", type=int, default=64)
@@ -136,16 +174,9 @@ def main():
                             min_screen=ft_proto.min_screen,
                             supervise=True)
 
-    # the engine serves the round-0 globals until the first publish; it
-    # must hold its OWN buffers (the fused round donates d_state's)
-    eng = ServingEngine(cfg, fns, snapshot_global_params(d_state),
-                        EngineConfig(max_batch=args.serve_slots,
-                                     max_len=args.max_len,
-                                     decode_block=args.decode_block))
-    publisher = ParamPublisher(
-        eng.swap_params,
-        PublishConfig(publish_every=args.publish_every,
-                      holdback_rounds=args.holdback_rounds))
+    if args.force_outage_at is not None and args.replicas < 2:
+        raise SystemExit("--force-outage-at needs --replicas >= 2 (a "
+                         "one-pod plane has nowhere to migrate)")
 
     liveness = None
     if args.constellation:
@@ -153,6 +184,39 @@ def main():
         liveness = ConstellationLinkModel(cfg=LivenessConfig(
             n_pods=dcfg.n_pods,
             outer_wire_bytes=outer_wire_bytes(params)))
+
+    # the engine(s) serve the round-0 globals until the first publish; they
+    # must hold their OWN buffers (the fused round donates d_state's)
+    ecfg = EngineConfig(max_batch=args.serve_slots, max_len=args.max_len,
+                        decode_block=args.decode_block)
+    params0 = snapshot_global_params(d_state)
+    if args.replicas > 1 or args.serving_constellation:
+        mask_fn = None
+        if args.serving_constellation:
+            # the serving twin of the training mask: same link model when
+            # the pod counts line up, so one masked pod silences both
+            # planes at the same round
+            if liveness is not None and dcfg.n_pods == args.replicas:
+                serve_model = liveness
+            else:
+                from repro.core.isl import (ConstellationLinkModel,
+                                            LivenessConfig)
+                serve_model = ConstellationLinkModel(cfg=LivenessConfig(
+                    n_pods=args.replicas,
+                    outer_wire_bytes=outer_wire_bytes(params)))
+            mask_fn = liveness_mask_fn(serve_model)
+        forced = (ForcedOutage(at_tick=args.force_outage_at)
+                  if args.force_outage_at is not None else None)
+        eng = ConstellationRouter(
+            [ServingEngine(cfg, fns, params0, ecfg)
+             for _ in range(args.replicas)],
+            mask_fn=mask_fn, forced_outage=forced)
+    else:
+        eng = ServingEngine(cfg, fns, params0, ecfg)
+    publisher = ParamPublisher(
+        eng.swap_params,
+        PublishConfig(publish_every=args.publish_every,
+                      holdback_rounds=args.holdback_rounds))
 
     rng = np.random.default_rng(0)
     reqs = [Request(uid=uid,
@@ -182,7 +246,6 @@ def main():
             f"published round {publisher.published_round} past the "
             f"verification watermark {sup.verified_round}")
     losses = sup.mean_losses
-    s = eng.stats
     print(f"{cfg.name}: co-resident {len(sup.history)} DiLoCo rounds x "
           f"H={dcfg.inner_steps} ({dcfg.n_pods} pods) + {len(done)} "
           f"requests served in {dt:.1f}s, mean pod loss "
@@ -192,10 +255,22 @@ def main():
           f"{publisher.published_round}/{sup.round}), "
           f"{publisher.stats['dropped_rollback']} dropped by rollback, "
           f"{sup.stats['rollbacks']} whole-round rollbacks")
-    print(f"  serve: {s['tokens'] / dt:.0f} tok/s co-resident, "
-          f"{s['swaps']} live param swaps (engine v{eng.params_version}), "
-          f"{eng.trace_count()} traces — flat across swaps "
-          f"(buckets={eng.buckets()})")
+    if isinstance(eng, ConstellationRouter):
+        s = eng.plane_stats()
+        print(f"  serve: plane of {args.replicas} replicas, "
+              f"{s['engines']['tokens'] / dt:.0f} tok/s co-resident, "
+              f"{s['swaps']} plane-wide param swaps (v"
+              f"{eng.params_version}), {s['migrated_slots']} slots "
+              f"migrated, {s['masked_pod_ticks']} masked pod-ticks, "
+              f"{eng.trace_count()} traces")
+        if args.force_outage_at is not None:
+            check_forced_outage_contract(eng, done, args.requests)
+    else:
+        s = eng.stats
+        print(f"  serve: {s['tokens'] / dt:.0f} tok/s co-resident, "
+              f"{s['swaps']} live param swaps (engine v"
+              f"{eng.params_version}), {eng.trace_count()} traces — flat "
+              f"across swaps (buckets={eng.buckets()})")
 
 
 if __name__ == "__main__":

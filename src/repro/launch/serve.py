@@ -3,6 +3,19 @@
   PYTHONPATH=src python -m repro.launch.serve --arch suncatcher-lm-100m \
       --requests 8 --slots 4 --max-len 128 --decode-block 8
 
+Constellation serving plane: --replicas N fronts N engine replicas (one
+per serving pod) with a liveness-routed request router;
+--serving-constellation derives the pod mask + bandwidth weights from the
+orbital/ISL/radiation stack, and --force-outage-at T strikes the busiest
+pod at router tick T — its in-flight generations migrate bit-exactly to
+healthy replicas (zero drops; the launcher asserts it):
+
+  PYTHONPATH=src python -m repro.launch.serve --replicas 3 --requests 9 \
+      --slots 2 --max-len 64 --force-outage-at 3
+
+  PYTHONPATH=src python -m repro.launch.serve --replicas 2 \
+      --serving-constellation --requests 8
+
 For serving WHILE training (hot-swapped DiLoCo outer params), see
 repro.launch.coserve.
 """
@@ -13,7 +26,9 @@ import jax
 import numpy as np
 
 from repro.models import registry
-from repro.serving import EngineConfig, Request, ServingEngine
+from repro.serving import (ConstellationRouter, EngineConfig, ForcedOutage,
+                           Request, ServingEngine,
+                           check_forced_outage_contract, liveness_mask_fn)
 
 
 def build_parser():
@@ -23,18 +38,48 @@ def build_parser():
     ap.add_argument("--requests", type=int, default=8)
     ap.add_argument("--max-new-tokens", type=int, default=16)
     ap.add_argument("--slots", type=int, default=4,
-                    help="decode slots (EngineConfig.max_batch)")
+                    help="decode slots per replica (EngineConfig.max_batch)")
     ap.add_argument("--max-len", type=int, default=128,
                     help="KV-cache length per slot")
     ap.add_argument("--decode-block", type=int, default=8,
                     help="tokens decoded per host round-trip")
     ap.add_argument("--temperature", type=float, default=0.0)
     ap.add_argument("--full", action="store_true")
+    ap.add_argument("--replicas", type=int, default=1,
+                    help="serving-pod replicas behind the liveness router "
+                         "(1 = single engine, no router)")
+    ap.add_argument("--serving-constellation", action="store_true",
+                    help="derive the serving pod mask + admission weights "
+                         "from the orbital/ISL/radiation stack")
+    ap.add_argument("--force-outage-at", type=int, default=None,
+                    help="strike the busiest pod at this router tick; its "
+                         "in-flight requests must migrate, not drop "
+                         "(requires --replicas >= 2)")
     return ap
+
+
+def build_plane(cfg, fns, params, args):
+    """N engine replicas behind a ConstellationRouter (the serving plane)."""
+    ecfg = EngineConfig(max_batch=args.slots, max_len=args.max_len,
+                        decode_block=args.decode_block)
+    engines = [ServingEngine(cfg, fns, params, ecfg)
+               for _ in range(args.replicas)]
+    mask_fn = None
+    if args.serving_constellation:
+        from repro.core.isl import ConstellationLinkModel, LivenessConfig
+        mask_fn = liveness_mask_fn(ConstellationLinkModel(
+            cfg=LivenessConfig(n_pods=args.replicas)))
+    forced = (ForcedOutage(at_tick=args.force_outage_at)
+              if args.force_outage_at is not None else None)
+    return ConstellationRouter(engines, mask_fn=mask_fn,
+                               forced_outage=forced)
 
 
 def main():
     args = build_parser().parse_args()
+    if args.force_outage_at is not None and args.replicas < 2:
+        raise SystemExit("--force-outage-at needs --replicas >= 2 (a "
+                         "one-pod plane has nowhere to migrate)")
 
     cfg = (registry.get_config(args.arch) if args.full
            else registry.get_reduced_config(args.arch))
@@ -42,10 +87,13 @@ def main():
         raise SystemExit("serve CLI demo supports token-LM archs")
     fns = registry.model_fns(cfg)
     params = fns.init(jax.random.PRNGKey(0), cfg)
-    eng = ServingEngine(cfg, fns, params,
-                        EngineConfig(max_batch=args.slots,
-                                     max_len=args.max_len,
-                                     decode_block=args.decode_block))
+    if args.replicas > 1 or args.serving_constellation:
+        eng = build_plane(cfg, fns, params, args)
+    else:
+        eng = ServingEngine(cfg, fns, params,
+                            EngineConfig(max_batch=args.slots,
+                                         max_len=args.max_len,
+                                         decode_block=args.decode_block))
     rng = np.random.default_rng(0)
     for uid in range(args.requests):
         eng.submit(Request(uid=uid,
@@ -61,12 +109,27 @@ def main():
     for r in sorted(done, key=lambda r: r.uid):
         print(f"req {r.uid}: {len(r.prompt)} prompt toks -> "
               f"{len(r.generated)} generated")
-    s = eng.stats
-    print(f"{cfg.name}: served {len(done)} requests on {args.slots} slots | "
-          f"{s['tokens'] / dt:.0f} tok/s | "
-          f"{s['host_syncs'] / max(s['tokens'], 1):.3f} host-syncs/token | "
-          f"{eng.trace_count()} traces "
-          f"(buckets={eng.buckets()}, decode_block={args.decode_block})")
+    if isinstance(eng, ConstellationRouter):
+        s = eng.plane_stats()
+        tok = s["engines"]["tokens"]
+        print(f"{cfg.name}: plane of {args.replicas} replicas x "
+              f"{args.slots} slots served {len(done)} requests | "
+              f"{tok / dt:.0f} tok/s | {s['migrated_slots']} slots "
+              f"migrated in {s['migrations']} migrations | "
+              f"{s['masked_pod_ticks']} masked pod-ticks | "
+              f"admitted/pod {s['admitted_per_pod']} | "
+              f"{eng.trace_count()} traces")
+        if args.force_outage_at is not None:
+            check_forced_outage_contract(eng, done, args.requests)
+            print(f"  forced outage at tick {args.force_outage_at}: "
+                  f"zero drops, {s['migrated_slots']} slots migrated OK")
+    else:
+        s = eng.stats
+        print(f"{cfg.name}: served {len(done)} requests on {args.slots} "
+              f"slots | {s['tokens'] / dt:.0f} tok/s | "
+              f"{s['host_syncs'] / max(s['tokens'], 1):.3f} "
+              f"host-syncs/token | {eng.trace_count()} traces "
+              f"(buckets={eng.buckets()}, decode_block={args.decode_block})")
 
 
 if __name__ == "__main__":

@@ -1,2 +1,6 @@
-"""Batched serving: continuous-batching engine over the model zoo."""
-from .engine import EngineConfig, Request, ServingEngine
+"""Batched serving: continuous-batching engine over the model zoo, plus
+the liveness-routed multi-replica serving plane (router.py)."""
+from .engine import (EngineConfig, Request, ServingEngine,
+                     check_swap_compatible)
+from .router import (ConstellationRouter, ForcedOutage,
+                     check_forced_outage_contract, liveness_mask_fn)

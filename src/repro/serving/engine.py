@@ -30,6 +30,18 @@ swapped atomically — so every request's full generation (prefill + all
 decode blocks) is a pure function of ONE param snapshot and is
 bit-identical to a fresh engine built on that snapshot.
 
+Migration (constellation serving plane): `export_slots`/`import_slots`
+move in-flight generations between engine replicas bit-exactly. Export is
+one jitted device->device gather of the per-slot state pytree (last token,
+budgets, eos/temps, PRNG streams) plus the slot's KV rows and position;
+import is the matching scatter into free slots of another engine built on
+the SAME param snapshot (enforced via params_version). The resumed decode
+continues the request's PRNG stream and ragged KV length exactly where the
+source left them, so the token sequence is bit-identical to an unmigrated
+run — and both directions are fixed-shape (full-width, index+mask driven),
+so repeated migrations are jit cache hits (`trace_count()` stays flat).
+serving/router.py drives this from the constellation liveness mask.
+
 The engine requires a model exposing a (k, v, pos) KV cache in the
 (L, B, M, Hkv, dh) layout (the transformer family) plus a `decode_step`
 accepting per-row positions and `last_idx` — see models/transformer.py.
@@ -109,6 +121,21 @@ class EngineConfig:
                              f"got {self.min_bucket}")
 
 
+def check_swap_compatible(old_params, new_params):
+    """Raise unless `new_params` can replace `old_params` on a jit cache
+    hit: identical tree structure, shapes, and dtypes. Shared by
+    `ServingEngine.swap_params` and the router's plane-wide staging."""
+    old, new = jax.tree.structure(old_params), jax.tree.structure(new_params)
+    if old != new:
+        raise ValueError(f"swap_params: tree structure mismatch "
+                         f"({new} != {old})")
+    for o, n in zip(jax.tree.leaves(old_params), jax.tree.leaves(new_params)):
+        if o.shape != n.shape or o.dtype != n.dtype:
+            raise ValueError(
+                f"swap_params: leaf mismatch {n.shape}/{n.dtype} != "
+                f"{o.shape}/{o.dtype} — a swap must be re-trace-free")
+
+
 class ServingEngine:
     def __init__(self, cfg, fns, params, ecfg: EngineConfig):
         self.model_cfg = cfg
@@ -138,10 +165,12 @@ class ServingEngine:
         self.params_version = 0
         self._pending_params = None
         self.stats = {"tokens": 0, "host_syncs": 0, "decode_blocks": 0,
-                      "swaps": 0}
+                      "swaps": 0, "exported_slots": 0, "imported_slots": 0}
 
         self._prefill = jax.jit(self._prefill_impl)
         self._engine_step = jax.jit(self._engine_step_impl)
+        self._export = jax.jit(self._export_impl)
+        self._import = jax.jit(self._import_impl)
 
     # --- bucketing ---------------------------------------------------------
     def buckets(self) -> list[int]:
@@ -257,6 +286,116 @@ class ServingEngine:
         }
         return new_cache, new_state, first, done0
 
+    # --- slot migration (constellation serving plane) ----------------------
+    def _export_impl(self, cache, state, idx, drop):
+        """Gather rows `idx` of the slot state + KV cache into fresh device
+        buffers and deactivate `drop`-masked rows on the source.
+
+        Always full-width (idx/drop are (max_batch,)): one trace covers
+        every export size, so repeated migrations are jit cache hits."""
+        bundle_cache = {"k": jnp.take(cache["k"], idx, axis=1),
+                        "v": jnp.take(cache["v"], idx, axis=1),
+                        "pos": jnp.take(cache["pos"], idx, axis=0)}
+        bundle_state = jax.tree.map(lambda x: jnp.take(x, idx, axis=0),
+                                    state)
+        new_state = {**state, "active": state["active"] & ~drop}
+        return bundle_cache, bundle_state, new_state
+
+    def _import_impl(self, cache, state, bcache, bstate, src_for_dst, mask):
+        """Scatter bundle rows into `mask`-ed destination slots; row d
+        receives bundle row `src_for_dst[d]`. Unmasked rows are untouched,
+        so resident generations cannot be perturbed by an import."""
+        m5 = mask[None, :, None, None, None]
+        new_cache = {
+            "k": jnp.where(m5, jnp.take(bcache["k"], src_for_dst, axis=1),
+                           cache["k"]),
+            "v": jnp.where(m5, jnp.take(bcache["v"], src_for_dst, axis=1),
+                           cache["v"]),
+            "pos": jnp.where(mask, jnp.take(bcache["pos"], src_for_dst),
+                             cache["pos"]),
+        }
+
+        def sel(b, old):
+            g = jnp.take(b, src_for_dst, axis=0)
+            w = mask if old.ndim == 1 else mask[:, None]
+            return jnp.where(w, g, old)
+
+        return new_cache, jax.tree.map(sel, bstate, state)
+
+    def export_slots(self, slot_ids) -> dict:
+        """Extract the in-flight generations in `slot_ids` for migration.
+
+        Returns a bundle holding the slots' device state (last token,
+        remaining budget, temperature, eos, PRNG stream), their KV-cache
+        rows + per-row positions (fresh buffers — the source may keep
+        decoding its other slots), the Request objects, and the source's
+        params_version. The exported rows are deactivated and their slots
+        freed; everything device-side is ONE jitted gather, no re-trace
+        after the first call and no device->host transfer."""
+        slot_ids = list(slot_ids)
+        if not slot_ids:
+            raise ValueError("export_slots: empty slot list")
+        b = self.ecfg.max_batch
+        idx = np.zeros((b,), np.int32)
+        drop = np.zeros((b,), bool)
+        reqs = []
+        for j, s in enumerate(slot_ids):
+            req = self.slots[s]
+            if req is None:
+                raise ValueError(f"export_slots: slot {s} is empty")
+            idx[j] = s
+            drop[s] = True
+            reqs.append(req)
+        bcache, bstate, self.state = self._export(
+            self.cache, self.state, jnp.asarray(idx), jnp.asarray(drop))
+        for s in slot_ids:
+            self.slots[s] = None
+        self.stats["exported_slots"] += len(reqs)
+        return {"cache": bcache, "state": bstate, "requests": reqs,
+                "params_version": self.params_version,
+                "max_len": self.ecfg.max_len}
+
+    def import_slots(self, bundle) -> list[int]:
+        """Resume a bundle of exported generations on this engine.
+
+        Bit-exactness contract: this engine must serve the SAME param
+        snapshot the requests were decoding under at export (the bundle
+        carries the source's params_version — a mismatch raises instead of
+        silently mixing snapshots mid-generation) and share max_len (the
+        KV row length). Rows land in this engine's free slots via ONE
+        jitted scatter; decode then continues each request's PRNG stream
+        and ragged KV length exactly where the source stopped. Returns the
+        destination slot ids."""
+        if bundle["max_len"] != self.ecfg.max_len:
+            raise ValueError(
+                f"import_slots: max_len mismatch {bundle['max_len']} != "
+                f"{self.ecfg.max_len} — replicas must share the KV layout")
+        if bundle["params_version"] != self.params_version:
+            raise ValueError(
+                f"import_slots: param snapshot mismatch (bundle v"
+                f"{bundle['params_version']} != engine v"
+                f"{self.params_version}) — a migrated generation must "
+                "resume on its admission snapshot")
+        reqs = bundle["requests"]
+        free = [i for i, s in enumerate(self.slots) if s is None]
+        if len(free) < len(reqs):
+            raise ValueError(f"import_slots: {len(reqs)} rows but only "
+                             f"{len(free)} free slots")
+        b = self.ecfg.max_batch
+        src = np.zeros((b,), np.int32)
+        mask = np.zeros((b,), bool)
+        dst_slots = free[:len(reqs)]
+        for j, d in enumerate(dst_slots):
+            src[d] = j
+            mask[d] = True
+        self.cache, self.state = self._import(
+            self.cache, self.state, bundle["cache"], bundle["state"],
+            jnp.asarray(src), jnp.asarray(mask))
+        for d, req in zip(dst_slots, reqs):
+            self.slots[d] = req
+        self.stats["imported_slots"] += len(reqs)
+        return dst_slots
+
     # --- param hot-swap (serving/training co-residency) --------------------
     def swap_params(self, new_params):
         """Stage `new_params` as the next param snapshot to serve from.
@@ -276,17 +415,7 @@ class ServingEngine:
 
         Returns the version number the new params will serve under.
         """
-        old, new = jax.tree.structure(self.params), \
-            jax.tree.structure(new_params)
-        if old != new:
-            raise ValueError(f"swap_params: tree structure mismatch "
-                             f"({new} != {old})")
-        for o, n in zip(jax.tree.leaves(self.params),
-                        jax.tree.leaves(new_params)):
-            if o.shape != n.shape or o.dtype != n.dtype:
-                raise ValueError(
-                    f"swap_params: leaf mismatch {n.shape}/{n.dtype} != "
-                    f"{o.shape}/{o.dtype} — a swap must be re-trace-free")
+        check_swap_compatible(self.params, new_params)
         self._pending_params = new_params
         self._maybe_apply_swap()
         return self.params_version + (self._pending_params is not None)
@@ -306,8 +435,11 @@ class ServingEngine:
             raise ValueError(
                 f"request {req.uid}: prompt length {len(req.prompt)} "
                 f"exceeds max_len {self.ecfg.max_len}")
-        req._seq = self._next_seq
-        self._next_seq += 1
+        if req._seq < 0:
+            # a router may pre-assign plane-level seqs so each request's
+            # PRNG stream is independent of which replica it lands on
+            req._seq = self._next_seq
+            self._next_seq += 1
         self.queue.append(req)
 
     def _fill_slots(self):
@@ -408,7 +540,8 @@ class ServingEngine:
         """Number of distinct XLA traces compiled by the serving hot path,
         or -1 when jax's (private) jit-cache introspection is unavailable."""
         total = 0
-        for fn in (self._prefill, self._engine_step):
+        for fn in (self._prefill, self._engine_step, self._export,
+                   self._import):
             size = getattr(fn, "_cache_size", None)
             if size is None:
                 return -1

@@ -1,0 +1,326 @@
+"""Constellation serving plane: liveness-routed multi-replica serving.
+
+One `ServingEngine` per serving pod, fronted by a `ConstellationRouter`.
+The paper's constellation serves inference from the same fleet that
+trains, so the serving plane obeys the same physics as the training
+plane: the router admits requests only to pods the
+`ConstellationLinkModel.serving_mask` marks alive (a pod masked for
+training — straggler in the expanded orbit phase, or inside a SEFI/UECC
+repair window — is masked for serving at the same round,
+deterministically), weighting admissions toward well-connected pods by
+their cross-pod aggregate ISL bandwidth.
+
+When a pod's mask drops mid-generation the router DRAINS it instead of
+dropping traffic: every in-flight slot is migrated bit-exactly to a
+healthy replica via `engine.export_slots`/`import_slots` (jitted
+device->device gather/scatter of the slot state + KV rows — no re-trace,
+no host transfer) and decode resumes on the destination with the same
+PRNG stream, budget, and ragged KV length. A migrated request's token
+sequence is bit-identical to the same request served uninterrupted on
+one engine with the same param snapshot (asserted in tests). A pod whose
+slots cannot migrate yet (no free capacity on live pods) holds them
+frozen and retries every step — requests are deferred, never dropped.
+
+Determinism: admissions use smooth weighted round-robin over per-pod
+credits, the router (not the engines) assigns the per-request PRNG seq,
+and the liveness mask is a pure function of the tick — so a fixed
+liveness trace yields a bit-reproducible placement/migration/output
+schedule, and per-request outputs are independent of replica placement
+entirely.
+
+Param swaps are plane-wide and lockstep: `swap_params` (the
+`ParamPublisher` sink in launch/coserve.py) stages at the ROUTER, holds
+plane admissions, lets every in-flight generation drain (migrations
+included), and only then fans the swap out to all replicas at once —
+every replica is always on the same params_version, so a migration can
+never land on a replica serving a different snapshot than the request
+was admitted under (`import_slots` enforces it anyway).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Callable, Optional
+
+import numpy as np
+
+from ..core.isl.liveness import normalize_admission_weights
+from .engine import Request, ServingEngine, check_swap_compatible
+
+
+@dataclass(frozen=True)
+class ForcedOutage:
+    """Deterministic fault injection for the serving plane.
+
+    Fields:
+      at_tick: earliest router tick at which the outage strikes.
+      pod: pod index to strike; None = the pod with the most in-flight
+        slots at strike time (guarantees the outage actually exercises
+        migration), ties broken toward the lowest index. With pod=None
+        the strike is deferred past `at_tick` until some pod has
+        in-flight work — striking an idle plane would exercise nothing.
+      ticks: outage duration in router ticks from the actual strike;
+        None = rest of the run.
+    """
+    at_tick: int
+    pod: Optional[int] = None
+    ticks: Optional[int] = None
+
+
+class ConstellationRouter:
+    """Liveness-routed front for N ServingEngine replicas (one per pod).
+
+    mask_fn(t) -> (alive (n_pods,) bool, weights (n_pods,) float) is the
+    liveness feed — `ConstellationLinkModel.serving_mask` via
+    `liveness_mask_fn`, or None for an always-alive equal-weight plane.
+    The tick passed to mask_fn is the router's own step counter unless
+    `round_override` is set (launch/coserve.py pins it to the DiLoCo
+    round index so training and serving read the SAME mask schedule).
+
+    Duck-types the engine surface the launchers drive (`submit`, `step`,
+    `run`, `queue`, `finished`, `slots`, `ecfg`, `swap_params`,
+    `trace_count`), so `run_coserve` works unchanged on a plane.
+    """
+
+    def __init__(self, engines, mask_fn: Optional[Callable] = None,
+                 forced_outage: Optional[ForcedOutage] = None):
+        engines = list(engines)
+        if not engines:
+            raise ValueError("ConstellationRouter needs >= 1 engine")
+        if len({e.ecfg.max_len for e in engines}) != 1:
+            raise ValueError("replicas must share max_len (migration "
+                             "moves raw KV rows between caches)")
+        if len({e.params_version for e in engines}) != 1:
+            raise ValueError("replicas must start on one param snapshot")
+        self.engines = engines
+        self.n_pods = len(engines)
+        self.mask_fn = mask_fn
+        self.forced = forced_outage
+        self._forced_pod: Optional[int] = None
+        self._forced_at: Optional[int] = None
+        self.tick = 0
+        self.round_override: Optional[int] = None
+        self.queue: list[Request] = []
+        self.finished: list[Request] = []
+        self._next_seq = 0
+        self._credits = np.zeros(self.n_pods)
+        self._pending_params = None
+        self.params_version = engines[0].params_version
+        self._last_alive = None
+        self.stats = {
+            "migrations": 0, "migrated_slots": 0,
+            "deferred_slot_migrations": 0, "requeued": 0,
+            "masked_pod_ticks": 0, "mask_transitions": 0, "swaps": 0,
+            "admitted_per_pod": [0] * self.n_pods,
+        }
+
+    # --- liveness -----------------------------------------------------------
+    def _liveness(self):
+        t = self.tick if self.round_override is None else self.round_override
+        if self.mask_fn is None:
+            alive = np.ones(self.n_pods, bool)
+            weights = np.full(self.n_pods, 1.0 / self.n_pods)
+        else:
+            alive, weights = self.mask_fn(t)
+            alive = np.array(alive, bool, copy=True)
+            weights = np.array(weights, float, copy=True)
+        f = self.forced
+        if f is not None and self.tick >= f.at_tick:
+            if self._forced_pod is None:
+                if f.pod is not None:
+                    self._forced_pod, self._forced_at = f.pod, self.tick
+                else:
+                    # strike the busiest pod so the outage provably
+                    # exercises the migration path (deterministic: lowest
+                    # index on ties); wait for in-flight work to exist
+                    busy = [sum(s is not None for s in e.slots)
+                            for e in self.engines]
+                    if max(busy) > 0:
+                        self._forced_pod = max(
+                            range(self.n_pods),
+                            key=lambda i: (busy[i], -i))
+                        self._forced_at = self.tick
+            if self._forced_pod is not None and (
+                    f.ticks is None
+                    or self.tick < self._forced_at + f.ticks):
+                alive[self._forced_pod] = False
+        return alive, normalize_admission_weights(alive, weights)
+
+    # --- request intake -----------------------------------------------------
+    def submit(self, req: Request):
+        """Queue a request; the router owns the plane-level PRNG seq, so
+        the request's sampling stream is identical wherever it lands."""
+        if len(req.prompt) > self.engines[0].ecfg.max_len:
+            raise ValueError(
+                f"request {req.uid}: prompt length {len(req.prompt)} "
+                f"exceeds max_len {self.engines[0].ecfg.max_len}")
+        if req._seq < 0:
+            req._seq = self._next_seq
+            self._next_seq += 1
+        self.queue.append(req)
+
+    def _admit(self, alive, weights):
+        """Smooth weighted round-robin into live pods' free slots: each
+        admission adds `weights` to every pod's credit and picks the live
+        argmax — deterministic, bandwidth-proportional over time."""
+        self._credits = np.where(alive, self._credits, 0.0)
+        free = [sum(s is None for s in e.slots) for e in self.engines]
+        while self.queue:
+            avail = [i for i in range(self.n_pods)
+                     if alive[i] and free[i] > 0]
+            if not avail:
+                return
+            self._credits += weights
+            i = max(avail, key=lambda k: (self._credits[k], weights[k], -k))
+            self._credits[i] -= 1.0
+            self.engines[i].submit(self.queue.pop(0))
+            free[i] -= 1
+            self.stats["admitted_per_pod"][i] += 1
+
+    # --- drain-by-migration -------------------------------------------------
+    def _migrate_from_masked(self, alive, weights):
+        """Move every in-flight slot off masked pods onto live replicas
+        with free capacity (most-free first, then highest weight). Slots
+        that cannot move yet stay frozen on the masked pod — the masked
+        engine is never stepped, so their state is bit-preserved until
+        capacity frees (or the pod rejoins)."""
+        for i, src in enumerate(self.engines):
+            if alive[i]:
+                continue
+            if src.queue:            # un-prefilled admissions: just requeue
+                self.stats["requeued"] += len(src.queue)
+                self.queue[:0] = src.queue
+                src.queue = []
+            held = [s for s, r in enumerate(src.slots) if r is not None]
+            while held:
+                dests = [(j, sum(s is None for s in self.engines[j].slots))
+                         for j in range(self.n_pods) if alive[j]]
+                dests = [(j, f) for j, f in dests if f > 0]
+                if not dests:
+                    self.stats["deferred_slot_migrations"] += len(held)
+                    return
+                j, f = max(dests, key=lambda t: (t[1], weights[t[0]],
+                                                 -t[0]))
+                take, held = held[:f], held[f:]
+                self.engines[j].import_slots(src.export_slots(take))
+                self.stats["migrations"] += 1
+                self.stats["migrated_slots"] += len(take)
+
+    # --- plane-wide param swap ---------------------------------------------
+    def swap_params(self, new_params):
+        """Stage `new_params` for the WHOLE plane (the ParamPublisher
+        sink). Admissions are held plane-wide; in-flight generations —
+        including ones migrating off a masked pod — drain on the snapshot
+        they were admitted under; once every replica is simultaneously
+        empty the swap fans out to all of them in one step, keeping
+        params_version in lockstep across the plane (the invariant that
+        makes any live replica a bit-exact migration target)."""
+        check_swap_compatible(self.engines[0].params, new_params)
+        self._pending_params = new_params
+        self._maybe_apply_swap()
+        return self.params_version + (self._pending_params is not None)
+
+    def _maybe_apply_swap(self):
+        if self._pending_params is None:
+            return
+        if any(s is not None for e in self.engines for s in e.slots):
+            return
+        for e in self.engines:
+            e.swap_params(self._pending_params)   # idle => applies now
+            assert e._pending_params is None
+        self._pending_params = None
+        self.params_version += 1
+        self.stats["swaps"] += 1
+
+    # --- stepping -----------------------------------------------------------
+    def step(self) -> int:
+        """One plane step: refresh the mask, drain masked pods by
+        migration, apply a staged plane swap if everything drained, admit
+        to live pods (unless a swap is pending), then decode one block on
+        every live pod with work. Returns active slots decoded."""
+        alive, weights = self._liveness()
+        if self._last_alive is not None:
+            self.stats["mask_transitions"] += int(
+                (alive != self._last_alive).sum())
+        self._last_alive = alive.copy()
+        self.stats["masked_pod_ticks"] += int((~alive).sum())
+
+        self._migrate_from_masked(alive, weights)
+        self._maybe_apply_swap()
+        if self._pending_params is None:
+            self._admit(alive, weights)
+        n_active = 0
+        for i, e in enumerate(self.engines):
+            if alive[i] and (e.queue or any(s is not None
+                                            for s in e.slots)):
+                n_active += e.step()
+        for e in self.engines:
+            if e.finished:
+                self.finished.extend(e.finished)
+                e.finished.clear()
+        self._maybe_apply_swap()
+        self.tick += 1
+        return n_active
+
+    def run(self, max_steps: int = 10_000):
+        steps = 0
+        while steps < max_steps and (
+                self.queue
+                or any(e.queue for e in self.engines)
+                or any(s is not None for e in self.engines
+                       for s in e.slots)):
+            self.step()
+            steps += 1
+        return self.finished
+
+    # --- engine-compatible surface -----------------------------------------
+    @property
+    def ecfg(self):
+        return self.engines[0].ecfg
+
+    @property
+    def slots(self):
+        """Flattened slot view (engine-compatible: launchers poll
+        `any(s is not None for s in x.slots)`)."""
+        return [s for e in self.engines for s in e.slots]
+
+    def trace_count(self) -> int:
+        total = 0
+        for e in self.engines:
+            t = e.trace_count()
+            if t < 0:
+                return -1
+            total += t
+        return total
+
+    def plane_stats(self) -> dict:
+        """Router stats + summed engine stats (tokens, host_syncs, ...)."""
+        out = dict(self.stats)
+        agg = {}
+        for e in self.engines:
+            for k, v in e.stats.items():
+                agg[k] = agg.get(k, 0) + v
+        out["engines"] = agg
+        return out
+
+
+def check_forced_outage_contract(plane: ConstellationRouter, done,
+                                 n_requests: int):
+    """The `--force-outage-at` smoke contract, shared by the serve and
+    coserve launchers (and CI): a forced mid-run outage must complete
+    every request (zero drops) and must actually exercise the migration
+    drain path (>= 1 slot moved). Raises SystemExit on violation."""
+    if len(done) != n_requests:
+        raise SystemExit(f"dropped requests under forced outage: "
+                         f"{len(done)}/{n_requests} finished")
+    if plane.stats["migrated_slots"] < 1:
+        raise SystemExit("forced outage caused no migrations — the drain "
+                         "path did not run")
+
+
+def liveness_mask_fn(link_model):
+    """Adapt a `ConstellationLinkModel` to the router's mask_fn contract:
+    tick -> (alive, bandwidth-proportional weights) via `serving_mask`."""
+    def fn(t):
+        alive, weights, _ = link_model.serving_mask(int(t))
+        return alive, weights
+    return fn

@@ -196,7 +196,8 @@ class FaultTolerantTrainer:
                       "checkpoints": 0, "verify_failures": 0,
                       "threshold_widenings": 0, "drains": 0}
         self.policy = DetectionPolicy(ft, self.stats)
-        self._save_initial()
+        self._ckpt_threads = []
+        self._save_checkpoint(int(self.state["step"]))
 
     @property
     def loss_threshold(self):
@@ -231,13 +232,31 @@ class FaultTolerantTrainer:
         return same
 
     # -- checkpoint/rollback --------------------------------------------------
-    def _save_initial(self):
-        ckpt.save_replicated(jax.tree.map(np.asarray, self.state),
-                             self.ft.checkpoint_dirs, int(self.state["step"]),
-                             self.ft.keep)
+    def _save_checkpoint(self, step: int):
+        """Replicated snapshot via background serializer threads — the
+        device->host copy happens here (before the step path moves on),
+        the npz/fsync work happens off it (`save_replicated_async`, the
+        same path DiLoCoSupervisor uses). Joining the previous cadence's
+        threads first bounds the pileup to one in-flight save."""
+        for t in self._ckpt_threads:
+            t.join()
+        self._ckpt_threads = ckpt.save_replicated_async(
+            self.state, self.ft.checkpoint_dirs, step, self.ft.keep)
         self.stats["checkpoints"] += 1
 
+    def join_checkpoints(self):
+        """Wait for in-flight background checkpoint writes (end of run /
+        before anything reads the checkpoint directories)."""
+        for t in self._ckpt_threads:
+            t.join()
+        self._ckpt_threads = []
+
     def _rollback(self):
+        # the newest snapshot may still be serializing on a background
+        # thread: join first so restore_latest sees it (and never reads a
+        # half-written tmp dir — saves are atomic, but the INTENDED
+        # restore point must exist before we pick "latest")
+        self.join_checkpoints()
         step, self.state = ckpt.restore_latest(self.state,
                                                self.ft.checkpoint_dirs)
         self.stats["rollbacks"] += 1
@@ -248,10 +267,7 @@ class FaultTolerantTrainer:
     def _maybe_checkpoint(self, old_step: int, new_step: int):
         ce = self.ft.checkpoint_every
         if new_step // ce > old_step // ce:
-            ckpt.save_replicated(jax.tree.map(np.asarray, self.state),
-                                 self.ft.checkpoint_dirs, new_step,
-                                 self.ft.keep)
-            self.stats["checkpoints"] += 1
+            self._save_checkpoint(new_step)
 
     # -- main loop -------------------------------------------------------------
     def run(self, n_steps: int, forced_sdc_at: dict | None = None):
@@ -292,6 +308,7 @@ class FaultTolerantTrainer:
             self.losses.append(loss)
             history.append({"step": step, "loss": loss, "gnorm": gnorm})
             self._maybe_checkpoint(step, step + 1)
+        self.join_checkpoints()
         return history
 
     def run_fused(self, n_steps: int):
@@ -350,6 +367,7 @@ class FaultTolerantTrainer:
             self.losses.extend(float(x) for x in block["loss"])
             self.gnorms.extend(float(x) for x in block["grad_norm"])
             self._maybe_checkpoint(step, step + K)
+        self.join_checkpoints()
         return history
 
 

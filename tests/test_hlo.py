@@ -1,0 +1,39 @@
+"""HLO collective byte accounting: per-kind totals, the per-dtype split
+(the compressed DiLoCo outer sync's s8/top-k payloads must be separable
+from the f32 baseline), async start/done dedup, and wire factors."""
+from repro.analysis.hlo import collective_bytes, collective_bytes_loop_aware
+
+HLO = """\
+ENTRY %main (a: f32[16,8]) -> f32[16,8] {
+  %ar = f32[16,8]{1,0} all-reduce(%a), replica_groups={}
+  %q = s8[16,8]{1,0} convert(%ar)
+  %ag = s8[32,8]{1,0} all-gather(%q), dimensions={0}
+  %sc = f32[16]{0} all-gather(%scales), dimensions={0}
+  %cp = (f32[8]{0}, u32[]) collective-permute(%x)
+  %st = f32[4]{0} all-reduce-start(%y)
+  %dn = f32[4]{0} all-reduce-done(%st)
+}
+"""
+
+
+def test_bytes_by_dtype_splits_compressed_payload():
+    out = collective_bytes(HLO)
+    # all-reduce: 16*8*4 + the -start (4*4); -done is deduped
+    assert out["bytes"]["all-reduce"] == 512 + 16
+    assert out["bytes_by_dtype"]["all-reduce"] == {"f32": 512 + 16}
+    # all-gather carries the s8 payload AND its f32 scales, split apart
+    assert out["bytes_by_dtype"]["all-gather"] == {"s8": 256, "f32": 64}
+    assert out["bytes"]["all-gather"] == 320
+    # tuple result shapes sum each typed element
+    assert out["bytes_by_dtype"]["collective-permute"] == {"f32": 32,
+                                                           "u32": 4}
+    assert out["counts"] == {"all-reduce": 2, "all-gather": 2,
+                             "collective-permute": 1}
+    # wire factors: all-reduce 2x, others 1x
+    assert out["wire_bytes"] == 2 * 528 + 320 + 36
+
+
+def test_loop_aware_totals_unchanged_by_dtype_split():
+    la = collective_bytes_loop_aware(HLO)
+    assert la["bytes"]["all-reduce"] == 528
+    assert la["bytes"]["all-gather"] == 320

@@ -199,6 +199,28 @@ class TestFaultTolerance:
         assert tr.stats["rollbacks"] == 0
         assert tr.stats["checkpoints"] >= 2
 
+    def test_checkpoints_are_async_joined_and_restorable(self, tmp_path):
+        """Snapshots now ride background serializer threads off the drain
+        boundary (like DiLoCoSupervisor's): run() must join them before
+        returning, both replica dirs must hold the final verified
+        snapshot, and the async-written replicas must restore
+        bit-identically to the live state they captured."""
+        _, _, state, data, step = _tiny_setup()
+        ft = FTConfig(checkpoint_dirs=(str(tmp_path / "a"),
+                                       str(tmp_path / "b")),
+                      checkpoint_every=10)
+        tr = FaultTolerantTrainer(step, state, data, ft)
+        tr.run(20)
+        assert tr._ckpt_threads == []           # run() joined the writers
+        for d in ft.checkpoint_dirs:
+            names = sorted(p for p in os.listdir(d)
+                           if p.startswith("step-"))
+            assert names and names[-1] == "step-00000020"
+        got_step, restored = ckpt.restore_latest(
+            jax.tree.map(np.asarray, tr.state), ft.checkpoint_dirs)
+        assert got_step == 20
+        _assert_trees_equal(restored, jax.tree.map(np.asarray, tr.state))
+
     def test_persistent_spike_widens_thresholds_and_completes(self,
                                                               tmp_path):
         """A GENUINE loss spike (not transient SDC) re-triggers the same
