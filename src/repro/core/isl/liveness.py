@@ -54,6 +54,29 @@ def normalize_admission_weights(alive, weights):
     return weights
 
 
+def choose_standby_pod(primary: int, alive, weights, has_room):
+    """Pick the warm-standby pod for a session homed on `primary`: the
+    nearest ring neighbor (pods partition the lattice into contiguous
+    satellite ranges, so ring distance tracks physical/ISL adjacency)
+    among ALIVE pods with standby room, breaking distance ties toward
+    the higher-bandwidth pod (then the lower index). Returns None when no
+    live pod can host a replica. Shared by the serving grid's replication
+    placement so standby locality follows the same liveness/bandwidth
+    signal as admission."""
+    alive = np.asarray(alive, bool)
+    weights = np.asarray(weights, float)
+    n = alive.size
+    best = None
+    for p in range(n):
+        if p == primary or not alive[p] or not has_room[p]:
+            continue
+        d = min((p - primary) % n, (primary - p) % n)
+        key = (d, -weights[p], p)
+        if best is None or key < best[0]:
+            best = (key, p)
+    return None if best is None else best[1]
+
+
 @dataclass(frozen=True)
 class LivenessConfig:
     """Round -> mask model parameters.

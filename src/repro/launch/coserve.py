@@ -29,8 +29,9 @@ re-trace: same shapes/dtypes).
   PYTHONPATH=src python -m repro.launch.coserve --steps 24 --replicas 2 \
       --constellation --serving-constellation
 
-  # forced serving-pod outage mid-run: in-flight generations migrate
-  # bit-exactly to the surviving replica (zero drops)
+  # forced serving-pod outage mid-run: in-flight generations fail over
+  # bit-exactly to the surviving replica (zero drops); the schedule
+  # grammar allows repeated strike/repair cycles ("2:1:3,9:1:3")
   PYTHONPATH=src python -m repro.launch.coserve --steps 16 --replicas 2 \
       --force-outage-at 2
 """
@@ -43,9 +44,9 @@ import jax
 import numpy as np
 
 from repro.models import registry
-from repro.serving import (ConstellationRouter, EngineConfig, ForcedOutage,
-                           Request, ServingEngine,
-                           check_forced_outage_contract, liveness_mask_fn)
+from repro.serving import (ConstellationRouter, EngineConfig, Request,
+                           ServingEngine, check_forced_outage_contract,
+                           liveness_mask_fn, parse_outage_spec)
 from repro.train import (AdamWConfig, DataConfig, DiLoCoConfig,
                          DiLoCoSupervisor, FTConfig, ParamPublisher,
                          PublishConfig, SyntheticLM, TrainConfig,
@@ -125,10 +126,12 @@ def build_parser():
                          "liveness mask (the serving twin of "
                          "--constellation; reuses the training link model "
                          "when pod counts match)")
-    ap.add_argument("--force-outage-at", type=int, default=None,
-                    help="strike the busiest serving pod at this router "
-                         "tick: its in-flight generations must migrate "
-                         "(requires --replicas >= 2)")
+    ap.add_argument("--force-outage-at", type=str, default=None,
+                    help="chaos schedule 'AT[:POD[:TICKS]][,...]': strike "
+                         "pod POD ('*' or omitted = busiest) at router "
+                         "tick AT for TICKS ticks (omitted = rest of "
+                         "run); in-flight generations must fail over, "
+                         "not drop (requires --replicas >= 2)")
     ap.add_argument("--requests", type=int, default=8)
     ap.add_argument("--max-new-tokens", type=int, default=8)
     ap.add_argument("--max-len", type=int, default=64)
@@ -205,7 +208,7 @@ def main():
                     n_pods=args.replicas,
                     outer_wire_bytes=outer_wire_bytes(params)))
             mask_fn = liveness_mask_fn(serve_model)
-        forced = (ForcedOutage(at_tick=args.force_outage_at)
+        forced = (parse_outage_spec(args.force_outage_at)
                   if args.force_outage_at is not None else None)
         eng = ConstellationRouter(
             [ServingEngine(cfg, fns, params0, ecfg)

@@ -3,15 +3,30 @@
   PYTHONPATH=src python -m repro.launch.serve --arch suncatcher-lm-100m \
       --requests 8 --slots 4 --max-len 128 --decode-block 8
 
-Constellation serving plane: --replicas N fronts N engine replicas (one
-per serving pod) with a liveness-routed request router;
---serving-constellation derives the pod mask + bandwidth weights from the
-orbital/ISL/radiation stack, and --force-outage-at T strikes the busiest
-pod at router tick T — its in-flight generations migrate bit-exactly to
-healthy replicas (zero drops; the launcher asserts it):
+Tuple-space serving grid: --replicas N fronts N engine replicas (one per
+serving pod) with a liveness-routed session grid — requests partition by
+key across pods, every in-flight slot keeps a warm standby replica on a
+neighbor pod (incremental background replication), and a masked pod
+fails over by pointer-flipping to the standbys (full drain only as a
+fallback; --full-drain disables replication for the PR 5 drain-only
+plane). --serving-constellation derives the pod mask + bandwidth weights
+from the orbital/ISL/radiation stack, and --force-outage-at takes a
+chaos schedule `AT[:POD[:TICKS]][,...]` (POD `*` = busiest pod at strike
+time, TICKS omitted = rest of run) — repeated multi-pod strike/repair
+cycles, bit-deterministically replayable; the launcher asserts the
+zero-drop contract, plus --expect-pointer-flip / --expect-rebalance for
+the grid-specific guarantees. --waves splits the workload into
+sequential waves and asserts the jit trace count stays flat after the
+first (failover, rejoin-wipe, rebalance and replication must all be
+cache hits by wave 2):
 
   PYTHONPATH=src python -m repro.launch.serve --replicas 3 --requests 9 \
       --slots 2 --max-len 64 --force-outage-at 3
+
+  PYTHONPATH=src python -m repro.launch.serve --replicas 2 --requests 6 \
+      --slots 3 --max-len 64 --waves 2 --max-new-tokens 48 \
+      --force-outage-at "2:1:3,10:1:3" --expect-pointer-flip \
+      --expect-rebalance
 
   PYTHONPATH=src python -m repro.launch.serve --replicas 2 \
       --serving-constellation --requests 8
@@ -26,9 +41,10 @@ import jax
 import numpy as np
 
 from repro.models import registry
-from repro.serving import (ConstellationRouter, EngineConfig, ForcedOutage,
+from repro.serving import (ConstellationRouter, EngineConfig, GridConfig,
                            Request, ServingEngine,
-                           check_forced_outage_contract, liveness_mask_fn)
+                           check_forced_outage_contract, liveness_mask_fn,
+                           parse_outage_spec)
 
 
 def build_parser():
@@ -51,15 +67,38 @@ def build_parser():
     ap.add_argument("--serving-constellation", action="store_true",
                     help="derive the serving pod mask + admission weights "
                          "from the orbital/ISL/radiation stack")
-    ap.add_argument("--force-outage-at", type=int, default=None,
-                    help="strike the busiest pod at this router tick; its "
-                         "in-flight requests must migrate, not drop "
-                         "(requires --replicas >= 2)")
+    ap.add_argument("--force-outage-at", type=str, default=None,
+                    help="chaos schedule 'AT[:POD[:TICKS]][,...]': strike "
+                         "pod POD ('*' or omitted = busiest) at router "
+                         "tick AT for TICKS ticks (omitted = rest of "
+                         "run); repeatable, comma-separated (requires "
+                         "--replicas >= 2)")
+    ap.add_argument("--full-drain", action="store_true",
+                    help="disable warm-standby replication: failover "
+                         "falls back to full export/import drains (the "
+                         "pre-grid serving plane)")
+    ap.add_argument("--repl-chunk", type=int, default=None,
+                    help="KV rows shipped per slot per replication tick "
+                         "(default: whole row — standby catches up in "
+                         "one sync)")
+    ap.add_argument("--defer-deadline", type=int, default=100,
+                    help="max ticks a failover may stay deferred (frozen "
+                         "on a masked pod with no capacity anywhere) "
+                         "before the router raises")
+    ap.add_argument("--waves", type=int, default=1,
+                    help="serve the workload in N sequential waves and "
+                         "require a FLAT jit trace count after wave 1")
+    ap.add_argument("--expect-pointer-flip", action="store_true",
+                    help="outage contract: require >= 1 pointer-flip "
+                         "failover (standby promotion, not a full drain)")
+    ap.add_argument("--expect-rebalance", action="store_true",
+                    help="outage contract: require >= 1 rebalanced slot "
+                         "after a pod rejoined")
     return ap
 
 
 def build_plane(cfg, fns, params, args):
-    """N engine replicas behind a ConstellationRouter (the serving plane)."""
+    """N engine replicas behind a ConstellationRouter (the serving grid)."""
     ecfg = EngineConfig(max_batch=args.slots, max_len=args.max_len,
                         decode_block=args.decode_block)
     engines = [ServingEngine(cfg, fns, params, ecfg)
@@ -69,10 +108,13 @@ def build_plane(cfg, fns, params, args):
         from repro.core.isl import ConstellationLinkModel, LivenessConfig
         mask_fn = liveness_mask_fn(ConstellationLinkModel(
             cfg=LivenessConfig(n_pods=args.replicas)))
-    forced = (ForcedOutage(at_tick=args.force_outage_at)
+    forced = (parse_outage_spec(args.force_outage_at)
               if args.force_outage_at is not None else None)
+    grid = GridConfig(replicate=not args.full_drain,
+                      repl_chunk=args.repl_chunk,
+                      defer_deadline=args.defer_deadline)
     return ConstellationRouter(engines, mask_fn=mask_fn,
-                               forced_outage=forced)
+                               forced_outage=forced, grid=grid)
 
 
 def main():
@@ -95,16 +137,23 @@ def main():
                                          max_len=args.max_len,
                                          decode_block=args.decode_block))
     rng = np.random.default_rng(0)
-    for uid in range(args.requests):
-        eng.submit(Request(uid=uid,
-                           prompt=rng.integers(
-                               0, cfg.vocab_size,
-                               size=int(rng.integers(4, 16))).astype(
-                                   np.int32),
-                           max_new_tokens=args.max_new_tokens,
-                           temperature=args.temperature))
+    reqs = [Request(uid=uid,
+                    prompt=rng.integers(
+                        0, cfg.vocab_size,
+                        size=int(rng.integers(4, 16))).astype(np.int32),
+                    max_new_tokens=args.max_new_tokens,
+                    temperature=args.temperature)
+            for uid in range(args.requests)]
+    waves = max(1, args.waves)
+    per_wave = -(-len(reqs) // waves)
     t0 = time.time()
-    done = eng.run()
+    trace_marks = []
+    done = []
+    for w in range(waves):
+        for r in reqs[w * per_wave:(w + 1) * per_wave]:
+            eng.submit(r)
+        done = eng.run()
+        trace_marks.append(eng.trace_count())
     dt = time.time() - t0
     for r in sorted(done, key=lambda r: r.uid):
         print(f"req {r.uid}: {len(r.prompt)} prompt toks -> "
@@ -112,17 +161,28 @@ def main():
     if isinstance(eng, ConstellationRouter):
         s = eng.plane_stats()
         tok = s["engines"]["tokens"]
-        print(f"{cfg.name}: plane of {args.replicas} replicas x "
+        print(f"{cfg.name}: grid of {args.replicas} replicas x "
               f"{args.slots} slots served {len(done)} requests | "
-              f"{tok / dt:.0f} tok/s | {s['migrated_slots']} slots "
-              f"migrated in {s['migrations']} migrations | "
+              f"{tok / dt:.0f} tok/s | {s['pointer_flips']} pointer "
+              f"flips + {s['full_migrations']} full drains "
+              f"({s['migrated_slots']} slots failed over) | "
+              f"{s['rebalanced_slots']} rebalanced | "
+              f"{s['replication_syncs']} standby syncs "
+              f"({s['replicated_rows']} delta rows vs "
+              f"{s['full_rows_equiv']} full-row equiv) | "
               f"{s['masked_pod_ticks']} masked pod-ticks | "
-              f"admitted/pod {s['admitted_per_pod']} | "
+              f"admitted/pod {s['admitted_per_pod']} "
+              f"(home {s['admitted_home']}/spill {s['admitted_spill']}) | "
               f"{eng.trace_count()} traces")
         if args.force_outage_at is not None:
-            check_forced_outage_contract(eng, done, args.requests)
-            print(f"  forced outage at tick {args.force_outage_at}: "
-                  f"zero drops, {s['migrated_slots']} slots migrated OK")
+            check_forced_outage_contract(
+                eng, done, args.requests,
+                expect_pointer_flip=args.expect_pointer_flip,
+                expect_rebalance=args.expect_rebalance)
+            print(f"  chaos schedule '{args.force_outage_at}': zero "
+                  f"drops, {s['migrated_slots']} slots failed over "
+                  f"({s['pointer_flips']} flips), "
+                  f"{s['rebalanced_slots']} rebalanced OK")
     else:
         s = eng.stats
         print(f"{cfg.name}: served {len(done)} requests on {args.slots} "
@@ -130,6 +190,14 @@ def main():
               f"{s['host_syncs'] / max(s['tokens'], 1):.3f} "
               f"host-syncs/token | {eng.trace_count()} traces "
               f"(buckets={eng.buckets()}, decode_block={args.decode_block})")
+    if waves > 1 and trace_marks[0] >= 0 \
+            and trace_marks[-1] != trace_marks[0]:
+        raise SystemExit(
+            f"trace count not flat across waves: {trace_marks} — wave 1 "
+            f"must compile everything the steady state needs")
+    if waves > 1:
+        print(f"  {waves} waves, trace count flat at {trace_marks[-1]} "
+              f"after wave 1")
 
 
 if __name__ == "__main__":

@@ -1,6 +1,8 @@
 """Batched serving: continuous-batching engine over the model zoo, plus
-the liveness-routed multi-replica serving plane (router.py)."""
+the tuple-space serving grid — a liveness-routed, warm-standby-replicated
+session plane (router.py) with declarative fault injection (chaos.py)."""
+from .chaos import ChaosEvent, ChaosSchedule, parse_outage_spec
 from .engine import (EngineConfig, Request, ServingEngine,
                      check_swap_compatible)
-from .router import (ConstellationRouter, ForcedOutage,
+from .router import (ConstellationRouter, ForcedOutage, GridConfig,
                      check_forced_outage_contract, liveness_mask_fn)

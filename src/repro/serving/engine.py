@@ -164,13 +164,19 @@ class ServingEngine:
         self.finished: list[Request] = []
         self.params_version = 0
         self._pending_params = None
+        self.standby = None          # lazily allocated warm-standby store
         self.stats = {"tokens": 0, "host_syncs": 0, "decode_blocks": 0,
-                      "swaps": 0, "exported_slots": 0, "imported_slots": 0}
+                      "swaps": 0, "exported_slots": 0, "imported_slots": 0,
+                      "standby_syncs": 0, "promoted_slots": 0}
 
         self._prefill = jax.jit(self._prefill_impl)
         self._engine_step = jax.jit(self._engine_step_impl)
         self._export = jax.jit(self._export_impl)
         self._import = jax.jit(self._import_impl)
+        self._delta_export = jax.jit(self._delta_export_impl,
+                                     static_argnums=(4,))
+        self._standby_apply = jax.jit(self._standby_apply_impl)
+        self._deactivate = jax.jit(self._deactivate_impl)
 
     # --- bucketing ---------------------------------------------------------
     def buckets(self) -> list[int]:
@@ -396,6 +402,173 @@ class ServingEngine:
         self.stats["imported_slots"] += len(reqs)
         return dst_slots
 
+    # --- warm-standby replication (tuple-space serving grid) ---------------
+    def _delta_export_impl(self, cache, state, idx, starts, width):
+        """Gather a `width`-wide window of KV rows starting at per-row
+        `starts` (the replication cursor) plus the full per-slot state
+        rows, for the slots in `idx`. This is the grid's delta shipper:
+        only rows written since the last sync cross the (simulated) wire,
+        not the whole max_len cache row. Full-width (idx/starts are
+        (max_batch,)) so every sync size shares one trace."""
+        k = jnp.take(cache["k"], idx, axis=1)          # (L, B, M, Hkv, dh)
+        v = jnp.take(cache["v"], idx, axis=1)
+        pos = jnp.take(cache["pos"], idx)
+        cols = starts[:, None] + jnp.arange(width)     # (B, W)
+        colc = jnp.clip(cols, 0, k.shape[2] - 1)[None, :, :, None, None]
+        kw = jnp.take_along_axis(k, colc, axis=2)      # (L, B, W, Hkv, dh)
+        vw = jnp.take_along_axis(v, colc, axis=2)
+        bstate = jax.tree.map(lambda x: jnp.take(x, idx, axis=0), state)
+        return kw, vw, pos, bstate
+
+    def _standby_apply_impl(self, sb_cache, sb_state, kw, vw, bpos, bstate,
+                            src_for_dst, starts, mask):
+        """Scatter a delta bundle into `mask`-ed standby rows: row r takes
+        bundle row `src_for_dst[r]`'s KV window at [starts[r],
+        starts[r] + W) (clipped to the rows actually written, i.e. the
+        source's kv pos) and its full state row. standby `pos` tracks the
+        replication cursor — when it reaches the source's pos the standby
+        is promotable (a pointer-flip failover target)."""
+        W = kw.shape[2]
+        M = sb_cache["k"].shape[2]
+        kw = jnp.take(kw, src_for_dst, axis=1)
+        vw = jnp.take(vw, src_for_dst, axis=1)
+        pos = jnp.take(bpos, src_for_dst)
+        pend = jnp.clip(pos - starts, 0, W)            # rows to copy
+        rel = jnp.arange(M)[None, :] - starts[:, None]  # (B, M)
+        in_win = (rel >= 0) & (rel < pend[:, None]) & mask[:, None]
+        relc = jnp.clip(rel, 0, W - 1)[None, :, :, None, None]
+        w5 = in_win[None, :, :, None, None]
+        new_cache = {
+            "k": jnp.where(w5, jnp.take_along_axis(kw, relc, axis=2),
+                           sb_cache["k"]),
+            "v": jnp.where(w5, jnp.take_along_axis(vw, relc, axis=2),
+                           sb_cache["v"]),
+            "pos": jnp.where(mask, jnp.minimum(starts + W, pos),
+                             sb_cache["pos"]),
+        }
+
+        def sel(b, old):
+            g = jnp.take(b, src_for_dst, axis=0)
+            return jnp.where(mask if old.ndim == 1 else mask[:, None],
+                             g, old)
+
+        return new_cache, jax.tree.map(sel, bstate, sb_state)
+
+    def _deactivate_impl(self, state, drop):
+        return {**state, "active": state["active"] & ~drop}
+
+    def ensure_standby(self):
+        """Allocate the warm-standby store: a full-width mirror of the
+        slot state + KV cache holding replicas of OTHER pods' in-flight
+        generations. Lazy — engines outside a replicated grid never pay
+        the memory."""
+        if self.standby is None:
+            self.standby = {
+                "cache": {"k": jnp.zeros_like(self.cache["k"]),
+                          "v": jnp.zeros_like(self.cache["v"]),
+                          "pos": jnp.zeros_like(self.cache["pos"])},
+                "state": jax.tree.map(jnp.zeros_like, self.state),
+            }
+
+    def export_delta(self, entries, width: int) -> dict:
+        """Delta-export `entries` = [(slot, cursor), ...]: each slot's KV
+        window [cursor, cursor + width) + its state row, in ONE jitted
+        gather. Unlike `export_slots` this does NOT deactivate or free
+        anything — the source keeps decoding; this is the background
+        replication feed, off the decode critical path (no host sync)."""
+        b = self.ecfg.max_batch
+        if not 0 < len(entries) <= b:
+            raise ValueError(f"export_delta: {len(entries)} entries for "
+                             f"{b} slots")
+        idx = np.zeros((b,), np.int32)
+        starts = np.zeros((b,), np.int32)
+        for j, (s, c) in enumerate(entries):
+            if self.slots[s] is None:
+                raise ValueError(f"export_delta: slot {s} is empty")
+            idx[j] = s
+            starts[j] = c
+        kw, vw, pos, bstate = self._delta_export(
+            self.cache, self.state, jnp.asarray(idx), jnp.asarray(starts),
+            int(width))
+        return {"kw": kw, "vw": vw, "pos": pos, "state": bstate,
+                "starts": starts, "params_version": self.params_version,
+                "max_len": self.ecfg.max_len}
+
+    def standby_apply(self, bundle, placements):
+        """Apply a delta bundle to this engine's standby store.
+        `placements` = [(bundle_row, standby_row), ...]; ONE jitted
+        scatter, no host sync. The bundle must come from an engine on the
+        same param snapshot and KV layout (a standby is only ever
+        promoted into THIS engine, so the import invariants apply at
+        write time, not just at failover)."""
+        if bundle["max_len"] != self.ecfg.max_len:
+            raise ValueError(
+                f"standby_apply: max_len mismatch {bundle['max_len']} != "
+                f"{self.ecfg.max_len}")
+        if bundle["params_version"] != self.params_version:
+            raise ValueError(
+                f"standby_apply: param snapshot mismatch (bundle v"
+                f"{bundle['params_version']} != engine v"
+                f"{self.params_version})")
+        self.ensure_standby()
+        b = self.ecfg.max_batch
+        src = np.zeros((b,), np.int32)
+        starts = np.zeros((b,), np.int32)
+        mask = np.zeros((b,), bool)
+        for j, r in placements:
+            src[r] = j
+            starts[r] = bundle["starts"][j]
+            mask[r] = True
+        sc, ss = self._standby_apply(
+            self.standby["cache"], self.standby["state"], bundle["kw"],
+            bundle["vw"], bundle["pos"], bundle["state"],
+            jnp.asarray(src), jnp.asarray(starts), jnp.asarray(mask))
+        self.standby = {"cache": sc, "state": ss}
+        self.stats["standby_syncs"] += 1
+
+    def promote_standby(self, pairs) -> list[int]:
+        """Pointer-flip failover: resume `pairs` = [(standby_row,
+        Request), ...] from this engine's OWN standby store into its free
+        slots. The replica is already resident — no export from the (dead)
+        source pod, no cross-pod transfer on the critical path; the only
+        device work is the same one jitted scatter `import_slots` uses
+        (cache hit). The caller (the router) must only promote FRESH
+        standbys (cursor == source pos, state synced after the source's
+        last decode block) — that is what makes the continuation
+        bit-identical."""
+        if self.standby is None:
+            raise ValueError("promote_standby: no standby store")
+        reqs = [r for _, r in pairs]
+        free = [i for i, s in enumerate(self.slots) if s is None]
+        if len(free) < len(reqs):
+            raise ValueError(f"promote_standby: {len(reqs)} rows but only "
+                             f"{len(free)} free slots")
+        b = self.ecfg.max_batch
+        src = np.zeros((b,), np.int32)
+        mask = np.zeros((b,), bool)
+        dst_slots = free[:len(reqs)]
+        for (row, _), d in zip(pairs, dst_slots):
+            src[d] = row
+            mask[d] = True
+        self.cache, self.state = self._import(
+            self.cache, self.state, self.standby["cache"],
+            self.standby["state"], jnp.asarray(src), jnp.asarray(mask))
+        for d, req in zip(dst_slots, reqs):
+            self.slots[d] = req
+        self.stats["promoted_slots"] += len(reqs)
+        return dst_slots
+
+    def clear_rows(self, slot_ids):
+        """Deactivate device rows whose generations now live elsewhere
+        (pointer-flipped off this pod, or shed). On a masked pod this is
+        deferred to rejoin — it models the reboot wiping slot memory —
+        so the flip itself never touches the dead engine."""
+        b = self.ecfg.max_batch
+        drop = np.zeros((b,), bool)
+        for s in slot_ids:
+            drop[s] = True
+        self.state = self._deactivate(self.state, jnp.asarray(drop))
+
     # --- param hot-swap (serving/training co-residency) --------------------
     def swap_params(self, new_params):
         """Stage `new_params` as the next param snapshot to serve from.
@@ -541,7 +714,8 @@ class ServingEngine:
         or -1 when jax's (private) jit-cache introspection is unavailable."""
         total = 0
         for fn in (self._prefill, self._engine_step, self._export,
-                   self._import):
+                   self._import, self._delta_export, self._standby_apply,
+                   self._deactivate):
             size = getattr(fn, "_cache_size", None)
             if size is None:
                 return -1

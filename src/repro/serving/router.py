@@ -1,61 +1,93 @@
-"""Constellation serving plane: liveness-routed multi-replica serving.
+"""Tuple-space serving grid: a partitioned, replicated session "space"
+across N serving pods (the Space-Based Architecture pattern, applied to
+the paper's constellation).
 
 One `ServingEngine` per serving pod, fronted by a `ConstellationRouter`.
-The paper's constellation serves inference from the same fleet that
-trains, so the serving plane obeys the same physics as the training
-plane: the router admits requests only to pods the
+The router admits requests only to pods the
 `ConstellationLinkModel.serving_mask` marks alive (a pod masked for
 training — straggler in the expanded orbit phase, or inside a SEFI/UECC
 repair window — is masked for serving at the same round,
-deterministically), weighting admissions toward well-connected pods by
-their cross-pod aggregate ISL bandwidth.
+deterministically), and the plane survives restart-class outages without
+a full drain on the critical path:
 
-When a pod's mask drops mid-generation the router DRAINS it instead of
-dropping traffic: every in-flight slot is migrated bit-exactly to a
-healthy replica via `engine.export_slots`/`import_slots` (jitted
-device->device gather/scatter of the slot state + KV rows — no re-trace,
-no host transfer) and decode resumes on the destination with the same
-PRNG stream, budget, and ragged KV length. A migrated request's token
-sequence is bit-identical to the same request served uninterrupted on
-one engine with the same param snapshot (asserted in tests). A pod whose
-slots cannot migrate yet (no free capacity on live pods) holds them
-frozen and retries every step — requests are deferred, never dropped.
+- **Partitioning.** Sessions are partitioned by request key (a hash of
+  `Request.uid`): admission prefers the key's home pod while it is alive
+  and has capacity, falling back to smooth weighted round-robin over the
+  bandwidth-proportional admission weights. Placement is a pure
+  scheduling concern — outputs are bit-independent of it.
+- **Warm standbys.** Every in-flight slot keeps a replica of its state +
+  KV rows on a liveness-chosen neighbor pod
+  (`core.isl.liveness.choose_standby_pod`), maintained by *incremental*
+  background replication: each replication tick ships only the KV rows
+  written since the last sync (`engine.export_delta`, one jitted gather
+  per (source, standby) pair) plus the tiny per-slot state row, off the
+  decode critical path and with zero host syncs.
+- **Pointer-flip failover.** When a pod's mask drops, each of its
+  in-flight slots whose standby is FRESH (replication cursor caught up
+  to the source's kv pos, state synced after its last decode block) is
+  resumed by promoting the already-resident standby row into a free slot
+  of the standby pod — no export from the dead pod, no full-width
+  KV transfer on the critical path, and the continuation is bit-identical
+  to an uninterrupted single-engine run (greedy and temperature; proven
+  in tests). Slots without a usable standby fall back to the PR 5 drain
+  (full `export_slots`/`import_slots` migration), and slots with no
+  capacity anywhere are DEFERRED: frozen bit-exact on the masked pod,
+  aged every tick, retried, and surfaced in `plane_stats()`; past
+  `GridConfig.defer_deadline` the router raises (or sheds with an
+  explicit drop stat) instead of starving silently.
+- **Rebalance.** When a pod rejoins, weight-aware background rebalancing
+  moves sessions back (at most `rebalance_per_tick` per tick, preferring
+  each session's home pod and pointer-flipping when its standby already
+  lives on the destination) until per-pod occupancy matches the
+  largest-remainder quota of the admission weights — a long outage no
+  longer leaves the plane permanently skewed.
+- **Reservation.** Deferred sessions with a fresh standby reserve
+  capacity on their standby pod: admission and rebalance both subtract
+  reservations from free capacity, so a recovering session can never be
+  double-booked out of the slot it is waiting for.
 
-Determinism: admissions use smooth weighted round-robin over per-pod
-credits, the router (not the engines) assigns the per-request PRNG seq,
-and the liveness mask is a pure function of the tick — so a fixed
-liveness trace yields a bit-reproducible placement/migration/output
-schedule, and per-request outputs are independent of replica placement
-entirely.
+Fault injection is a first-class input: `forced_outage` accepts the PR 5
+single-strike `ForcedOutage` or a declarative `ChaosSchedule`
+(serving/chaos.py) of repeated multi-pod strike/repair cycles, resolved
+deterministically (PRNG folded on the tick), which is what the test
+suite, the fleet benchmark's failover scenario, and the CI chaos smoke
+all drive.
 
 Param swaps are plane-wide and lockstep: `swap_params` (the
 `ParamPublisher` sink in launch/coserve.py) stages at the ROUTER, holds
 plane admissions, lets every in-flight generation drain (migrations
 included), and only then fans the swap out to all replicas at once —
-every replica is always on the same params_version, so a migration can
-never land on a replica serving a different snapshot than the request
-was admitted under (`import_slots` enforces it anyway).
+every replica is always on the same params_version, so a standby or a
+migration can never cross param snapshots.
 """
 from __future__ import annotations
 
+import time
+from bisect import insort
+from collections import defaultdict
 from dataclasses import dataclass
 from typing import Callable, Optional
 
+import jax
 import numpy as np
 
-from ..core.isl.liveness import normalize_admission_weights
+from ..core.isl.liveness import (choose_standby_pod,
+                                 normalize_admission_weights)
+from .chaos import ChaosSchedule, as_chaos_schedule
 from .engine import Request, ServingEngine, check_swap_compatible
 
 
 @dataclass(frozen=True)
 class ForcedOutage:
-    """Deterministic fault injection for the serving plane.
+    """Deterministic single-strike fault injection (the PR 5 API; see
+    serving/chaos.py for full schedules — the router converts this to a
+    one-event `ChaosSchedule` internally).
 
     Fields:
       at_tick: earliest router tick at which the outage strikes.
       pod: pod index to strike; None = the pod with the most in-flight
         slots at strike time (guarantees the outage actually exercises
-        migration), ties broken toward the lowest index. With pod=None
+        failover), ties broken toward the lowest index. With pod=None
         the strike is deferred past `at_tick` until some pod has
         in-flight work — striking an idle plane would exercise nothing.
       ticks: outage duration in router ticks from the actual strike;
@@ -66,8 +98,66 @@ class ForcedOutage:
     ticks: Optional[int] = None
 
 
+@dataclass(frozen=True)
+class GridConfig:
+    """Session-grid knobs.
+
+    Fields:
+      replicate: maintain warm standbys (needs >= 2 pods; off = the
+        PR 5 drain-only plane, the benchmark's full-drain baseline).
+      repl_chunk: KV rows shipped per slot per replication tick; None =
+        max_len (a standby catches up in one tick). Smaller chunks bound
+        per-tick replication bandwidth; a standby is simply not
+        promotable until its cursor catches up.
+      repl_every: replication cadence in router ticks.
+      rebalance_per_tick: max sessions moved per tick by background
+        rebalancing (0 disables — rejoining pods then stay empty until
+        admission refills them, the PR 5 skew).
+      defer_deadline: max ticks a slot may sit deferred (frozen on a
+        masked pod with no capacity anywhere) before the router raises;
+        None = wait forever (the PR 5 behavior, invisible starvation).
+      shed_on_deadline: past the deadline, drop the request (recorded in
+        `dropped_deferred` + `router.dropped`) instead of raising.
+    """
+    replicate: bool = True
+    repl_chunk: Optional[int] = None
+    repl_every: int = 1
+    rebalance_per_tick: int = 1
+    defer_deadline: Optional[int] = 100
+    shed_on_deadline: bool = False
+
+    def __post_init__(self):
+        if self.repl_every < 1:
+            raise ValueError(f"repl_every must be >= 1, got "
+                             f"{self.repl_every}")
+        if self.repl_chunk is not None and self.repl_chunk < 1:
+            raise ValueError(f"repl_chunk must be >= 1, got "
+                             f"{self.repl_chunk}")
+        if self.defer_deadline is not None and self.defer_deadline < 1:
+            raise ValueError(f"defer_deadline must be >= 1, got "
+                             f"{self.defer_deadline}")
+
+
+class _Session:
+    """Router-side record of one in-flight generation."""
+    __slots__ = ("req", "home", "pod", "slot", "sb_pod", "sb_row",
+                 "cursor", "synced_len", "version", "defer_age")
+
+    def __init__(self, req, home, pod, version):
+        self.req = req
+        self.home = home            # key-partition home pod
+        self.pod = pod              # current primary pod
+        self.slot = None            # primary slot (bound after prefill)
+        self.sb_pod = None          # warm-standby pod
+        self.sb_row = None          # standby row on sb_pod
+        self.cursor = 0             # KV rows replicated so far
+        self.synced_len = -1        # len(generated) at last caught-up sync
+        self.version = version      # params_version (lockstep witness)
+        self.defer_age = 0          # ticks spent frozen with nowhere to go
+
+
 class ConstellationRouter:
-    """Liveness-routed front for N ServingEngine replicas (one per pod).
+    """Liveness-routed session grid over N ServingEngine replicas.
 
     mask_fn(t) -> (alive (n_pods,) bool, weights (n_pods,) float) is the
     liveness feed — `ConstellationLinkModel.serving_mask` via
@@ -82,7 +172,7 @@ class ConstellationRouter:
     """
 
     def __init__(self, engines, mask_fn: Optional[Callable] = None,
-                 forced_outage: Optional[ForcedOutage] = None):
+                 forced_outage=None, grid: Optional[GridConfig] = None):
         engines = list(engines)
         if not engines:
             raise ValueError("ConstellationRouter needs >= 1 engine")
@@ -94,23 +184,43 @@ class ConstellationRouter:
         self.engines = engines
         self.n_pods = len(engines)
         self.mask_fn = mask_fn
-        self.forced = forced_outage
-        self._forced_pod: Optional[int] = None
-        self._forced_at: Optional[int] = None
+        self.chaos: Optional[ChaosSchedule] = as_chaos_schedule(forced_outage)
+        self._chaos_state: dict = {}
+        self.grid = grid or GridConfig()
+        self._replicating = self.grid.replicate and self.n_pods >= 2
         self.tick = 0
         self.round_override: Optional[int] = None
         self.queue: list[Request] = []
         self.finished: list[Request] = []
+        self.dropped: list[Request] = []
         self._next_seq = 0
         self._credits = np.zeros(self.n_pods)
         self._pending_params = None
         self.params_version = engines[0].params_version
         self._last_alive = None
+        self._sessions: dict[int, _Session] = {}       # by Request._seq
+        self._sb_free = [list(range(e.ecfg.max_batch)) for e in engines]
+        self._pending_clear = [set() for _ in engines]  # rows to wipe on rejoin
+        self._reserved = np.zeros(self.n_pods, int)
+        self._last_weights = np.full(self.n_pods, 1.0 / self.n_pods)
+        # wall seconds of each tick's failover phase that moved >= 1 slot,
+        # device work forced to completion on both edges so a pointer flip
+        # (import-only) and a full drain (export + import) are comparable
+        self.failover_stalls: list[float] = []
         self.stats = {
             "migrations": 0, "migrated_slots": 0,
+            "pointer_flips": 0, "full_migrations": 0,
+            "rebalances": 0, "rebalanced_slots": 0,
             "deferred_slot_migrations": 0, "requeued": 0,
-            "masked_pod_ticks": 0, "mask_transitions": 0, "swaps": 0,
+            "masked_pod_ticks": 0, "mask_transitions": 0, "rejoins": 0,
+            "swaps": 0,
             "admitted_per_pod": [0] * self.n_pods,
+            "admitted_home": 0, "admitted_spill": 0,
+            "standby_seeded": 0, "standby_rehomed": 0,
+            "replication_syncs": 0, "replicated_rows": 0,
+            "full_rows_equiv": 0,
+            "dropped_deferred": 0, "deferred_max_age": 0,
+            "reserved_slot_ticks": 0,
         }
 
     # --- liveness -----------------------------------------------------------
@@ -123,26 +233,11 @@ class ConstellationRouter:
             alive, weights = self.mask_fn(t)
             alive = np.array(alive, bool, copy=True)
             weights = np.array(weights, float, copy=True)
-        f = self.forced
-        if f is not None and self.tick >= f.at_tick:
-            if self._forced_pod is None:
-                if f.pod is not None:
-                    self._forced_pod, self._forced_at = f.pod, self.tick
-                else:
-                    # strike the busiest pod so the outage provably
-                    # exercises the migration path (deterministic: lowest
-                    # index on ties); wait for in-flight work to exist
-                    busy = [sum(s is not None for s in e.slots)
-                            for e in self.engines]
-                    if max(busy) > 0:
-                        self._forced_pod = max(
-                            range(self.n_pods),
-                            key=lambda i: (busy[i], -i))
-                        self._forced_at = self.tick
-            if self._forced_pod is not None and (
-                    f.ticks is None
-                    or self.tick < self._forced_at + f.ticks):
-                alive[self._forced_pod] = False
+        if self.chaos is not None:
+            busy = [sum(s is not None for s in e.slots)
+                    for e in self.engines]
+            alive = self.chaos.overlay(self._chaos_state, self.tick,
+                                       alive, busy)
         return alive, normalize_admission_weights(alive, weights)
 
     # --- request intake -----------------------------------------------------
@@ -158,52 +253,371 @@ class ConstellationRouter:
             self._next_seq += 1
         self.queue.append(req)
 
+    def _home(self, req) -> int:
+        """Key partition: a Knuth multiplicative hash of the request uid
+        picks the session's home pod."""
+        return ((int(req.uid) * 2654435761) & 0xFFFFFFFF) % self.n_pods
+
+    def _free_cap(self, pod: int) -> int:
+        return sum(s is None for s in self.engines[pod].slots)
+
     def _admit(self, alive, weights):
-        """Smooth weighted round-robin into live pods' free slots: each
-        admission adds `weights` to every pod's credit and picks the live
-        argmax — deterministic, bandwidth-proportional over time."""
+        """Partitioned admission: each request goes to its key's home pod
+        while that pod is alive with unreserved capacity; otherwise it
+        spills via smooth weighted round-robin over live pods' free
+        slots (each admission adds `weights` to every pod's credit and
+        picks the live argmax — deterministic, bandwidth-proportional
+        over time). Capacity reserved for deferred failovers is never
+        admitted into."""
         self._credits = np.where(alive, self._credits, 0.0)
-        free = [sum(s is None for s in e.slots) for e in self.engines]
+        free = [self._free_cap(i) - int(self._reserved[i])
+                for i in range(self.n_pods)]
         while self.queue:
-            avail = [i for i in range(self.n_pods)
-                     if alive[i] and free[i] > 0]
-            if not avail:
-                return
-            self._credits += weights
-            i = max(avail, key=lambda k: (self._credits[k], weights[k], -k))
-            self._credits[i] -= 1.0
-            self.engines[i].submit(self.queue.pop(0))
+            req = self.queue[0]
+            home = self._home(req)
+            if alive[home] and free[home] > 0:
+                i = home
+                self.stats["admitted_home"] += 1
+            else:
+                avail = [i for i in range(self.n_pods)
+                         if alive[i] and free[i] > 0]
+                if not avail:
+                    return
+                self._credits += weights
+                i = max(avail,
+                        key=lambda k: (self._credits[k], weights[k], -k))
+                self._credits[i] -= 1.0
+                self.stats["admitted_spill"] += 1
+            self.queue.pop(0)
+            self.engines[i].submit(req)
             free[i] -= 1
             self.stats["admitted_per_pod"][i] += 1
+            self._sessions[req._seq] = _Session(
+                req, home, i, self.params_version)
 
-    # --- drain-by-migration -------------------------------------------------
-    def _migrate_from_masked(self, alive, weights):
-        """Move every in-flight slot off masked pods onto live replicas
-        with free capacity (most-free first, then highest weight). Slots
-        that cannot move yet stay frozen on the masked pod — the masked
-        engine is never stepped, so their state is bit-preserved until
-        capacity frees (or the pod rejoins)."""
-        for i, src in enumerate(self.engines):
+    # --- session bookkeeping ------------------------------------------------
+    @staticmethod
+    def _kv_pos(req) -> int:
+        """The slot's device kv pos, derived host-side: prefill sets
+        pos = prompt_len (first token sampled without advancing), each
+        decode sub-step writes one row. No device read needed — this is
+        what keeps replication bookkeeping off the host-sync budget."""
+        return len(req.prompt) + len(req.generated) - 1
+
+    def _fresh(self, sess) -> bool:
+        """A standby is promotable iff its KV cursor reached the source's
+        pos AND the state row was synced after the source's last decode
+        block — then promotion is a bit-exact continuation."""
+        if sess.sb_pod is None or sess.slot is None:
+            return False
+        return (sess.cursor == self._kv_pos(sess.req)
+                and sess.synced_len == len(sess.req.generated))
+
+    def _bind_sessions(self):
+        """Bind sessions to the slots the engines' prefill assigned."""
+        for i, e in enumerate(self.engines):
+            for s, req in enumerate(e.slots):
+                if req is None:
+                    continue
+                sess = self._sessions.get(req._seq)
+                if sess is not None and sess.pod == i:
+                    sess.slot = s
+
+    def _free_standby(self, sess):
+        if sess.sb_row is not None:
+            insort(self._sb_free[sess.sb_pod], sess.sb_row)
+        sess.sb_pod = sess.sb_row = None
+        sess.cursor = 0
+        sess.synced_len = -1
+
+    def _drop_session(self, sess):
+        self._free_standby(sess)
+        self._sessions.pop(sess.req._seq, None)
+
+    def _collect_finished(self):
+        for e in self.engines:
+            if not e.finished:
+                continue
+            for r in e.finished:
+                sess = self._sessions.pop(r._seq, None)
+                if sess is not None and sess.sb_row is not None:
+                    insort(self._sb_free[sess.sb_pod], sess.sb_row)
+            self.finished.extend(e.finished)
+            e.finished.clear()
+
+    # --- failover (pointer flip > full drain > defer) -----------------------
+    def _relocate(self, sess, dst: int, dslot: int, *, flip: bool,
+                  failover: bool = True):
+        """Host bookkeeping after a session moved to (dst, dslot).
+        Failover moves count toward the outage contract stats
+        (migrated_slots / pointer_flips / full_migrations); rebalance
+        moves are accounted separately by the caller."""
+        src_pod, src_slot = sess.pod, sess.slot
+        self.engines[src_pod].slots[src_slot] = None
+        if flip:
+            # the dead pod is never touched: its stale row is wiped when
+            # the pod rejoins (models the reboot clearing slot memory)
+            self._pending_clear[src_pod].add(src_slot)
+            self._free_standby(sess)     # the standby row was consumed
+        sess.pod, sess.slot = dst, dslot
+        if sess.sb_pod == dst:
+            # a standby must live off the primary pod; rehome next sync
+            self._free_standby(sess)
+            self.stats["standby_rehomed"] += 1
+        sess.defer_age = 0
+        if failover:
+            self.stats["migrated_slots"] += 1
+            self.stats["pointer_flips" if flip else "full_migrations"] += 1
+
+    def _failover(self, alive, weights):
+        """Drain masked pods: pointer-flip every slot with a fresh
+        resident standby, full-migrate the rest into any free capacity,
+        defer (age + reserve) what cannot move yet."""
+        self._reserved[:] = 0
+        held = []
+        for i in range(self.n_pods):
             if alive[i]:
                 continue
+            src = self.engines[i]
             if src.queue:            # un-prefilled admissions: just requeue
+                for r in src.queue:
+                    sess = self._sessions.pop(r._seq, None)
+                    if sess is not None:
+                        self._free_standby(sess)
                 self.stats["requeued"] += len(src.queue)
                 self.queue[:0] = src.queue
                 src.queue = []
-            held = [s for s, r in enumerate(src.slots) if r is not None]
-            while held:
-                dests = [(j, sum(s is None for s in self.engines[j].slots))
+            held.extend(self._sessions[r._seq]
+                        for r in src.slots if r is not None)
+        if not held:
+            return
+
+        # 1) pointer flips claim standby-pod capacity FIRST, across all
+        #    dead pods — a fresh standby is a standing reservation, and a
+        #    full drain from some other dead pod must never steal the
+        #    slot it points at
+        flips = defaultdict(list)
+        rest = []
+        for sess in held:
+            d = sess.sb_pod
+            if (d is not None and alive[d] and self._fresh(sess)
+                    and len(flips[d]) < self._free_cap(d)):
+                flips[d].append(sess)
+            else:
+                rest.append(sess)
+        for d in sorted(flips):
+            group = flips[d]
+            if not group:
+                continue
+            pairs = [(sess.sb_row, sess.req) for sess in group]
+            for sess in group:
+                assert sess.version == self.engines[d].params_version
+            dslots = self.engines[d].promote_standby(pairs)
+            for sess, ds in zip(group, dslots):
+                self._relocate(sess, d, ds, flip=True)
+            self.stats["migrations"] += 1
+
+        # 2) full drain fallback (the PR 5 path) into remaining capacity,
+        #    batched per source pod
+        deferred = []
+        by_src = defaultdict(list)
+        for sess in rest:
+            by_src[sess.pod].append(sess)
+        for i in sorted(by_src):
+            pending = by_src[i]
+            while pending:
+                dests = [(j, self._free_cap(j))
                          for j in range(self.n_pods) if alive[j]]
                 dests = [(j, f) for j, f in dests if f > 0]
                 if not dests:
-                    self.stats["deferred_slot_migrations"] += len(held)
-                    return
+                    break
                 j, f = max(dests, key=lambda t: (t[1], weights[t[0]],
                                                  -t[0]))
-                take, held = held[:f], held[f:]
-                self.engines[j].import_slots(src.export_slots(take))
+                take, pending = pending[:f], pending[f:]
+                bundle = self.engines[i].export_slots(
+                    [sess.slot for sess in take])
+                dslots = self.engines[j].import_slots(bundle)
+                for sess, ds in zip(take, dslots):
+                    self._relocate(sess, j, ds, flip=False)
                 self.stats["migrations"] += 1
-                self.stats["migrated_slots"] += len(take)
+            deferred.extend(pending)
+
+        # 3) defer: age, reserve the standby pod's next free slot, police
+        #    the starvation deadline
+        starving = []
+        for sess in deferred:
+            sess.defer_age += 1
+            self.stats["deferred_slot_migrations"] += 1
+            self.stats["deferred_max_age"] = max(
+                self.stats["deferred_max_age"], sess.defer_age)
+            if (sess.sb_pod is not None and alive[sess.sb_pod]
+                    and self._fresh(sess)):
+                self._reserved[sess.sb_pod] += 1
+            dl = self.grid.defer_deadline
+            if dl is not None and sess.defer_age > dl:
+                starving.append(sess)
+        self.stats["reserved_slot_ticks"] += int(self._reserved.sum())
+        for sess in starving:
+            if not self.grid.shed_on_deadline:
+                raise RuntimeError(
+                    f"deferred slot starvation: request {sess.req.uid} "
+                    f"has been frozen on masked pod {sess.pod} for "
+                    f"{sess.defer_age} ticks (> defer_deadline="
+                    f"{self.grid.defer_deadline}) with no capacity "
+                    f"anywhere — raise capacity, shorten outages, or set "
+                    f"GridConfig.shed_on_deadline to shed instead")
+            self.engines[sess.pod].slots[sess.slot] = None
+            self._pending_clear[sess.pod].add(sess.slot)
+            self.dropped.append(sess.req)
+            self._drop_session(sess)
+            self.stats["dropped_deferred"] += 1
+
+    def _on_rejoin(self, pod: int):
+        """A masked pod came back: wipe rows whose generations were
+        pointer-flipped away while it was dark (the reboot clears slot
+        memory) so the revived engine can't decode stale sessions."""
+        self.stats["rejoins"] += 1
+        if self._pending_clear[pod]:
+            self.engines[pod].clear_rows(sorted(self._pending_clear[pod]))
+            self._pending_clear[pod].clear()
+
+    # --- weight-aware background rebalance ----------------------------------
+    def _quotas(self, live, weights, total):
+        """Largest-remainder allocation of `total` active sessions over
+        `live` pods proportional to admission weights, capped at each
+        pod's slot count."""
+        caps = {i: self.engines[i].ecfg.max_batch for i in live}
+        w = np.array([weights[i] for i in live], float)
+        w = w / w.sum() if w.sum() > 0 else np.full(len(live),
+                                                    1.0 / len(live))
+        ideal = w * total
+        q = {i: min(int(f), caps[i]) for i, f in zip(live, np.floor(ideal))}
+        rem = total - sum(q.values())
+        frac = sorted(zip(live, ideal - np.floor(ideal)),
+                      key=lambda t: (-t[1], t[0]))
+        while rem > 0:
+            moved = False
+            for i, _ in frac:
+                if rem > 0 and q[i] < caps[i]:
+                    q[i] += 1
+                    rem -= 1
+                    moved = True
+            if not moved:
+                break
+        return q
+
+    def _rebalance(self, alive, weights):
+        """Restore partition balance after a rejoin: move up to
+        `rebalance_per_tick` sessions from over- to under-quota pods
+        (only while the pairwise gap is >= 2, so routine completions
+        don't churn), preferring sessions homed on the destination and
+        pointer-flipping when the session's standby already lives
+        there. Partition affinity wins over load balance: a session
+        sitting on its OWN home pod is never moved — only displaced
+        (failed-over or spilled) sessions rebalance."""
+        budget = self.grid.rebalance_per_tick
+        live = [i for i in range(self.n_pods) if alive[i]]
+        if budget <= 0 or len(live) < 2:
+            return
+        active = {i: sum(s is not None for s in self.engines[i].slots)
+                  for i in live}
+        total = sum(active.values())
+        if total == 0:
+            return
+        quota = self._quotas(live, weights, total)
+        moved = 0
+        while moved < budget:
+            over = [i for i in live if active[i] - quota[i] >= 1]
+            under = [j for j in live
+                     if quota[j] - active[j] >= 1
+                     and self._free_cap(j) - self._reserved[j] > 0]
+            pairs = [(i, j) for i in over for j in under
+                     if active[i] - active[j] >= 2]
+            src = dst = sess = None
+            for i, j in sorted(pairs, key=lambda t: (
+                    active[t[0]] - quota[t[0]],
+                    quota[t[1]] - active[t[1]],
+                    weights[t[1]], -t[0], -t[1]), reverse=True):
+                cands = sorted(
+                    (self._sessions[r._seq]
+                     for r in self.engines[i].slots if r is not None),
+                    key=lambda s: (s.home != j, s.req._seq))
+                cands = [s for s in cands if s.home != i]
+                if cands:
+                    src, dst, sess = i, j, cands[0]
+                    break
+            if sess is None:
+                break
+            if sess.sb_pod == dst and self._fresh(sess):
+                src_slot = sess.slot
+                [ds] = self.engines[dst].promote_standby(
+                    [(sess.sb_row, sess.req)])
+                self._relocate(sess, dst, ds, flip=True, failover=False)
+                # the source pod is alive: wipe its stale row NOW
+                self.engines[src].clear_rows([src_slot])
+                self._pending_clear[src].discard(src_slot)
+            else:
+                bundle = self.engines[src].export_slots([sess.slot])
+                [ds] = self.engines[dst].import_slots(bundle)
+                self._relocate(sess, dst, ds, flip=False, failover=False)
+            active[src] -= 1
+            active[dst] += 1
+            moved += 1
+            self.stats["rebalanced_slots"] += 1
+        if moved:
+            self.stats["rebalances"] += 1
+
+    # --- incremental background replication ---------------------------------
+    def _replicate(self, alive):
+        """Keep every live session's warm standby in sync: ship the KV
+        rows written since the last sync plus the state row, one jitted
+        gather + one jitted scatter per (source, standby) pod pair — no
+        host syncs, nothing on the decode critical path. Sessions whose
+        standby pod died (or collided with their primary) are rehomed
+        and re-seeded."""
+        if not self._replicating or self.tick % self.grid.repl_every:
+            return
+        width = self.grid.repl_chunk or self.engines[0].ecfg.max_len
+        jobs = defaultdict(list)
+        for seq in sorted(self._sessions):
+            sess = self._sessions[seq]
+            if sess.slot is None or not alive[sess.pod]:
+                continue             # unprefilled, or frozen on a dead pod
+            if sess.sb_pod is not None and not alive[sess.sb_pod]:
+                self._free_standby(sess)
+                self.stats["standby_rehomed"] += 1
+            if sess.sb_pod is None:
+                has_room = [bool(self._sb_free[p]) for p in
+                            range(self.n_pods)]
+                weights = self._last_weights
+                p = choose_standby_pod(sess.pod, alive, weights, has_room)
+                if p is None:
+                    continue         # unprotected until a pod frees up
+                sess.sb_pod = p
+                sess.sb_row = self._sb_free[p].pop(0)
+                sess.cursor = 0
+                sess.synced_len = -1
+                self.stats["standby_seeded"] += 1
+            pos = self._kv_pos(sess.req)
+            if sess.cursor == pos and \
+                    sess.synced_len == len(sess.req.generated):
+                continue             # already fresh
+            jobs[(sess.pod, sess.sb_pod)].append(sess)
+        for src, dst in sorted(jobs):
+            group = jobs[(src, dst)]
+            bundle = self.engines[src].export_delta(
+                [(sess.slot, sess.cursor) for sess in group], width)
+            self.engines[dst].standby_apply(
+                bundle, [(j, sess.sb_row) for j, sess in enumerate(group)])
+            self.stats["replication_syncs"] += 1
+            for sess in group:
+                pos = self._kv_pos(sess.req)
+                new_cursor = min(sess.cursor + width, pos)
+                self.stats["replicated_rows"] += new_cursor - sess.cursor
+                self.stats["full_rows_equiv"] += pos
+                sess.cursor = new_cursor
+                sess.synced_len = (len(sess.req.generated)
+                                   if new_cursor == pos else -1)
 
     # --- plane-wide param swap ---------------------------------------------
     def swap_params(self, new_params):
@@ -213,7 +627,7 @@ class ConstellationRouter:
         they were admitted under; once every replica is simultaneously
         empty the swap fans out to all of them in one step, keeping
         params_version in lockstep across the plane (the invariant that
-        makes any live replica a bit-exact migration target)."""
+        makes any live replica a bit-exact failover target)."""
         check_swap_compatible(self.engines[0].params, new_params)
         self._pending_params = new_params
         self._maybe_apply_swap()
@@ -233,18 +647,36 @@ class ConstellationRouter:
 
     # --- stepping -----------------------------------------------------------
     def step(self) -> int:
-        """One plane step: refresh the mask, drain masked pods by
-        migration, apply a staged plane swap if everything drained, admit
-        to live pods (unless a swap is pending), then decode one block on
-        every live pod with work. Returns active slots decoded."""
+        """One grid tick: refresh the mask (chaos overlay included), wipe
+        rejoined pods' stale rows, fail masked pods over (flip > drain >
+        defer), rebalance, apply a staged plane swap if everything
+        drained, admit into unreserved capacity, decode one block on
+        every live pod with work, then replicate standby deltas. Returns
+        active slots decoded."""
         alive, weights = self._liveness()
+        self._last_weights = weights
         if self._last_alive is not None:
-            self.stats["mask_transitions"] += int(
-                (alive != self._last_alive).sum())
+            trans = alive != self._last_alive
+            self.stats["mask_transitions"] += int(trans.sum())
+            for i in np.nonzero(trans & alive)[0]:
+                self._on_rejoin(int(i))
         self._last_alive = alive.copy()
         self.stats["masked_pod_ticks"] += int((~alive).sum())
 
-        self._migrate_from_masked(alive, weights)
+        stall_t = None
+        if not alive.all() and any(
+                s is not None for i in np.nonzero(~alive)[0]
+                for s in self.engines[int(i)].slots):
+            for e in self.engines:     # drain async backlog off the clock
+                jax.block_until_ready(e.cache["k"])
+            stall_t = time.perf_counter()
+        m0 = self.stats["migrated_slots"]
+        self._failover(alive, weights)
+        if stall_t is not None and self.stats["migrated_slots"] > m0:
+            for e in self.engines:
+                jax.block_until_ready(e.cache["k"])
+            self.failover_stalls.append(time.perf_counter() - stall_t)
+        self._rebalance(alive, weights)
         self._maybe_apply_swap()
         if self._pending_params is None:
             self._admit(alive, weights)
@@ -253,10 +685,9 @@ class ConstellationRouter:
             if alive[i] and (e.queue or any(s is not None
                                             for s in e.slots)):
                 n_active += e.step()
-        for e in self.engines:
-            if e.finished:
-                self.finished.extend(e.finished)
-                e.finished.clear()
+        self._collect_finished()
+        self._bind_sessions()
+        self._replicate(alive)
         self._maybe_apply_swap()
         self.tick += 1
         return n_active
@@ -293,8 +724,17 @@ class ConstellationRouter:
         return total
 
     def plane_stats(self) -> dict:
-        """Router stats + summed engine stats (tokens, host_syncs, ...)."""
+        """Router stats + summed engine stats (tokens, host_syncs, ...)
+        + a live view of the grid (session count, standby coverage,
+        current deferral ages)."""
         out = dict(self.stats)
+        sessions = list(self._sessions.values())
+        out["sessions_active"] = len(sessions)
+        out["standby_covered"] = sum(s.sb_pod is not None for s in sessions)
+        out["standby_fresh"] = sum(self._fresh(s) for s in sessions)
+        ages = [s.defer_age for s in sessions if s.defer_age > 0]
+        out["deferred_now"] = len(ages)
+        out["deferred_max_age_now"] = max(ages, default=0)
         agg = {}
         for e in self.engines:
             for k, v in e.stats.items():
@@ -304,17 +744,31 @@ class ConstellationRouter:
 
 
 def check_forced_outage_contract(plane: ConstellationRouter, done,
-                                 n_requests: int):
-    """The `--force-outage-at` smoke contract, shared by the serve and
-    coserve launchers (and CI): a forced mid-run outage must complete
-    every request (zero drops) and must actually exercise the migration
-    drain path (>= 1 slot moved). Raises SystemExit on violation."""
+                                 n_requests: int, *,
+                                 expect_pointer_flip: bool = False,
+                                 expect_rebalance: bool = False):
+    """The fault-injection smoke contract, shared by the serve and
+    coserve launchers (and CI): injected outages must complete every
+    request (zero drops) and must actually exercise the failover path
+    (>= 1 slot moved). With a replicating grid the caller can further
+    demand that >= 1 failover was a pointer flip, and — for schedules
+    with repair windows — that the rebalancer actually ran on rejoin.
+    Raises SystemExit on violation."""
     if len(done) != n_requests:
         raise SystemExit(f"dropped requests under forced outage: "
                          f"{len(done)}/{n_requests} finished")
+    if plane.stats["dropped_deferred"]:
+        raise SystemExit(f"shed {plane.stats['dropped_deferred']} deferred "
+                         f"slots under forced outage")
     if plane.stats["migrated_slots"] < 1:
-        raise SystemExit("forced outage caused no migrations — the drain "
+        raise SystemExit("forced outage caused no failovers — the drain "
                          "path did not run")
+    if expect_pointer_flip and plane.stats["pointer_flips"] < 1:
+        raise SystemExit("no pointer-flip failover happened — every "
+                         "failover fell back to a full drain")
+    if expect_rebalance and plane.stats["rebalanced_slots"] < 1:
+        raise SystemExit("no rebalance after rejoin — the plane stayed "
+                         "skewed")
 
 
 def liveness_mask_fn(link_model):

@@ -1,0 +1,139 @@
+"""Chaos-schedule fault injection tests: spec grammar, deterministic
+overlay resolution (scheduled + PRNG-folded random strikes), ForcedOutage
+equivalence, and schedule validation. Engine-in-the-loop chaos runs live
+in test_router.py (they share the model fixture)."""
+import numpy as np
+import pytest
+
+from repro.serving import ChaosEvent, ChaosSchedule, parse_outage_spec
+from repro.serving.chaos import as_chaos_schedule
+from repro.serving.router import ForcedOutage
+
+
+# --------------------------------------------------------------------------
+# the CLI grammar
+# --------------------------------------------------------------------------
+def test_parse_outage_spec_grammar():
+    s = parse_outage_spec("3")
+    assert s.events == (ChaosEvent(at_tick=3, pod=None, ticks=None),)
+    s = parse_outage_spec("2:*:3")
+    assert s.events == (ChaosEvent(at_tick=2, pod=None, ticks=3),)
+    s = parse_outage_spec("2:0:3, 6:1:3")
+    assert s.events == (ChaosEvent(at_tick=2, pod=0, ticks=3),
+                        ChaosEvent(at_tick=6, pod=1, ticks=3))
+    s = parse_outage_spec("5:2")           # explicit pod, never repairs
+    assert s.events == (ChaosEvent(at_tick=5, pod=2, ticks=None),)
+    assert not s.has_repair
+    assert parse_outage_spec("2:*:3").has_repair
+
+
+@pytest.mark.parametrize("bad", ["", "x", "2:1:0", "2:1:3:4", "2,,3"])
+def test_parse_outage_spec_rejects(bad):
+    with pytest.raises((ValueError,)):
+        parse_outage_spec(bad)
+
+
+def test_schedule_validation():
+    with pytest.raises(TypeError, match="ChaosEvent"):
+        ChaosSchedule(events=("not-an-event",))
+    with pytest.raises(ValueError, match="random_rate"):
+        ChaosSchedule(random_rate=1.5)
+
+
+# --------------------------------------------------------------------------
+# the overlay
+# --------------------------------------------------------------------------
+def test_overlay_busiest_resolution_waits_for_work():
+    """A pod=None strike must not land on an idle plane — it defers past
+    at_tick until some pod has in-flight slots, then hits the busiest
+    (ties toward the lowest index) and sticks to it."""
+    s = parse_outage_spec("1:*:2")
+    st = {}
+    alive = np.ones(3, bool)
+    np.testing.assert_array_equal(
+        s.overlay(st, 1, alive, [0, 0, 0]), alive)      # idle: deferred
+    assert st == {}
+    got = s.overlay(st, 2, alive, [1, 2, 2])            # tie 1 vs 2 -> 1
+    np.testing.assert_array_equal(got, [True, False, True])
+    assert st == {0: (1, 2)}
+    got = s.overlay(st, 3, alive, [5, 0, 0])            # sticky, not re-resolved
+    np.testing.assert_array_equal(got, [True, False, True])
+    got = s.overlay(st, 4, alive, [5, 0, 0])            # ticks=2 elapsed: repair
+    np.testing.assert_array_equal(got, alive)
+
+
+def test_overlay_multi_event_and_underlying_mask():
+    """Scheduled strikes compose with (never resurrect) the underlying
+    liveness mask, and overlapping events each apply."""
+    s = parse_outage_spec("0:0:10,2:2:2")
+    st = {}
+    base = np.array([True, False, True])                # pod 1 already dark
+    np.testing.assert_array_equal(
+        s.overlay(st, 0, base, [1, 1, 1]), [False, False, True])
+    np.testing.assert_array_equal(
+        s.overlay(st, 2, base, [1, 1, 1]), [False, False, False])
+    np.testing.assert_array_equal(
+        s.overlay(st, 4, base, [1, 1, 1]), [False, False, True])
+
+
+def test_overlay_replay_is_bit_exact():
+    """Two independent replays of one schedule (fresh state dicts) see the
+    identical outage history — including the random process, whose PRNG is
+    folded on the tick."""
+    s = ChaosSchedule(events=(ChaosEvent(at_tick=3, pod=None, ticks=2),),
+                      random_rate=0.3, random_ticks=2, seed=7)
+    busy = [[2, 1], [0, 3], [1, 1], [4, 0], [2, 2], [1, 3]]
+    runs = []
+    for _ in range(2):
+        st = {}
+        runs.append([s.overlay(st, t, np.ones(2, bool), busy[t]).tolist()
+                     for t in range(6)])
+    assert runs[0] == runs[1]
+    assert any(not all(row) for row in runs[0])          # strikes happened
+    # a different seed draws a different random history
+    st = {}
+    s2 = ChaosSchedule(events=s.events, random_rate=0.3, random_ticks=2,
+                       seed=8)
+    other = [s2.overlay(st, t, np.ones(2, bool), busy[t]).tolist()
+             for t in range(6)]
+    assert other != runs[0] or True   # may coincide; determinism is the claim
+
+
+def test_shared_schedule_independent_planes():
+    """One (frozen) schedule drives two planes without cross-talk: strike
+    resolution lives in the caller-owned state dict, so planes with
+    different busy profiles can resolve pod=None differently."""
+    s = parse_outage_spec("0:*:5")
+    st_a, st_b = {}, {}
+    a = s.overlay(st_a, 0, np.ones(2, bool), [3, 1])
+    b = s.overlay(st_b, 0, np.ones(2, bool), [1, 3])
+    np.testing.assert_array_equal(a, [False, True])
+    np.testing.assert_array_equal(b, [True, False])
+
+
+# --------------------------------------------------------------------------
+# ForcedOutage back-compat
+# --------------------------------------------------------------------------
+def test_as_chaos_schedule_normalization():
+    assert as_chaos_schedule(None) is None
+    s = parse_outage_spec("2:*:3")
+    assert as_chaos_schedule(s) is s
+    got = as_chaos_schedule(ForcedOutage(at_tick=4, pod=1, ticks=2))
+    assert got == ChaosSchedule(events=(
+        ChaosEvent(at_tick=4, pod=1, ticks=2),))
+    with pytest.raises(TypeError, match="ForcedOutage or"):
+        as_chaos_schedule(42)
+
+
+def test_forced_outage_equals_one_event_schedule():
+    """The PR 5 single-strike API and its schedule form produce the
+    identical outage history."""
+    fo = as_chaos_schedule(ForcedOutage(at_tick=2))
+    sched = parse_outage_spec("2")
+    busy = [[0, 2], [1, 2], [2, 2], [2, 1], [1, 0]]
+    st1, st2 = {}, {}
+    for t in range(5):
+        np.testing.assert_array_equal(
+            fo.overlay(st1, t, np.ones(2, bool), busy[t]),
+            sched.overlay(st2, t, np.ones(2, bool), busy[t]))
+    assert st1 == st2

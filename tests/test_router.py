@@ -10,7 +10,8 @@ import pytest
 from repro.core.isl import ConstellationLinkModel, LivenessConfig
 from repro.models import registry
 from repro.serving import (ConstellationRouter, EngineConfig, ForcedOutage,
-                           Request, ServingEngine)
+                           GridConfig, Request, ServingEngine,
+                           parse_outage_spec)
 
 
 @pytest.fixture(scope="module")
@@ -263,6 +264,200 @@ def test_router_rejects_heterogeneous_replicas(setup):
         ConstellationRouter([
             ServingEngine(cfg, fns, params, _ecfg(max_len=64)),
             ServingEngine(cfg, fns, params, _ecfg(max_len=32))])
+
+
+# --------------------------------------------------------------------------
+# the session grid: warm standbys, pointer flips, chaos schedules
+# --------------------------------------------------------------------------
+def _greq(cfg, uid, max_new=12, plen=8, temp=None):
+    """One request with a CHOSEN uid — the grid partitions by a hash of
+    the uid, so tests pick uids to pin home pods deterministically."""
+    rng = np.random.default_rng(100 + uid)
+    t = (0.0 if uid % 2 == 0 else 0.8) if temp is None else temp
+    return Request(uid=uid,
+                   prompt=rng.integers(0, cfg.vocab_size,
+                                       size=plen).astype(np.int32),
+                   max_new_tokens=max_new, temperature=t)
+
+
+def _plane(cfg, fns, params, n_pods, **kw):
+    return ConstellationRouter(
+        [ServingEngine(cfg, fns, params, _ecfg()) for _ in range(n_pods)],
+        **kw)
+
+
+def test_pointer_flip_failover_bit_identical(setup):
+    """THE grid invariant: a pod struck mid-decode fails over by promoting
+    the warm standbys already resident on the neighbor pod — zero full
+    exports on the critical path — and the continuations (greedy AND
+    temperature-sampled) are bit-identical to an uninterrupted
+    single-engine run."""
+    cfg, fns, params = setup
+    # uids 1 and 2 both hash-home onto pod 1 of 3
+    reqs = [_greq(cfg, 1, max_new=12, temp=0.8),
+            _greq(cfg, 2, max_new=12, temp=0.0)]
+    plane = _plane(cfg, fns, params, 3,
+                   forced_outage=ForcedOutage(at_tick=2, pod=1))
+    for r in _clone(reqs):
+        plane.submit(r)
+    plane.step()
+    ps = plane.plane_stats()
+    assert ps["sessions_active"] == 2
+    assert ps["standby_covered"] == 2         # replication seeded standbys
+    done = plane.run()
+    assert len(done) == 2 and all(r.done for r in done)
+    assert plane.stats["pointer_flips"] == 2
+    assert plane.stats["full_migrations"] == 0
+    assert plane.stats["migrated_slots"] == 2
+    assert plane.stats["dropped_deferred"] == 0
+    assert plane.plane_stats()["engines"]["standby_syncs"] >= 1
+    assert plane.plane_stats()["engines"]["promoted_slots"] >= 2
+    got = {r.uid: r.generated for r in done}
+    assert got == _serve_single(cfg, fns, params, reqs)
+
+
+def test_multi_pod_outage_reservation_and_deferred_flip(setup):
+    """Two pods struck at once, one surviving pod with one busy slot: one
+    session pointer-flips immediately, the other defers with a RESERVED
+    claim on its standby pod and flips as soon as a slot frees — no full
+    migration ever, no drop, bit-identical outputs."""
+    cfg, fns, params = setup
+    # homes over 3 pods: uid 0 -> pod 0, uid 1 -> pod 1, uid 3 -> pod 2
+    reqs = [_greq(cfg, 0, max_new=14), _greq(cfg, 1, max_new=24),
+            _greq(cfg, 3, max_new=24)]
+    plane = _plane(cfg, fns, params, 3,
+                   forced_outage=parse_outage_spec("2:1,2:2"))
+    for r in _clone(reqs):
+        plane.submit(r)
+    done = plane.run()
+    assert len(done) == 3
+    assert plane.stats["pointer_flips"] == 2
+    assert plane.stats["full_migrations"] == 0
+    assert plane.stats["deferred_slot_migrations"] >= 1
+    assert plane.stats["reserved_slot_ticks"] >= 1
+    assert plane.stats["deferred_max_age"] >= 1
+    assert plane.stats["dropped_deferred"] == 0
+    got = {r.uid: r.generated for r in done}
+    assert got == _serve_single(cfg, fns, params, reqs)
+
+
+def test_outage_rejoin_rebalance_bit_identical(setup):
+    """A strike/repair cycle: failover empties the struck pod, rejoin
+    wipes its stale rows, and background rebalancing moves load back
+    (preferring sessions homed there) until occupancy matches the weight
+    quota — with outputs still bit-identical end to end."""
+    cfg, fns, params = setup
+    reqs = [_greq(cfg, 0, max_new=30), _greq(cfg, 1, max_new=30)]
+    plane = _plane(cfg, fns, params, 2,
+                   forced_outage=parse_outage_spec("2:1:3"))
+    for r in _clone(reqs):
+        plane.submit(r)
+    while plane.tick < 6 and (plane.queue or any(
+            s is not None for s in plane.slots)):
+        plane.step()
+    # post-rejoin + rebalance: both pods hold work again
+    occ = [sum(s is not None for s in e.slots) for e in plane.engines]
+    assert occ == [1, 1]
+    done = plane.run()
+    assert len(done) == 2
+    assert plane.stats["pointer_flips"] >= 1
+    assert plane.stats["rejoins"] >= 1
+    assert plane.stats["rebalances"] >= 1
+    assert plane.stats["rebalanced_slots"] >= 1
+    got = {r.uid: r.generated for r in done}
+    assert got == _serve_single(cfg, fns, params, reqs)
+
+
+def test_repeated_chaos_cycles_trace_flat(setup):
+    """Two full strike/repair/rebalance cycles on one plane: the second
+    cycle must be a pure jit cache hit (flip, wipe-on-rejoin, rebalance
+    and replication all reuse the first cycle's traces)."""
+    cfg, fns, params = setup
+    reqs = [_greq(cfg, 0, max_new=52), _greq(cfg, 1, max_new=52)]
+    plane = _plane(cfg, fns, params, 2,
+                   forced_outage=parse_outage_spec("2:1:3,8:1:3"))
+    for r in _clone(reqs):
+        plane.submit(r)
+    while plane.tick < 7 and (plane.queue or any(
+            s is not None for s in plane.slots)):
+        plane.step()
+    t0 = plane.trace_count()                   # cycle 1 fully settled
+    done = plane.run()
+    assert len(done) == 2
+    assert plane.stats["pointer_flips"] >= 2   # both cycles actually flipped
+    assert plane.stats["rejoins"] >= 2
+    if t0 >= 0:
+        assert plane.trace_count() == t0
+    got = {r.uid: r.generated for r in done}
+    assert got == _serve_single(cfg, fns, params, reqs)
+
+
+def test_deferred_starvation_deadline_raises_or_sheds(setup):
+    """A session frozen on a masked pod with no capacity anywhere must not
+    starve silently: past GridConfig.defer_deadline the router raises —
+    or, with shed_on_deadline, drops it with an explicit stat and keeps
+    serving the rest."""
+    cfg, fns, params = setup
+    # homes over 2 pods: uids 0, 2 -> pod 0; uids 1, 3 -> pod 1 (full plane)
+    reqs = [_greq(cfg, u, max_new=30) for u in range(4)]
+
+    plane = _plane(cfg, fns, params, 2,
+                   forced_outage=parse_outage_spec("2:1"),
+                   grid=GridConfig(defer_deadline=3))
+    for r in _clone(reqs):
+        plane.submit(r)
+    with pytest.raises(RuntimeError, match="starvation"):
+        plane.run()
+
+    shed = _plane(cfg, fns, params, 2,
+                  forced_outage=parse_outage_spec("2:1"),
+                  grid=GridConfig(defer_deadline=3, shed_on_deadline=True))
+    for r in _clone(reqs):
+        shed.submit(r)
+    done = shed.run()
+    assert sorted(r.uid for r in done) == [0, 2]
+    assert sorted(r.uid for r in shed.dropped) == [1, 3]
+    assert shed.stats["dropped_deferred"] == 2
+    assert shed.stats["deferred_max_age"] >= 3
+    ref = _serve_single(cfg, fns, params, reqs)
+    assert all(r.generated == ref[r.uid] for r in done)
+
+
+def test_replication_is_incremental(setup):
+    """Delta shipping: with a bounded repl_chunk the rows replicated are a
+    strict subset of what full re-exports would ship every sync."""
+    cfg, fns, params = setup
+    reqs = [_greq(cfg, 0, plen=16, max_new=20),
+            _greq(cfg, 1, plen=16, max_new=20)]
+    plane = _plane(cfg, fns, params, 2, grid=GridConfig(repl_chunk=4))
+    for r in _clone(reqs):
+        plane.submit(r)
+    done = plane.run()
+    assert len(done) == 2
+    assert plane.stats["replication_syncs"] >= 2
+    assert 0 < plane.stats["replicated_rows"] < plane.stats["full_rows_equiv"]
+    got = {r.uid: r.generated for r in done}
+    assert got == _serve_single(cfg, fns, params, reqs)
+
+
+def test_full_drain_mode_is_pr5_plane(setup):
+    """GridConfig(replicate=False) is the drain-only plane: outages still
+    complete with zero drops and bit-identical outputs, but every
+    failover is a full export/import and no standby memory is touched."""
+    cfg, fns, params = setup
+    reqs = _reqs(cfg, n=7, max_new=10)
+    plane = _plane(cfg, fns, params, 3,
+                   forced_outage=ForcedOutage(at_tick=2),
+                   grid=GridConfig(replicate=False))
+    for r in _clone(reqs):
+        plane.submit(r)
+    done = plane.run()
+    assert len(done) == len(reqs)
+    assert plane.stats["pointer_flips"] == 0
+    assert plane.stats["migrated_slots"] >= 1
+    assert plane.plane_stats()["engines"]["standby_syncs"] == 0
+    got = {r.uid: r.generated for r in done}
+    assert got == _serve_single(cfg, fns, params, reqs)
 
 
 # --------------------------------------------------------------------------
