@@ -7,6 +7,8 @@ round-trips to the host every token and re-jits prefill per prompt length —
 the ratio is the headline "host-sync elimination" win, and host-syncs/token
 plus compiled-trace counts are reported alongside.
 """
+import json
+import os
 import time
 
 import jax
@@ -131,6 +133,10 @@ def run():
               "speedup_vs_seed_loop": round(fused_tps / naive_tps, 2),
               "host_syncs_per_token": round(syncs, 4),
               "traces": eng.trace_count()}
+    with open(os.path.join(os.path.dirname(__file__), "..",
+                           "BENCH_serve.json"), "w") as f:
+        json.dump(extras, f, indent=2)
+        f.write("\n")
     return out, extras
 
 

@@ -2,8 +2,10 @@
 shared-MLP controller to hold a perturbed 3x3 demo cluster against J2,
 by reverse-mode AD through the dopri5 integrator.
 
-    PYTHONPATH=src python examples/formation_flight.py
+    PYTHONPATH=src python examples/formation_flight.py [--iters N] [--intervals N]
 """
+import argparse
+
 import jax
 
 jax.config.update("jax_enable_x64", True)
@@ -14,20 +16,28 @@ from repro.core.orbital.control import init_policy
 
 
 def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--iters", type=int, default=30,
+                    help="controller training iterations")
+    ap.add_argument("--intervals", type=int, default=20,
+                    help="control intervals per rollout")
+    args = ap.parse_args()
+
     design = ClusterDesign(n_side=3, spacing=100.0)
     prob = ControlProblem(design=design, u_max=2e-5, control_dt=60.0,
                           substeps=4, dv_weight=1e3)
     print("training controller (backprop through dopri5 rollout)...")
-    params, info = train_controller(prob, n_intervals=20, iters=30,
-                                    lr=3e-2, perturb_scale=8.0)
+    params, info = train_controller(prob, n_intervals=args.intervals,
+                                    iters=args.iters, lr=3e-2,
+                                    perturb_scale=8.0)
     zero = jax.tree.map(jax.numpy.zeros_like,
                         init_policy(jax.random.PRNGKey(0)))
-    _, free = rollout(zero, prob, info["y0"], 0.0, 20)
+    _, free = rollout(zero, prob, info["y0"], 0.0, args.intervals)
     print(f"loss history: {['%.1f' % x for x in info['loss_history'][::5]]}")
     print(f"free-fall RMS position error: {float(free['rms_pos_err']):.2f} m")
     print(f"controlled RMS position error: {info['rms_pos_err']:.2f} m")
     print(f"delta-v spent: {info['dv_per_sat']*1e3:.2f} mm/s per sat "
-          f"over {20*60/60:.0f} min")
+          f"over {args.intervals*60/60:.0f} min")
     assert info["rms_pos_err"] < float(free["rms_pos_err"])
     print("OK: learned controller beats free fall")
 

@@ -2,8 +2,9 @@
 data, AdamW + cosine, SDC fault injection at (an accelerated multiple of)
 the paper's measured orbital rate, detection screens, checkpoint/rollback.
 
-    PYTHONPATH=src python examples/quickstart.py
+    PYTHONPATH=src python examples/quickstart.py [--steps N]
 """
+import argparse
 import tempfile
 
 import jax
@@ -16,6 +17,11 @@ from repro.train import (AdamWConfig, DataConfig, FTConfig,
 
 
 def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=60,
+                    help="training steps to run (default 60)")
+    args = ap.parse_args()
+
     cfg = registry.get_reduced_config("suncatcher-lm-100m")
     fns = registry.model_fns(cfg)
     tcfg = TrainConfig(adamw=AdamWConfig(lr=3e-3), warmup_steps=5,
@@ -30,10 +36,11 @@ def main():
     injector = SDCInjector(env, n_chips=256 * 81, step_time_s=1.0,
                            rate_multiplier=50.0, seed=42)
     with tempfile.TemporaryDirectory() as d:
-        ft = FTConfig(checkpoint_dirs=(d,), checkpoint_every=20)
+        ft = FTConfig(checkpoint_dirs=(d,),
+                      checkpoint_every=min(20, max(1, args.steps // 3)))
         trainer = FaultTolerantTrainer(step, state, data, ft,
                                        injector=injector)
-        hist = trainer.run(60)
+        hist = trainer.run(args.steps)
     print(f"steps: {len(hist)}  first loss {hist[0]['loss']:.3f}  "
           f"last loss {hist[-1]['loss']:.3f}")
     print(f"fault-tolerance stats: {trainer.stats}")

@@ -1,7 +1,9 @@
 """Batched serving with continuous batching on the demo LM.
 
-    PYTHONPATH=src python examples/serve_batch.py
+    PYTHONPATH=src python examples/serve_batch.py [--requests N] [--max-new N]
 """
+import argparse
+
 import numpy as np
 import jax
 
@@ -10,25 +12,32 @@ from repro.serving import EngineConfig, Request, ServingEngine
 
 
 def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--requests", type=int, default=10)
+    ap.add_argument("--max-new", type=int, default=12,
+                    help="max new tokens per request")
+    args = ap.parse_args()
+
     cfg = registry.get_reduced_config("suncatcher-lm-100m")
     fns = registry.model_fns(cfg)
     params = fns.init(jax.random.PRNGKey(0), cfg)
     eng = ServingEngine(cfg, fns, params,
                         EngineConfig(max_batch=4, max_len=96))
     rng = np.random.default_rng(0)
-    for uid in range(10):
+    for uid in range(args.requests):
         eng.submit(Request(
             uid=uid,
             prompt=rng.integers(0, cfg.vocab_size,
                                 size=int(rng.integers(3, 12))).astype(
                                     np.int32),
-            max_new_tokens=12,
+            max_new_tokens=args.max_new,
             temperature=0.0 if uid % 2 == 0 else 0.7))
     done = eng.run()
     for r in sorted(done, key=lambda r: r.uid):
         print(f"req {r.uid}: prompt[{len(r.prompt)}] -> {r.generated}")
-    assert len(done) == 10
-    print("OK: 10 requests served through 4 slots (continuous batching)")
+    assert len(done) == args.requests
+    print(f"OK: {args.requests} requests served through 4 slots "
+          f"(continuous batching)")
 
 
 if __name__ == "__main__":

@@ -76,6 +76,29 @@ def collective_bytes(hlo_text: str) -> dict:
             "wire_bytes": sum(WIRE_FACTOR[k] * v for k, v in out.items())}
 
 
+# host round-trips compiled into a module: python callbacks (io_callback /
+# pure_callback / debug.print land as custom-calls whose target mentions
+# "callback") plus infeed/outfeed ops
+_CALLBACK_RE = re.compile(r'custom_call_target="([^"]*callback[^"]*)"')
+_INFEED_RE = re.compile(r"\b(?:infeed|outfeed)(?:-start|-done)?\(")
+
+
+def host_callbacks(hlo_text: str) -> dict:
+    """Count host-callback sites in (post-SPMD) HLO text.
+
+    A fused hot path (engine decode block, diloco round) must compile to
+    ZERO of these — any nonzero count means a host round-trip snuck into
+    the traced code, which the repro-lint budget layer treats as a
+    violation of the drain-boundary invariant.
+    """
+    targets = defaultdict(int)
+    for m in _CALLBACK_RE.finditer(hlo_text):
+        targets[m.group(1)] += 1
+    feeds = len(_INFEED_RE.findall(hlo_text))
+    return {"count": sum(targets.values()) + feeds,
+            "targets": dict(targets), "feeds": feeds}
+
+
 # --------------------------------------------------------------------------
 # Loop-aware accounting: XLA prints each while body once, but it executes
 # trip_count times. Collectives inside scan-over-layers / kv-chunk / loss-

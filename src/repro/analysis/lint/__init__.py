@@ -1,0 +1,102 @@
+"""repro-lint: static enforcement of the repo's hot-path, PRNG, donation,
+retrace, and wire-budget invariants.
+
+Layer 1 (this module + ``rules.py``/``callgraph.py``) is pure stdlib-AST
+and runs in milliseconds.  Layer 2 (``budgets.py``) lowers jitted entry
+points with abstract shapes and checks HLO-derived budgets; it imports
+jax and is invoked with ``--budgets``.
+
+Usage::
+
+    python -m repro.analysis.lint                 # AST layer over src/repro
+    python -m repro.analysis.lint --budgets       # + lower-never-execute budgets
+    python -m repro.analysis.lint --paths f.py    # lint specific files
+"""
+
+from __future__ import annotations
+
+from pathlib import Path
+
+from .callgraph import Project
+from .findings import Finding, SourceFile, apply_suppressions, load_baseline
+from .registry import REPLAY_SENSITIVE_MODULES
+from .rules import (
+    RULE_CATALOG,
+    check_hot,
+    check_jit_callsites,
+    check_prng,
+    check_traced,
+    replay_sensitive,
+)
+
+REPO_ROOT = Path(__file__).resolve().parents[4]
+SRC_ROOT = REPO_ROOT / "src"
+DEFAULT_SCAN = SRC_ROOT / "repro"
+BASELINE_PATH = Path(__file__).resolve().parent / "baseline.txt"
+
+__all__ = [
+    "Finding",
+    "RULE_CATALOG",
+    "lint_paths",
+    "BASELINE_PATH",
+    "REPO_ROOT",
+]
+
+
+def _module_name(path: Path) -> str:
+    """Dotted module name for a file (fixtures fall back to their stem)."""
+    try:
+        rel = path.resolve().relative_to(SRC_ROOT)
+        return ".".join(rel.with_suffix("").parts)
+    except ValueError:
+        return path.stem
+
+
+def _relpath(path: Path) -> str:
+    try:
+        return path.resolve().relative_to(REPO_ROOT).as_posix()
+    except ValueError:
+        return path.as_posix()
+
+
+def collect_files(paths: list[Path]) -> list[Path]:
+    files: list[Path] = []
+    for p in paths:
+        if p.is_dir():
+            files.extend(sorted(p.rglob("*.py")))
+        elif p.suffix == ".py":
+            files.append(p)
+    return files
+
+
+def lint_paths(
+    paths: list[Path] | None = None,
+    use_baseline: bool = True,
+) -> tuple[list[Finding], int]:
+    """Run the AST layer.  Returns (findings, suppressed_count)."""
+    files = collect_files(paths or [DEFAULT_SCAN])
+    sources: dict[str, SourceFile] = {}
+    modules: list[tuple[str, SourceFile]] = []
+    for f in files:
+        src = SourceFile(path=f.resolve(), relpath=_relpath(f), text=f.read_text())
+        sources[src.relpath] = src
+        modules.append((_module_name(f), src))
+
+    proj = Project.load(modules)
+    raw: list[Finding] = []
+
+    for mod_name, mod in proj.modules.items():
+        for qual, fn in mod.functions.items():
+            key = (mod_name, qual)
+            if key in proj.traced:
+                raw.extend(check_traced(mod, fn))
+            elif key in proj.hot:
+                raw.extend(check_hot(mod, fn))
+            if replay_sensitive(mod):
+                raw.extend(check_prng(mod, fn))
+            raw.extend(check_jit_callsites(proj, mod, fn))
+
+    baseline = load_baseline(BASELINE_PATH) if use_baseline else {}
+    final, suppressed = apply_suppressions(raw, sources, baseline, use_baseline=use_baseline)
+    final.sort(key=lambda f: (f.path, f.line, f.rule))
+    return final, suppressed

@@ -1,0 +1,172 @@
+"""CLI for repro-lint.
+
+Exit status: 0 clean, 1 findings, 2 internal error.
+
+The AST layer never imports jax.  The budget layer (``--budgets``)
+re-execs itself in a subprocess with ``XLA_FLAGS`` forcing 8 host
+devices so pod-axis collectives can be lowered on CPU — the flag must
+be set before the first jax import, which this parent process never
+performs.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import subprocess
+import sys
+from pathlib import Path
+
+from . import DEFAULT_SCAN, lint_paths
+from .findings import Finding
+from .rules import RULE_CATALOG
+
+_BUDGET_WORKER_ENV = "REPRO_LINT_BUDGET_WORKER"
+
+
+def _run_budget_subprocess(only: str | None) -> list[Finding]:
+    """Lower-never-execute budget checks in a fresh process (needs 8 devices)."""
+    env = dict(os.environ)
+    env[_BUDGET_WORKER_ENV] = "1"
+    env["XLA_FLAGS"] = (
+        env.get("XLA_FLAGS", "") + " --xla_force_host_platform_device_count=8"
+    ).strip()
+    env.setdefault("JAX_PLATFORMS", "cpu")
+    repo_src = str(Path(__file__).resolve().parents[3])
+    env["PYTHONPATH"] = repo_src + os.pathsep + env.get("PYTHONPATH", "")
+    cmd = [sys.executable, "-m", "repro.analysis.lint", "--budget-worker"]
+    if only:
+        cmd += ["--only", only]
+    proc = subprocess.run(cmd, env=env, capture_output=True, text=True)
+    findings: list[Finding] = []
+    payload = None
+    for line in proc.stdout.splitlines():
+        if line.startswith("REPRO_LINT_BUDGET_JSON:"):
+            payload = line.split(":", 1)[1]
+    if payload is None:
+        findings.append(
+            Finding(
+                "BG001",
+                "src/repro/analysis/lint/budgets.py",
+                0,
+                "<budget-worker>",
+                f"budget worker failed (exit {proc.returncode}): "
+                + (proc.stderr.strip().splitlines()[-1] if proc.stderr.strip() else "no output"),
+                hint="run with --budget-worker under XLA_FLAGS=--xla_force_host_platform_device_count=8",
+            )
+        )
+        return findings
+    for item in json.loads(payload):
+        findings.append(Finding(**item))
+    return findings
+
+
+def main(argv: list[str] | None = None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="python -m repro.analysis.lint",
+        description="repo-specific static analysis: hot-path, PRNG, donation, retrace, wire-budget invariants",
+    )
+    ap.add_argument(
+        "--paths",
+        nargs="*",
+        type=Path,
+        default=None,
+        help="files/dirs to lint (default: src/repro)",
+    )
+    ap.add_argument(
+        "--budgets",
+        action="store_true",
+        help="also run the lower-never-execute budget layer (imports jax in a subprocess)",
+    )
+    ap.add_argument(
+        "--only",
+        default=None,
+        help="budget layer: run a single BUDGETS entry by name",
+    )
+    ap.add_argument(
+        "--no-baseline",
+        action="store_true",
+        help="ignore baseline.txt (inline allows still need justifications)",
+    )
+    ap.add_argument("--list-rules", action="store_true", help="print the rule catalog")
+    ap.add_argument("--json", action="store_true", help="emit findings as JSON")
+    ap.add_argument(
+        "--budget-worker",
+        action="store_true",
+        help=argparse.SUPPRESS,  # internal: subprocess entry for the budget layer
+    )
+    args = ap.parse_args(argv)
+
+    if args.list_rules:
+        for rule, desc in sorted(RULE_CATALOG.items()):
+            print(f"{rule}  {desc}")
+        return 0
+
+    if args.budget_worker:
+        # Inside the re-execed subprocess: jax import is safe here.
+        from .budgets import run_budget_checks
+
+        findings = run_budget_checks(only=args.only)
+        print(
+            "REPRO_LINT_BUDGET_JSON:"
+            + json.dumps(
+                [
+                    {
+                        "rule": f.rule,
+                        "path": f.path,
+                        "line": f.line,
+                        "qualname": f.qualname,
+                        "message": f.message,
+                        "hint": f.hint,
+                    }
+                    for f in findings
+                ]
+            )
+        )
+        return 1 if findings else 0
+
+    findings: list[Finding] = []
+    suppressed = 0
+    # `--budgets --only NAME` runs just that budget entry (regression tests).
+    if not (args.budgets and args.only):
+        ast_findings, suppressed = lint_paths(
+            args.paths, use_baseline=not args.no_baseline
+        )
+        findings.extend(ast_findings)
+    if args.budgets:
+        findings.extend(_run_budget_subprocess(args.only))
+
+    if args.json:
+        print(
+            json.dumps(
+                [
+                    {
+                        "rule": f.rule,
+                        "path": f.path,
+                        "line": f.line,
+                        "qualname": f.qualname,
+                        "message": f.message,
+                        "hint": f.hint,
+                    }
+                    for f in findings
+                ],
+                indent=2,
+            )
+        )
+    else:
+        for f in findings:
+            print(f.render())
+        if args.budgets and args.only:
+            scope = f"budget entry {args.only}"
+        else:
+            scope = ", ".join(str(p) for p in (args.paths or [DEFAULT_SCAN]))
+            if args.budgets:
+                scope += " + budgets"
+        tail = f"repro-lint: {len(findings)} finding(s), {suppressed} suppressed ({scope})"
+        print(("FAIL " if findings else "OK ") + tail)
+    return 1 if findings else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

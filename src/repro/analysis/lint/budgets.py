@@ -1,0 +1,364 @@
+"""Layer 2: lower-but-never-execute budget checks (BG001/BG002/BG003).
+
+Each ``BUDGETS`` entry lowers a public jitted entry point with abstract
+shapes on a tiny CPU config and checks the *compiled* (post-SPMD) HLO
+against declared budgets:
+
+* BG001 — max host callbacks (0 for the fused hot paths: a nonzero count
+  means a host round-trip snuck inside the traced code);
+* BG002 — max pod-axis collective wire bytes, expressed as a factor over
+  the static ``outer_wire_bytes`` prediction so the budget tracks model
+  size instead of hard-coding MiB.  This is the PR 5 finding as a gate:
+  the "compressed" int8 outer sync all-gathers the full f32 delta
+  (~100x the predicted payload), so re-introducing it trips the budget —
+  see the hidden ``diloco-outer-sync-regression`` entry, exercised by
+  ``tests/test_lint.py`` via ``--budgets --only diloco-outer-sync-regression``;
+* BG003 — expected trace count (the engine's pow2 prefill buckets bound
+  its lowerings; growth means the bucketing rotted).
+
+This module imports jax and MUST run under
+``XLA_FLAGS=--xla_force_host_platform_device_count=8`` set before the
+first jax import — the CLI re-execs itself into such a subprocess
+(``--budget-worker``); never import this from the AST layer.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Callable
+
+from .findings import Finding
+
+_SELF = "src/repro/analysis/lint/budgets.py"
+
+# Each outer-sync entry is budgeted against `outer_wire_bytes` for its
+# OWN declared compress mode: claiming compression means the bytes that
+# cross the pod axis must track the compressed payload.  Measured on the
+# reduced config / (2,2,2) mesh: uncompressed moves ~0.5x its prediction
+# (masked-mean all-reduce, ring-factor slack), while the int8 path's
+# full-f32 delta all-gather moves ~6.6x its compressed prediction (the
+# PR 5 finding) — 2x headroom separates them cleanly, and the gap only
+# widens with devices-per-pod on the production mesh.
+WIRE_BUDGET_FACTOR = 2.0
+
+
+@dataclass
+class BudgetSpec:
+    name: str
+    runner: Callable[["BudgetSpec"], list[Finding]]
+    max_host_callbacks: int = 0
+    wire_budget_factor: float | None = None
+    max_traces: int | None = None
+    hidden: bool = False  # regression demos: only run via --only
+    params: dict = field(default_factory=dict)
+
+
+def _check_callbacks(spec: BudgetSpec, hlo_text: str, what: str) -> list[Finding]:
+    from repro.analysis.hlo import host_callbacks
+
+    cb = host_callbacks(hlo_text)
+    if cb["count"] > spec.max_host_callbacks:
+        return [
+            Finding(
+                "BG001",
+                _SELF,
+                0,
+                spec.name,
+                f"{what}: {cb['count']} host callback(s) compiled in "
+                f"(budget {spec.max_host_callbacks}): {cb['targets'] or cb['feeds']}",
+                hint="the fused path must drain at the host boundary, not via callbacks",
+            )
+        ]
+    return []
+
+
+# -- diloco outer sync (the pod-axis FSO hop) -------------------------
+
+
+def _run_outer_sync(spec: BudgetSpec) -> list[Finding]:
+    import jax
+
+    from repro.analysis.hlo import collective_bytes
+    from repro.distributed.sharding import diloco_specs, param_specs, shardings_for
+    from repro.launch.dryrun import _mesh_ctx
+    from repro.launch.mesh import make_production_mesh
+    from repro.models import registry
+    from repro.train.diloco import (
+        LINT_BUDGET,
+        DiLoCoConfig,
+        diloco_init,
+        outer_step,
+        outer_wire_bytes,
+    )
+    from functools import partial
+
+    spec.max_host_callbacks = LINT_BUDGET["host_callbacks"]
+    spec.wire_budget_factor = LINT_BUDGET["outer_wire_budget_factor"]
+    compress = spec.params.get("compress")
+    arch = spec.params.get("arch", "suncatcher-lm-100m")
+    cfg = registry.get_reduced_config(arch)
+    fns = registry.model_fns(cfg)
+    dcfg = DiLoCoConfig(n_pods=2)
+    mesh = make_production_mesh(multi_pod=True, shape=(2, 2, 2))
+    params_sds = jax.eval_shape(lambda: fns.init(jax.random.PRNGKey(0), cfg))
+    d_sds = jax.eval_shape(
+        partial(diloco_init, dcfg=dcfg, compress=compress), params_sds
+    )
+    pspecs = param_specs(cfg, fsdp=True, multi_pod=True)
+    state_sh = shardings_for(
+        diloco_specs(pspecs, compress=compress is not None, screen=False),
+        d_sds,
+        mesh,
+    )
+    fn = jax.jit(
+        lambda d: outer_step(d, dcfg, compress=compress),
+        in_shardings=(state_sh,),
+        out_shardings=state_sh,
+    )
+    with _mesh_ctx(mesh):
+        hlo_text = fn.lower(d_sds).compile().as_text()
+
+    findings = _check_callbacks(spec, hlo_text, "outer_step")
+    coll = collective_bytes(hlo_text)
+    # Budget against the wire prediction FOR THE DECLARED COMPRESS MODE:
+    # an entry that claims int8/topk must actually ship the small payload
+    # across the pod axis — the PR 5 finding was exactly this lie.
+    predicted = outer_wire_bytes(params_sds, compress=compress)
+    cap = spec.wire_budget_factor * predicted
+    measured = coll["wire_bytes"]
+    if measured > cap:
+        by_dtype = {
+            k: {d: round(b / 2**20, 2) for d, b in v.items()}
+            for k, v in coll["bytes_by_dtype"].items()
+        }
+        findings.append(
+            Finding(
+                "BG002",
+                _SELF,
+                0,
+                spec.name,
+                f"outer sync (compress={compress or 'none'}) moves "
+                f"{measured / 2**20:.2f} MiB collective wire bytes, budget "
+                f"{cap / 2**20:.2f} MiB ({spec.wire_budget_factor}x the "
+                f"{predicted / 2**20:.2f} MiB predicted payload); "
+                f"by dtype (MiB): {by_dtype}",
+                hint="the compressed payload must be what crosses the pod axis — "
+                "shard-aligned quantization, pad inside the shard (ROADMAP: "
+                "wire-format compressed outer sync)",
+            )
+        )
+    return findings
+
+
+# -- diloco fused round (callbacks only: pod-local by construction) ---
+
+
+def _run_diloco_round(spec: BudgetSpec) -> list[Finding]:
+    import jax
+
+    from repro.train.data import DataConfig, SyntheticLM
+    from repro.models import registry
+    from repro.train.diloco import (LINT_BUDGET, DiLoCoConfig, diloco_init,
+                                    make_diloco_round)
+    from repro.train.loop import TrainConfig
+
+    spec.max_host_callbacks = LINT_BUDGET["host_callbacks"]
+    arch = spec.params.get("arch", "suncatcher-lm-100m")
+    cfg = registry.get_reduced_config(
+        arch, n_layers=2, d_model=32, n_heads=2, n_kv_heads=1, d_ff=64,
+        vocab_size=256,
+    )
+    fns = registry.model_fns(cfg)
+    dcfg = DiLoCoConfig(n_pods=2, inner_steps=2)
+    tcfg = TrainConfig()
+    data = SyntheticLM(DataConfig(vocab_size=cfg.vocab_size, seq_len=8,
+                                  global_batch=2))
+    params_sds = jax.eval_shape(lambda: fns.init(jax.random.PRNGKey(0), cfg))
+    d_sds = jax.eval_shape(lambda p: diloco_init(p, dcfg), params_sds)
+    # the in-graph data path (step-id batches): zero host data movement,
+    # so the callback budget covers batch generation too
+    round_fn = make_diloco_round(cfg, fns, tcfg, dcfg, data=data)
+    steps_sds = jax.ShapeDtypeStruct((dcfg.n_pods, dcfg.inner_steps), "int32")
+    mask_sds = jax.ShapeDtypeStruct((dcfg.n_pods,), "float32")
+    thr_sds = jax.ShapeDtypeStruct((2,), "float32")
+    hlo_text = round_fn.lower(d_sds, steps_sds, mask_sds, thr_sds).compile().as_text()
+    return _check_callbacks(spec, hlo_text, "diloco round")
+
+
+# -- serving engine: decode block + prefill buckets -------------------
+
+
+def _run_engine(spec: BudgetSpec) -> list[Finding]:
+    import jax
+    import jax.numpy as jnp
+
+    from repro.analysis.hlo import collective_bytes
+    from repro.models import registry
+    from repro.serving.engine import LINT_BUDGET, EngineConfig, ServingEngine
+    from repro.serving.router import LINT_BUDGET as ROUTER_BUDGET
+
+    spec.max_host_callbacks = LINT_BUDGET["host_callbacks"]
+    spec.max_traces = LINT_BUDGET["max_traces"]
+    arch = spec.params.get("arch", "suncatcher-lm-100m")
+    cfg = registry.get_reduced_config(
+        arch, n_layers=2, d_model=32, n_heads=2, n_kv_heads=1, d_ff=64,
+        vocab_size=256,
+    )
+    fns = registry.model_fns(cfg)
+    params = fns.init(jax.random.PRNGKey(0), cfg)
+    ecfg = EngineConfig(max_batch=2, max_len=64)
+    eng = ServingEngine(cfg, fns, params, ecfg)
+
+    findings: list[Finding] = []
+    lowerings = 0
+
+    step_hlo = (
+        eng._engine_step.lower(eng.params, eng.cache, eng.state).compile().as_text()
+    )
+    lowerings += 1
+    findings += _check_callbacks(spec, step_hlo, "engine decode block")
+    coll = collective_bytes(step_hlo)
+    if coll["wire_bytes"] > LINT_BUDGET["decode_collective_wire_bytes"]:
+        findings.append(
+            Finding(
+                "BG002",
+                _SELF,
+                0,
+                spec.name,
+                f"decode block emits {coll['wire_bytes']} collective wire bytes; "
+                "the single-pod decode path budget is 0",
+                hint="decode must stay pod-local; collectives belong to the outer sync",
+            )
+        )
+
+    nb = ecfg.max_batch
+    for b in eng.buckets():
+        toks = jnp.zeros((nb, b), jnp.int32)
+        i32 = lambda: jnp.zeros((nb,), jnp.int32)
+        prefill_hlo = (
+            eng._prefill.lower(
+                eng.params, eng.cache, eng.state, toks, i32(),
+                jnp.zeros((nb,), bool), jnp.zeros((nb,), jnp.float32),
+                i32(), i32(), i32(),
+            )
+            .compile()
+            .as_text()
+        )
+        lowerings += 1
+        findings += _check_callbacks(spec, prefill_hlo, f"prefill bucket {b}")
+
+    # the router's failover path drives the engine's migration jits; its
+    # declared budget is zero host callbacks end-to-end
+    b_idx = jnp.zeros((nb,), jnp.int32)
+    b_mask = jnp.zeros((nb,), bool)
+    export_hlo = (
+        eng._export.lower(eng.cache, eng.state, b_idx, b_mask).compile().as_text()
+    )
+    bcache, bstate, _ = jax.eval_shape(
+        eng._export_impl, eng.cache, eng.state, b_idx, b_mask
+    )
+    import_hlo = (
+        eng._import.lower(eng.cache, eng.state, bcache, bstate, b_idx, b_mask)
+        .compile()
+        .as_text()
+    )
+    saved = spec.max_host_callbacks
+    spec.max_host_callbacks = ROUTER_BUDGET["host_callbacks"]
+    findings += _check_callbacks(spec, export_hlo, "slot export (migration)")
+    findings += _check_callbacks(spec, import_hlo, "slot import (migration)")
+    spec.max_host_callbacks = saved
+
+    if spec.max_traces is not None and lowerings > spec.max_traces:
+        findings.append(
+            Finding(
+                "BG003",
+                _SELF,
+                0,
+                spec.name,
+                f"{lowerings} lowerings for decode+prefill, budget {spec.max_traces} "
+                f"(buckets: {eng.buckets()})",
+                hint="pow2 bucketing must bound traces at len(buckets)+1",
+            )
+        )
+    return findings
+
+
+# -- publish snapshot (re-trace-free swap path) -----------------------
+
+
+def _run_publish(spec: BudgetSpec) -> list[Finding]:
+    import jax
+
+    from repro.models import registry
+    from repro.train.diloco import _snapshot_jit
+    from repro.train.publish import LINT_BUDGET
+
+    spec.max_host_callbacks = LINT_BUDGET["host_callbacks"]
+    arch = spec.params.get("arch", "suncatcher-lm-100m")
+    cfg = registry.get_reduced_config(arch)
+    fns = registry.model_fns(cfg)
+    params_sds = jax.eval_shape(lambda: fns.init(jax.random.PRNGKey(0), cfg))
+    hlo_text = _snapshot_jit.lower(params_sds).compile().as_text()
+    return _check_callbacks(spec, hlo_text, "publish snapshot")
+
+
+BUDGETS: dict[str, BudgetSpec] = {
+    s.name: s
+    for s in [
+        BudgetSpec(
+            name="diloco-outer-sync",
+            runner=_run_outer_sync,
+            max_host_callbacks=0,
+            wire_budget_factor=WIRE_BUDGET_FACTOR,
+            params={"compress": None},
+        ),
+        BudgetSpec(
+            name="diloco-outer-sync-regression",
+            runner=_run_outer_sync,
+            max_host_callbacks=0,
+            wire_budget_factor=WIRE_BUDGET_FACTOR,
+            hidden=True,  # re-introduces the PR 5 full-f32 all-gather; must FAIL
+            params={"compress": "int8"},
+        ),
+        BudgetSpec(
+            name="diloco-round",
+            runner=_run_diloco_round,
+            max_host_callbacks=0,
+        ),
+        BudgetSpec(
+            name="engine-serve",
+            runner=_run_engine,
+            max_host_callbacks=0,
+            max_traces=4,  # 3 pow2 prefill buckets (16/32/64) + 1 decode block
+        ),
+        BudgetSpec(
+            name="publish-snapshot",
+            runner=_run_publish,
+            max_host_callbacks=0,
+        ),
+    ]
+}
+
+
+def run_budget_checks(only: str | None = None) -> list[Finding]:
+    findings: list[Finding] = []
+    for name, spec in BUDGETS.items():
+        if only is not None:
+            if name != only:
+                continue
+        elif spec.hidden:
+            continue
+        try:
+            findings.extend(spec.runner(spec))
+        except Exception as e:  # surface builder breakage as a finding
+            findings.append(
+                Finding(
+                    "BG001",
+                    _SELF,
+                    0,
+                    name,
+                    f"budget entry failed to lower: {type(e).__name__}: {e}",
+                    hint="the entry's build recipe drifted from the module under budget",
+                )
+            )
+    return findings

@@ -1,0 +1,317 @@
+"""Module indexing, jit-root detection, call-graph reachability.
+
+Pure-stdlib ``ast`` analysis.  Nothing here imports jax — the AST layer
+must run in milliseconds as a CI pre-gate.
+
+Scopes computed per project:
+
+* **traced scope** — functions whose bodies jax traces: anything with a
+  ``@jax.jit``-style decorator, anything passed to a ``jax.jit(...)``
+  call (``jax.jit(self._prefill_impl)`` in ``ServingEngine.__init__``,
+  ``jax.jit(round_fn, donate_argnums=(0,))`` in ``make_diloco_round``),
+  plus everything reachable from those through resolvable calls.
+* **hot scope** — host-side hot loops from the registry
+  (``ServingEngine.step/run`` etc.) plus everything reachable, minus the
+  traced scope.  Host syncs here are budgeted, not forbidden — hence the
+  suppression machinery.
+"""
+
+from __future__ import annotations
+
+import ast
+from dataclasses import dataclass, field
+from pathlib import Path
+
+from .findings import SourceFile
+from .registry import HOT_ENTRY_POINTS
+
+
+@dataclass
+class JitWrapper:
+    """A binding of ``jax.jit(target, ...)`` to a name or self-attribute."""
+
+    binding: str  # "name" or "self.attr" or "" when unbound
+    target: str  # qualname of wrapped function within its module ("" if lambda)
+    donate_argnums: tuple[int, ...] = ()
+    static_argnums: tuple[int, ...] = ()
+    line: int = 0
+
+
+@dataclass
+class FuncInfo:
+    qualname: str
+    node: ast.FunctionDef | ast.AsyncFunctionDef
+    module: "ModuleInfo"
+
+    @property
+    def cls(self) -> str | None:
+        parts = self.qualname.split(".")
+        return parts[-2] if len(parts) >= 2 else None
+
+
+def _const_int_tuple(node: ast.expr | None) -> tuple[int, ...]:
+    if node is None:
+        return ()
+    if isinstance(node, ast.Constant) and isinstance(node.value, int):
+        return (node.value,)
+    if isinstance(node, (ast.Tuple, ast.List)):
+        out = []
+        for e in node.elts:
+            if isinstance(e, ast.Constant) and isinstance(e.value, int):
+                out.append(e.value)
+        return tuple(out)
+    return ()
+
+
+def dotted(node: ast.expr) -> str:
+    """Render a Name/Attribute chain as 'a.b.c' ('' if not a plain chain)."""
+    parts: list[str] = []
+    while isinstance(node, ast.Attribute):
+        parts.append(node.attr)
+        node = node.value
+    if isinstance(node, ast.Name):
+        parts.append(node.id)
+        return ".".join(reversed(parts))
+    return ""
+
+
+class ModuleInfo:
+    def __init__(self, name: str, source: SourceFile):
+        self.name = name
+        self.source = source
+        self.tree = ast.parse(source.text, filename=str(source.path))
+        self.functions: dict[str, FuncInfo] = {}
+        self.aliases: dict[str, str] = {}  # local name -> dotted module
+        self.from_imports: dict[str, tuple[str, str]] = {}  # local -> (module, attr)
+        self.jit_wrappers: list[JitWrapper] = []
+        self.lint_hot_entry_points: tuple[str, ...] = ()
+        self.lint_replay_sensitive = False
+        self._index()
+
+    # -- indexing -----------------------------------------------------
+    def _index(self) -> None:
+        self._walk_scope(self.tree.body, prefix="")
+        for node in self.tree.body:
+            if isinstance(node, ast.Assign) and len(node.targets) == 1:
+                t = node.targets[0]
+                if isinstance(t, ast.Name) and t.id == "LINT_HOT_ENTRY_POINTS":
+                    if isinstance(node.value, (ast.List, ast.Tuple)):
+                        self.lint_hot_entry_points = tuple(
+                            e.value
+                            for e in node.value.elts
+                            if isinstance(e, ast.Constant) and isinstance(e.value, str)
+                        )
+                if isinstance(t, ast.Name) and t.id == "LINT_REPLAY_SENSITIVE":
+                    if isinstance(node.value, ast.Constant):
+                        self.lint_replay_sensitive = bool(node.value.value)
+
+    def _walk_scope(self, body: list[ast.stmt], prefix: str) -> None:
+        for node in body:
+            if isinstance(node, (ast.Import,)):
+                for a in node.names:
+                    self.aliases[a.asname or a.name.split(".")[0]] = (
+                        a.name if a.asname else a.name.split(".")[0]
+                    )
+            elif isinstance(node, ast.ImportFrom) and node.module:
+                for a in node.names:
+                    self.from_imports[a.asname or a.name] = (node.module, a.name)
+            elif isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                qual = f"{prefix}{node.name}"
+                self.functions[qual] = FuncInfo(qual, node, self)
+                self._walk_scope(node.body, prefix=f"{qual}.")
+            elif isinstance(node, ast.ClassDef):
+                self._walk_scope(node.body, prefix=f"{prefix}{node.name}.")
+            elif isinstance(node, (ast.If, ast.Try, ast.With, ast.For, ast.While)):
+                # index functions defined under top-level guards too
+                inner: list[ast.stmt] = list(getattr(node, "body", []))
+                inner += list(getattr(node, "orelse", []))
+                inner += list(getattr(node, "finalbody", []))
+                for h in getattr(node, "handlers", []):
+                    inner += h.body
+                self._walk_scope(inner, prefix=prefix)
+
+    # -- jit detection ------------------------------------------------
+    def _is_jit_expr(self, node: ast.expr) -> bool:
+        """True for `jax.jit` / `jit` / `partial(jax.jit, ...)` chains."""
+        d = dotted(node)
+        if d in ("jax.jit", "jit") or d.endswith(".jit"):
+            return True
+        if isinstance(node, ast.Call):
+            fd = dotted(node.func)
+            if fd in ("partial", "functools.partial") and node.args:
+                return self._is_jit_expr(node.args[0])
+        return False
+
+    def find_jit_roots(self) -> tuple[set[str], list[JitWrapper]]:
+        """Return (root qualnames in this module, jit wrapper bindings)."""
+        roots: set[str] = set()
+        wrappers: list[JitWrapper] = []
+
+        # decorated defs
+        for qual, fn in self.functions.items():
+            for dec in fn.node.decorator_list:
+                target = dec.args[0] if isinstance(dec, ast.Call) and dec.args else dec
+                if self._is_jit_expr(dec) or (
+                    isinstance(dec, ast.Call) and self._is_jit_expr(dec.func)
+                ):
+                    roots.add(qual)
+                    don = stat = ()
+                    if isinstance(dec, ast.Call):
+                        for kw in dec.keywords:
+                            if kw.arg == "donate_argnums":
+                                don = _const_int_tuple(kw.value)
+                            if kw.arg == "static_argnums":
+                                stat = _const_int_tuple(kw.value)
+                    wrappers.append(JitWrapper(qual, qual, don, stat, fn.node.lineno))
+
+        # jax.jit(...) call sites anywhere in the module
+        for node in ast.walk(self.tree):
+            if not (isinstance(node, ast.Call) and self._is_jit_expr(node.func)):
+                continue
+            if not node.args:
+                continue
+            tgt = node.args[0]
+            target_qual = ""
+            d = dotted(tgt)
+            if d.startswith("self."):
+                attr = d.split(".", 1)[1]
+                for qual in self.functions:
+                    if qual.endswith(f".{attr}"):
+                        target_qual = qual
+                        break
+            elif d and d in self.functions:
+                target_qual = d
+            elif d:
+                # bare name possibly nested (make_diloco_round.round_fn)
+                for qual in self.functions:
+                    if qual == d or qual.endswith(f".{d}"):
+                        target_qual = qual
+                        break
+            if target_qual:
+                roots.add(target_qual)
+            don = stat = ()
+            for kw in node.keywords:
+                if kw.arg == "donate_argnums":
+                    don = _const_int_tuple(kw.value)
+                if kw.arg == "static_argnums":
+                    stat = _const_int_tuple(kw.value)
+            binding = ""
+            parent = self._assign_parent(node)
+            if parent is not None:
+                binding = parent
+            wrappers.append(JitWrapper(binding, target_qual, don, stat, node.lineno))
+        self.jit_wrappers = wrappers
+        return roots, wrappers
+
+    def _assign_parent(self, call: ast.Call) -> str | None:
+        """Find `x = jax.jit(...)` / `self.x = jax.jit(...)` binding name."""
+        for node in ast.walk(self.tree):
+            if isinstance(node, ast.Assign) and node.value is call:
+                if len(node.targets) == 1:
+                    d = dotted(node.targets[0])
+                    if d:
+                        return d
+        return None
+
+
+@dataclass
+class Project:
+    modules: dict[str, ModuleInfo] = field(default_factory=dict)
+    traced: set[tuple[str, str]] = field(default_factory=set)  # (module, qualname)
+    hot: set[tuple[str, str]] = field(default_factory=set)
+    jit_roots: set[tuple[str, str]] = field(default_factory=set)
+
+    @classmethod
+    def load(cls, files: list[tuple[str, SourceFile]]) -> "Project":
+        proj = cls()
+        for name, src in files:
+            proj.modules[name] = ModuleInfo(name, src)
+        proj._compute_scopes()
+        return proj
+
+    # -- call resolution ----------------------------------------------
+    def resolve_call(
+        self, mod: ModuleInfo, caller: FuncInfo | None, call: ast.Call
+    ) -> tuple[str, str] | None:
+        d = dotted(call.func)
+        if not d:
+            return None
+        if d.startswith("self.") and caller is not None and caller.cls:
+            meth = d.split(".", 1)[1]
+            qual = f"{caller.cls}.{meth}"
+            if qual in mod.functions:
+                return (mod.name, qual)
+            return None
+        if "." not in d:
+            # nested sibling first, then module-level, then from-import
+            if caller is not None:
+                scope = caller.qualname.rsplit(".", 1)[0] if "." in caller.qualname else ""
+                if scope:
+                    qual = f"{scope}.{d}"
+                    if qual in mod.functions:
+                        return (mod.name, qual)
+                qual = f"{caller.qualname}.{d}"
+                if qual in mod.functions:
+                    return (mod.name, qual)
+            if d in mod.functions:
+                return (mod.name, d)
+            if d in mod.from_imports:
+                src_mod, attr = mod.from_imports[d]
+                target = self._lookup_module(src_mod)
+                if target and attr in target.functions:
+                    return (target.name, attr)
+            return None
+        head, rest = d.split(".", 1)
+        if head in mod.aliases:
+            target = self._lookup_module(mod.aliases[head])
+            if target and rest in target.functions:
+                return (target.name, rest)
+        if head in mod.from_imports:
+            src_mod, attr = mod.from_imports[head]
+            target = self._lookup_module(f"{src_mod}.{attr}")
+            if target and rest in target.functions:
+                return (target.name, rest)
+        return None
+
+    def _lookup_module(self, dotted_name: str) -> ModuleInfo | None:
+        if dotted_name in self.modules:
+            return self.modules[dotted_name]
+        for name, m in self.modules.items():
+            if name.endswith("." + dotted_name) or name.split(".")[-1] == dotted_name:
+                return m
+        return None
+
+    # -- scopes -------------------------------------------------------
+    def _reachable(self, seeds: set[tuple[str, str]]) -> set[tuple[str, str]]:
+        seen = set(seeds)
+        frontier = list(seeds)
+        while frontier:
+            mod_name, qual = frontier.pop()
+            mod = self.modules.get(mod_name)
+            if mod is None or qual not in mod.functions:
+                continue
+            fn = mod.functions[qual]
+            for node in ast.walk(fn.node):
+                if isinstance(node, ast.Call):
+                    tgt = self.resolve_call(mod, fn, node)
+                    if tgt and tgt not in seen:
+                        seen.add(tgt)
+                        frontier.append(tgt)
+        return seen
+
+    def _compute_scopes(self) -> None:
+        jit_seeds: set[tuple[str, str]] = set()
+        for name, mod in self.modules.items():
+            roots, _ = mod.find_jit_roots()
+            for r in roots:
+                jit_seeds.add((name, r))
+        self.jit_roots = set(jit_seeds)
+        self.traced = self._reachable(jit_seeds)
+
+        hot_seeds: set[tuple[str, str]] = set()
+        for name, mod in self.modules.items():
+            declared = HOT_ENTRY_POINTS.get(name, ()) + mod.lint_hot_entry_points
+            for qual in declared:
+                if qual in mod.functions:
+                    hot_seeds.add((name, qual))
+        self.hot = self._reachable(hot_seeds) - self.traced

@@ -1,0 +1,82 @@
+"""Registries that tell repro-lint *where* each invariant applies.
+
+The AST layer is deliberately jax-free (stdlib ``ast`` only) so the lint
+CLI can run in milliseconds before the test suite.  Everything
+repo-specific lives here:
+
+* ``JIT_ENTRY_POINTS`` — functions whose bodies are traced.  The linter
+  also auto-detects jit roots syntactically (``@jax.jit`` decorators and
+  ``jax.jit(fn)`` call sites), so this list only needs names that the
+  syntactic pass cannot see (none today; kept for explicitness and for
+  the docs table).
+* ``HOT_ENTRY_POINTS`` — *host-side* hot loops (decode/step/run loops).
+  Host syncs here are the scarce resource the benchmarks count
+  (0.047 host-syncs/token serve, 0.125 host-syncs/step train); each one
+  must be an intentional drain with an inline justification.
+* ``REPLAY_SENSITIVE_MODULES`` — modules whose randomness must be a pure
+  function of (seed, round/tick/request id) so chaos replay stays
+  bit-exact.  PRNG rules (PR001/PR002) only fire inside these.
+
+Fixture escape hatch: a module under lint may declare its own
+``LINT_HOT_ENTRY_POINTS = ["fn", ...]`` or ``LINT_REPLAY_SENSITIVE = True``
+as a module-level literal; the linter reads those from the AST so test
+fixtures can exercise hot-scope and PRNG rules without being imported.
+"""
+
+from __future__ import annotations
+
+# Host-side hot loops: module -> function/method qualnames.  A host sync
+# (HS00x) anywhere reachable from these is a finding unless suppressed.
+HOT_ENTRY_POINTS: dict[str, tuple[str, ...]] = {
+    "repro.serving.engine": ("ServingEngine.step", "ServingEngine.run"),
+    "repro.serving.router": ("ConstellationRouter.step", "ConstellationRouter.run"),
+    "repro.train.fault_tolerance": (
+        "FaultTolerantTrainer.run",
+        "FaultTolerantTrainer.run_fused",
+        "DiLoCoSupervisor.run",
+    ),
+}
+
+# Traced entry points: the syntactic jit-root pass finds these on its
+# own (jax.jit(...) call sites in __init__ / make_diloco_round); listed
+# here so `--list-rules` and the docs can show the enforced surface.
+JIT_ENTRY_POINTS: dict[str, tuple[str, ...]] = {
+    "repro.serving.engine": (
+        "ServingEngine._prefill_impl",
+        "ServingEngine._decode_block_impl",
+        "ServingEngine._export_impl",
+        "ServingEngine._import_impl",
+        "ServingEngine._delta_export_impl",
+        "ServingEngine._delta_apply_impl",
+    ),
+    "repro.train.diloco": ("make_diloco_round.round_fn", "outer_step"),
+}
+
+# Modules whose PRNG use must fold on a replay id (PR001/PR002 scope).
+REPLAY_SENSITIVE_MODULES: tuple[str, ...] = (
+    "repro.core.isl.liveness",
+    "repro.serving.chaos",
+    "repro.train.diloco",
+    "repro.serving.engine",
+    "repro.serving.router",
+)
+
+# Names that consume randomness from a key.  A raw (never-folded) key
+# reaching one of these, or the same key Name reaching two of them, is
+# a PRNG-discipline finding.
+KEY_CONSUMERS: frozenset[str] = frozenset(
+    {
+        "normal",
+        "uniform",
+        "bernoulli",
+        "categorical",
+        "gumbel",
+        "randint",
+        "truncated_normal",
+        "permutation",
+        "choice",
+        "bits",
+        "exponential",
+        "poisson",
+    }
+)

@@ -1,0 +1,596 @@
+"""AST rule implementations.
+
+Rule catalog (rendered by ``--list-rules`` and mirrored in
+docs/ARCHITECTURE.md):
+
+Traced scope (functions reachable from jitted entry points):
+  JT001  .item() on a traced value           — forces a device round-trip per call
+  JT002  float()/int()/bool() on a traced value
+  JT003  np.asarray/np.array on a traced value
+  JT004  jax.device_get inside traced code
+  JT005  block_until_ready inside traced code
+  JT006  Python if/while on a traced value   — (`is None` checks exempt)
+  RT001  Python if/while on a traced *shape* — retraces per shape, not per value
+  RT003  f-string/str()/repr() of a traced value — embeds tracer repr, retraces
+
+Jit wrapper call sites:
+  RT002  unhashable literal (list/dict/set) at a static_argnums position
+  DN001  donated argument referenced after the donating call
+
+Hot host scope (decode/step/run loops from the registry):
+  HS001  jax.device_get in a hot loop
+  HS002  block_until_ready in a hot loop
+  HS003  .item() in a hot loop
+
+Replay-sensitive modules:
+  PR001  PRNG key consumed without fold_in on a replay id
+         (includes np.random.default_rng with a pure-constant seed)
+  PR002  same key consumed twice without reassignment
+
+Meta:
+  LN001  suppression comment without justification
+  LN002  inline allow not mirrored in baseline.txt (or stale baseline entry)
+"""
+
+from __future__ import annotations
+
+import ast
+import re
+
+from .callgraph import FuncInfo, ModuleInfo, Project, dotted
+from .findings import Finding
+from .registry import KEY_CONSUMERS, REPLAY_SENSITIVE_MODULES
+
+RULE_CATALOG: dict[str, str] = {
+    "JT001": ".item() on a traced value inside jitted code",
+    "JT002": "float()/int()/bool() on a traced value inside jitted code",
+    "JT003": "np.asarray/np.array on a traced value inside jitted code",
+    "JT004": "jax.device_get inside jitted code",
+    "JT005": "block_until_ready inside jitted code",
+    "JT006": "Python if/while branching on a traced value",
+    "RT001": "Python if/while branching on a traced shape (retrace hazard)",
+    "RT002": "unhashable literal passed at a static_argnums position",
+    "RT003": "f-string/str()/repr() of a traced value inside jitted code",
+    "DN001": "donated argument referenced after the donating call",
+    "HS001": "jax.device_get in a host hot loop",
+    "HS002": "block_until_ready in a host hot loop",
+    "HS003": ".item() in a host hot loop",
+    "PR001": "PRNG key consumed without fold_in on a replay id",
+    "PR002": "PRNG key consumed twice",
+    "BG001": "host-callback budget exceeded for a jitted entry point",
+    "BG002": "pod-axis collective-byte budget exceeded",
+    "BG003": "trace-count budget exceeded",
+    "LN001": "suppression without justification",
+    "LN002": "suppression/baseline mismatch",
+}
+
+# Annotations that mark a parameter as static config, not a traced array.
+_STATIC_ANN = re.compile(r"\b(int|float|bool|str|bytes|Config|Mesh|Sharding|Path)\b")
+
+
+def _ann_is_static(ann: ast.expr | None) -> bool:
+    if ann is None:
+        return False
+    try:
+        text = ast.unparse(ann)
+    except Exception:
+        return False
+    return bool(_STATIC_ANN.search(text))
+
+
+def _names_in(node: ast.expr) -> set[str]:
+    return {n.id for n in ast.walk(node) if isinstance(n, ast.Name)}
+
+
+_SHAPE_ATTRS = {"shape", "ndim", "size", "dtype"}
+
+
+class _Taint:
+    """Flow-insensitive value/shape taint for one traced function."""
+
+    def __init__(self, fn: FuncInfo):
+        self.value: set[str] = set()
+        self.shape: set[str] = set()
+        args = fn.node.args
+        params = list(args.posonlyargs) + list(args.args) + list(args.kwonlyargs)
+        for a in params:
+            if a.arg in ("self", "cls"):
+                continue
+            if _ann_is_static(a.annotation):
+                continue
+            self.value.add(a.arg)
+        if args.vararg:
+            self.value.add(args.vararg.arg)
+        self._fixpoint(fn.node)
+
+    def _expr_taint(self, node: ast.expr) -> tuple[bool, bool]:
+        """(value_tainted, shape_tainted) for an expression.
+
+        Name occurrences under ``.shape/.ndim/.size/.dtype`` or ``len()``
+        contribute *shape* taint only — ``int(x.shape[0] * frac)`` is a
+        static computation, not a host sync on a tracer.
+        """
+        under_shape: set[int] = set()  # id() of Name nodes inside shape accesses
+        shp = False
+        for sub in ast.walk(node):
+            names: list[ast.Name] = []
+            if isinstance(sub, ast.Attribute) and sub.attr in _SHAPE_ATTRS:
+                names = [n for n in ast.walk(sub.value) if isinstance(n, ast.Name)]
+            elif isinstance(sub, ast.Call) and dotted(sub.func) == "len" and sub.args:
+                names = [n for n in ast.walk(sub.args[0]) if isinstance(n, ast.Name)]
+            for n in names:
+                under_shape.add(id(n))
+                if n.id in self.value or n.id in self.shape:
+                    shp = True
+        val = False
+        for sub in ast.walk(node):
+            if isinstance(sub, ast.Name) and id(sub) not in under_shape:
+                if sub.id in self.value:
+                    val = True
+                elif sub.id in self.shape:
+                    shp = True
+        return (val, shp)
+
+    def _fixpoint(self, fn_node: ast.AST) -> None:
+        for _ in range(4):
+            before = (len(self.value), len(self.shape))
+            for node in ast.walk(fn_node):
+                targets: list[ast.expr] = []
+                value: ast.expr | None = None
+                if isinstance(node, ast.Assign):
+                    targets, value = node.targets, node.value
+                elif isinstance(node, ast.AugAssign):
+                    targets, value = [node.target], node.value
+                elif isinstance(node, ast.AnnAssign) and node.value is not None:
+                    targets, value = [node.target], node.value
+                elif isinstance(node, ast.For):
+                    targets, value = [node.target], node.iter
+                if value is None:
+                    continue
+                val, shp = self._expr_taint(value)
+                for t in targets:
+                    for n in ast.walk(t):
+                        if isinstance(n, ast.Name):
+                            if val:
+                                self.value.add(n.id)
+                            elif shp:
+                                self.shape.add(n.id)
+            if (len(self.value), len(self.shape)) == before:
+                break
+
+
+def _is_none_check(test: ast.expr) -> bool:
+    """True for tests that are static despite touching traced names:
+    `x is None` / `x is not None` (identity, not value) and
+    `"key" in d` / `"key" not in d` (pytree-dict structure, not data)."""
+    if isinstance(test, ast.BoolOp):
+        return all(_is_none_check(v) for v in test.values)
+    if isinstance(test, ast.UnaryOp) and isinstance(test.op, ast.Not):
+        return _is_none_check(test.operand)
+    if isinstance(test, ast.Compare):
+        if all(isinstance(op, (ast.Is, ast.IsNot)) for op in test.ops) and all(
+            isinstance(c, ast.Constant) and c.value is None
+            for c in test.comparators
+        ):
+            return True
+        if all(isinstance(op, (ast.In, ast.NotIn)) for op in test.ops) and isinstance(
+            test.left, ast.Constant
+        ):
+            return True
+    return False
+
+
+def _own_nodes(fn_node: ast.AST) -> list[ast.AST]:
+    """All nodes of a function excluding nested function bodies."""
+    out: list[ast.AST] = []
+    stack: list[ast.AST] = [fn_node]
+    first = True
+    while stack:
+        node = stack.pop()
+        if not first and isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef, ast.Lambda)):
+            continue
+        first = False
+        out.append(node)
+        stack.extend(ast.iter_child_nodes(node))
+    return out
+
+
+def check_traced(mod: ModuleInfo, fn: FuncInfo) -> list[Finding]:
+    findings: list[Finding] = []
+    taint = _Taint(fn)
+    rel = mod.source.relpath
+
+    def add(rule: str, node: ast.AST, msg: str, hint: str) -> None:
+        findings.append(Finding(rule, rel, node.lineno, fn.qualname, msg, hint))
+
+    for node in _own_nodes(fn.node):
+        if isinstance(node, ast.Call):
+            d = dotted(node.func)
+            if isinstance(node.func, ast.Attribute):
+                attr = node.func.attr
+                if attr == "item" and not node.args:
+                    v, _s = taint._expr_taint(node.func.value)
+                    if v:
+                        add(
+                            "JT001",
+                            node,
+                            ".item() on traced value forces a device sync per call",
+                            "keep the value on device; batch reads at the drain boundary",
+                        )
+                if attr == "block_until_ready":
+                    add(
+                        "JT005",
+                        node,
+                        "block_until_ready inside traced code",
+                        "blocking belongs outside jit, at the measured drain point",
+                    )
+            if d in ("float", "int", "bool") and node.args:
+                v, _s = taint._expr_taint(node.args[0])
+                if v:
+                    add(
+                        "JT002",
+                        node,
+                        f"{d}() on traced value concretizes the tracer",
+                        "use jnp casts (value.astype) or keep it symbolic",
+                    )
+            if d.split(".")[0] in mod.aliases and mod.aliases[d.split(".")[0]] == "numpy":
+                if d.split(".", 1)[-1] in ("asarray", "array") and node.args:
+                    v, _s = taint._expr_taint(node.args[0])
+                    if v:
+                        add(
+                            "JT003",
+                            node,
+                            f"{d}() on traced value pulls it to host",
+                            "use jnp.asarray, or move the conversion outside jit",
+                        )
+            if d in ("jax.device_get", "device_get"):
+                add(
+                    "JT004",
+                    node,
+                    "jax.device_get inside traced code",
+                    "device_get belongs at the host drain boundary, not under jit",
+                )
+            if d in ("str", "repr", "format") and node.args:
+                v, _s = taint._expr_taint(node.args[0])
+                if v:
+                    add(
+                        "RT003",
+                        node,
+                        f"{d}() of traced value embeds the tracer repr",
+                        "log outside jit or use jax.debug.print",
+                    )
+        elif isinstance(node, (ast.If, ast.While)):
+            test = node.test
+            if _is_none_check(test):
+                continue
+            v, s = taint._expr_taint(test)
+            if v:
+                add(
+                    "JT006",
+                    test,
+                    "Python branch on traced value (concretizes the tracer)",
+                    "use jnp.where / lax.cond / lax.select instead",
+                )
+            elif s:
+                add(
+                    "RT001",
+                    test,
+                    "Python branch on traced shape — one retrace per shape",
+                    "make the shape static (bucket it) or branch with lax.cond",
+                )
+        elif isinstance(node, ast.JoinedStr):
+            for val in node.values:
+                if isinstance(val, ast.FormattedValue):
+                    v, _s = taint._expr_taint(val.value)
+                    if v:
+                        add(
+                            "RT003",
+                            node,
+                            "f-string interpolates a traced value",
+                            "log outside jit or use jax.debug.print",
+                        )
+                        break
+    return findings
+
+
+def check_hot(mod: ModuleInfo, fn: FuncInfo) -> list[Finding]:
+    findings: list[Finding] = []
+    rel = mod.source.relpath
+    for node in _own_nodes(fn.node):
+        if not isinstance(node, ast.Call):
+            continue
+        d = dotted(node.func)
+        if d in ("jax.device_get", "device_get"):
+            findings.append(
+                Finding(
+                    "HS001",
+                    rel,
+                    node.lineno,
+                    fn.qualname,
+                    "jax.device_get in host hot loop (counts against the sync budget)",
+                    "batch reads at the single drain point, or suppress with justification",
+                )
+            )
+        elif d in ("jax.block_until_ready", "block_until_ready") or (
+            isinstance(node.func, ast.Attribute) and node.func.attr == "block_until_ready"
+        ):
+            findings.append(
+                Finding(
+                    "HS002",
+                    rel,
+                    node.lineno,
+                    fn.qualname,
+                    "block_until_ready in host hot loop",
+                    "only block where the stall is the thing being measured",
+                )
+            )
+        elif isinstance(node.func, ast.Attribute) and node.func.attr == "item" and not node.args:
+            findings.append(
+                Finding(
+                    "HS003",
+                    rel,
+                    node.lineno,
+                    fn.qualname,
+                    ".item() in host hot loop (one device sync per call)",
+                    "drain once per block, not once per value",
+                )
+            )
+    return findings
+
+
+# -- PRNG discipline --------------------------------------------------
+
+
+def _walk_no_defs(node: ast.AST) -> list[ast.AST]:
+    out: list[ast.AST] = []
+    stack: list[ast.AST] = [node]
+    while stack:
+        n = stack.pop()
+        if isinstance(n, (ast.FunctionDef, ast.AsyncFunctionDef, ast.Lambda)) and n is not node:
+            continue
+        out.append(n)
+        stack.extend(ast.iter_child_nodes(n))
+    return out
+
+
+def _is_const_seed(node: ast.expr) -> bool:
+    if isinstance(node, ast.Constant):
+        return True
+    if isinstance(node, (ast.Tuple, ast.List)):
+        return all(_is_const_seed(e) for e in node.elts)
+    return False
+
+
+def check_prng(mod: ModuleInfo, fn: FuncInfo) -> list[Finding]:
+    findings: list[Finding] = []
+    rel = mod.source.relpath
+    state: dict[str, str] = {}  # name -> "raw" | "folded"
+    consumed: dict[str, int] = {}
+
+    def classify_call(call: ast.Call) -> str | None:
+        """'key' if creates raw key, 'fold' for fold_in, 'split', consumer name."""
+        d = dotted(call.func)
+        tail = d.split(".")[-1] if d else (
+            call.func.attr if isinstance(call.func, ast.Attribute) else ""
+        )
+        if tail in ("PRNGKey", "key") and ("random" in d or d in ("PRNGKey", "key")):
+            return "key"
+        if tail == "fold_in":
+            return "fold"
+        if tail == "split":
+            return "split"
+        if tail in KEY_CONSUMERS and ("random" in d or d == tail):
+            return "consume"
+        return None
+
+    def key_arg(call: ast.Call) -> str | None:
+        if call.args and isinstance(call.args[0], ast.Name):
+            return call.args[0].id
+        return None
+
+    def process_calls(expr: ast.AST) -> None:
+        for call in [n for n in _walk_no_defs(expr) if isinstance(n, ast.Call)]:
+            kind = classify_call(call)
+            d = dotted(call.func)
+            if kind == "consume":
+                k = key_arg(call)
+                if k is not None and k in state:
+                    consumed[k] = consumed.get(k, 0) + 1
+                    if state[k] == "raw":
+                        findings.append(
+                            Finding(
+                                "PR001",
+                                rel,
+                                call.lineno,
+                                fn.qualname,
+                                f"key '{k}' consumed without fold_in on a replay id",
+                                "derive per-use keys with jax.random.fold_in(key, round/tick/request id)",
+                            )
+                        )
+                    if consumed[k] == 2:
+                        findings.append(
+                            Finding(
+                                "PR002",
+                                rel,
+                                call.lineno,
+                                fn.qualname,
+                                f"key '{k}' consumed more than once",
+                                "split or fold_in before each consumption; never reuse a key",
+                            )
+                        )
+            elif kind == "split":
+                k = key_arg(call)
+                if k is not None and k in state:
+                    consumed[k] = consumed.get(k, 0) + 1
+                    if consumed[k] == 2:
+                        findings.append(
+                            Finding(
+                                "PR002",
+                                rel,
+                                call.lineno,
+                                fn.qualname,
+                                f"key '{k}' consumed more than once",
+                                "split once and use the parts; never reuse a key",
+                            )
+                        )
+            elif "default_rng" in d:
+                if call.args and _is_const_seed(call.args[0]):
+                    findings.append(
+                        Finding(
+                            "PR001",
+                            rel,
+                            call.lineno,
+                            fn.qualname,
+                            "np RNG seeded with a constant — not a function of a replay id",
+                            "seed with a (seed, round/tick id) tuple so replay is bit-exact",
+                        )
+                    )
+
+    def track_assign(stmt: ast.stmt) -> None:
+        targets: list[ast.expr] = []
+        value: ast.expr | None = None
+        if isinstance(stmt, ast.Assign):
+            targets, value = stmt.targets, stmt.value
+        elif isinstance(stmt, ast.AnnAssign) and stmt.value is not None:
+            targets, value = [stmt.target], stmt.value
+        if value is None:
+            return
+        new_state: str | None = None
+        if isinstance(value, ast.Call):
+            kind = classify_call(value)
+            if kind == "key":
+                new_state = "raw"
+            elif kind == "fold":
+                new_state = "folded"
+            elif kind == "split":
+                src = key_arg(value)
+                new_state = state.get(src or "", "raw")
+        for t in targets:
+            for n in ast.walk(t):
+                if isinstance(n, ast.Name):
+                    if new_state is not None:
+                        state[n.id] = new_state
+                        consumed[n.id] = 0
+                    elif n.id in state:
+                        del state[n.id]
+                        consumed.pop(n.id, None)
+
+    def visit_stmts(stmts: list[ast.stmt]) -> None:
+        for stmt in stmts:
+            if isinstance(stmt, (ast.FunctionDef, ast.AsyncFunctionDef, ast.ClassDef)):
+                continue  # nested defs are linted as their own functions
+            if isinstance(stmt, (ast.If, ast.While)):
+                process_calls(stmt.test)
+                visit_stmts(stmt.body)
+                visit_stmts(stmt.orelse)
+            elif isinstance(stmt, ast.For):
+                process_calls(stmt.iter)
+                track_assign(stmt)
+                visit_stmts(stmt.body)
+                visit_stmts(stmt.orelse)
+            elif isinstance(stmt, ast.With):
+                for item in stmt.items:
+                    process_calls(item.context_expr)
+                visit_stmts(stmt.body)
+            elif isinstance(stmt, ast.Try):
+                visit_stmts(stmt.body)
+                for h in stmt.handlers:
+                    visit_stmts(h.body)
+                visit_stmts(stmt.orelse)
+                visit_stmts(stmt.finalbody)
+            else:
+                process_calls(stmt)
+                track_assign(stmt)
+
+    visit_stmts(fn.node.body)
+    return findings
+
+
+# -- donation / static-arg call-site checks ---------------------------
+
+
+def check_jit_callsites(proj: Project, mod: ModuleInfo, fn: FuncInfo) -> list[Finding]:
+    findings: list[Finding] = []
+    rel = mod.source.relpath
+    wrappers = {w.binding: w for w in mod.jit_wrappers if w.binding}
+
+    stmts = list(
+        n for n in _own_nodes(fn.node) if isinstance(n, ast.stmt)
+    )
+
+    for node in _own_nodes(fn.node):
+        if not isinstance(node, ast.Call):
+            continue
+        d = dotted(node.func)
+        w = wrappers.get(d)
+        if w is None and d.startswith("self."):
+            w = wrappers.get(d)
+        if w is None:
+            continue
+        for pos in w.static_argnums:
+            idx = pos
+            if w.target and "." in w.target:
+                idx = pos - 1  # bound method: self occupies argnum 0
+            if 0 <= idx < len(node.args):
+                arg = node.args[idx]
+                if isinstance(arg, (ast.List, ast.Dict, ast.Set)):
+                    findings.append(
+                        Finding(
+                            "RT002",
+                            rel,
+                            arg.lineno,
+                            fn.qualname,
+                            "unhashable literal at a static_argnums position — retrace per call",
+                            "pass a tuple (hashable) or hoist to a module constant",
+                        )
+                    )
+        for pos in w.donate_argnums:
+            idx = pos
+            if w.target and "." in w.target:
+                idx = pos - 1
+            if not (0 <= idx < len(node.args)):
+                continue
+            arg = node.args[idx]
+            if not isinstance(arg, ast.Name):
+                continue
+            name = arg.id
+            call_line = node.lineno
+            reassigned_at = None
+            for stmt in stmts:
+                if stmt.lineno <= call_line:
+                    continue
+                stores = {
+                    n.id
+                    for n in ast.walk(stmt)
+                    if isinstance(n, ast.Name) and isinstance(n.ctx, ast.Store)
+                }
+                if name in stores and reassigned_at is None:
+                    reassigned_at = stmt.lineno
+                loads = [
+                    n
+                    for n in ast.walk(stmt)
+                    if isinstance(n, ast.Name)
+                    and isinstance(n.ctx, ast.Load)
+                    and n.id == name
+                ]
+                for load in loads:
+                    if reassigned_at is None or load.lineno < reassigned_at:
+                        findings.append(
+                            Finding(
+                                "DN001",
+                                rel,
+                                load.lineno,
+                                fn.qualname,
+                                f"'{name}' referenced after being donated at line {call_line}",
+                                "donated buffers are invalidated; rebind the result instead",
+                            )
+                        )
+                        break
+                else:
+                    continue
+                break
+    return findings
+
+
+def replay_sensitive(mod: ModuleInfo) -> bool:
+    return mod.name in REPLAY_SENSITIVE_MODULES or mod.lint_replay_sensitive

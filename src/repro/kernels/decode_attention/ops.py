@@ -22,17 +22,17 @@ def decode_attention(q, k_cache, v_cache, kv_len, *, block_k: int = 512,
     """q: (B, 1, H, dh) or (B, H, dh); caches: (B, M, Hkv, dh) model layout.
     kv_len: scalar or (B,) valid lengths (ragged per-slot serving)."""
     squeeze = q.ndim == 4
-    if squeeze:
+    if squeeze:  # repro-lint: allow[RT001] rank normalization is trace-time static; two shapes total
         q = q[:, 0]
     m = k_cache.shape[1]
     # largest block <= block_k that divides M, down to the 128 granularity
     # init_cache aligns to — any init_cache-allocated cache takes this exit
     # and moves zero bytes here
     bk = min(block_k, m)
-    while bk > 128 and m % bk:
+    while bk > 128 and m % bk:  # repro-lint: allow[RT001] block-size pick at trace time; retraces bounded by pow2 cache buckets
         bk //= 2
     pad = (-m) % bk
-    if pad:  # fallback only: ad-hoc caches not aligned at allocation
+    if pad:  # fallback only: ad-hoc caches not aligned at allocation  # repro-lint: allow[RT001] static pad decision; init_cache-aligned caches never take it
         k_cache = jnp.pad(k_cache, ((0, 0), (0, pad), (0, 0), (0, 0)))
         v_cache = jnp.pad(v_cache, ((0, 0), (0, pad), (0, 0), (0, 0)))
     out = decode_attention_fwd(q, k_cache, v_cache, kv_len, block_k=bk,

@@ -76,6 +76,13 @@ from ..core.isl.liveness import (choose_standby_pod,
 from .chaos import ChaosSchedule, as_chaos_schedule
 from .engine import Request, ServingEngine, check_swap_compatible
 
+# Enforced by `python -m repro.analysis.lint --budgets` (entry
+# "engine-serve" lowers the export/import migration jits the router's
+# failover path drives): bit-exact slot migration must compile with zero
+# host callbacks — the only permitted host syncs in `step()` are the
+# suppressed stall-measurement blocks (see lint baseline).
+LINT_BUDGET = {"host_callbacks": 0}
+
 
 @dataclass(frozen=True)
 class ForcedOutage:
@@ -668,13 +675,13 @@ class ConstellationRouter:
                 s is not None for i in np.nonzero(~alive)[0]
                 for s in self.engines[int(i)].slots):
             for e in self.engines:     # drain async backlog off the clock
-                jax.block_until_ready(e.cache["k"])
+                jax.block_until_ready(e.cache["k"])  # repro-lint: allow[HS002] deliberate pre-failover settle so the stall clock starts clean
             stall_t = time.perf_counter()
         m0 = self.stats["migrated_slots"]
         self._failover(alive, weights)
         if stall_t is not None and self.stats["migrated_slots"] > m0:
             for e in self.engines:
-                jax.block_until_ready(e.cache["k"])
+                jax.block_until_ready(e.cache["k"])  # repro-lint: allow[HS002] the device-blocked stall IS the failover measurement
             self.failover_stalls.append(time.perf_counter() - stall_t)
         self._rebalance(alive, weights)
         self._maybe_apply_swap()

@@ -39,6 +39,15 @@ from .fault_tolerance import screen_init, screen_update
 from .loop import TrainConfig, make_train_step
 from .optimizer import init_opt_state
 
+# Enforced by `python -m repro.analysis.lint --budgets` (entries
+# "diloco-round" and "diloco-outer-sync"): the fused round compiles with
+# zero host callbacks, and the outer sync's measured collective wire
+# bytes stay within outer_wire_budget_factor x the `outer_wire_bytes`
+# prediction FOR ITS DECLARED COMPRESS MODE — an entry claiming int8
+# must ship the small payload, which is exactly what the PR 5 dryrun
+# found the in-graph EF roundtrip does not do (full-f32 all-gather).
+LINT_BUDGET = {"host_callbacks": 0, "outer_wire_budget_factor": 2.0}
+
 
 @dataclass(frozen=True)
 class DiLoCoConfig:

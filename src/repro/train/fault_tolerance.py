@@ -339,7 +339,7 @@ class FaultTolerantTrainer:
                 jnp.float32)
             new_state, new_screen, block = self.fused_steps(
                 self.state, screen, batches, thresholds)
-            block = jax.device_get(block)    # THE host sync: one per K steps
+            block = jax.device_get(block)    # THE host sync: one per K steps  # repro-lint: allow[HS001] the fused-path drain behind the 0.125 syncs/step budget
             self.stats["drains"] += 1
 
             suspects = np.asarray(block["suspect"])
@@ -505,7 +505,7 @@ class DiLoCoSupervisor:
                 self.d_state, self.grid_fn(r),
                 jnp.asarray(mask_np, jnp.float32),
                 jnp.asarray(thr, jnp.float32))
-            metrics = jax.device_get(metrics)   # the ONE sync per round
+            metrics = jax.device_get(metrics)   # the ONE sync per round  # repro-lint: allow[HS001] the supervisor's single per-round metrics drain
             self.stats["drains"] += 1
 
             outer_ok = bool(np.asarray(metrics.get("outer_ok", True)))

@@ -64,6 +64,13 @@ class PublishConfig:
                              f"got {self.holdback_rounds}")
 
 
+# Enforced by `python -m repro.analysis.lint --budgets` (entry
+# "publish-snapshot"): the snapshot copy the publisher stages each round
+# compiles with zero host callbacks — publication must never add a host
+# round-trip to the training loop it rides on.
+LINT_BUDGET = {"host_callbacks": 0}
+
+
 class ParamPublisher:
     """Stages per-round param snapshots and releases them to `sink` only
     once they can no longer be rolled back.

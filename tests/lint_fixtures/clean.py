@@ -1,0 +1,49 @@
+"""Clean fixture: near-miss patterns that must NOT fire any rule.
+
+Guards against false-positive creep — every construct here is one the
+real codebase relies on (shape-derived statics, is-None/membership
+branches, folded PRNG keys, drains outside hot scope).
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+LINT_HOT_ENTRY_POINTS = ["hot_loop"]
+LINT_REPLAY_SENSITIVE = True
+
+
+@jax.jit
+def traced(x, scale: float = 1.0, cfg: str = "dense", extra=None):
+    # int()/float() of SHAPE-derived values is static, not a host sync
+    k = max(1, int(x.shape[0] * scale))
+    n = float(len(x))
+    # is-None and dict-membership branches are structural, not tracer reads
+    if extra is not None:
+        x = x + extra
+    state = {"x": x}
+    if "x" in state:
+        x = state["x"]
+    # shape-only branch via an annotated-static knob is not value branching
+    if cfg == "dense":
+        x = x * n
+    return x[:k]
+
+
+def draw(seed: int, step: int, shape):
+    # folded key, consumed once — the replay-safe pattern
+    key = jax.random.fold_in(jax.random.PRNGKey(seed), step)
+    sample = jax.random.normal(key, shape)
+    # np RNG seeded on a (seed, step) tuple is a function of the replay id
+    rng = np.random.default_rng((seed, step))
+    return sample + rng.standard_normal(shape)
+
+
+def hot_loop(xs):
+    # ONE batched drain per block is the budgeted pattern (outside this
+    # fixture's hot functions, device_get is entirely unrestricted)
+    out = jnp.stack(xs)
+    return batch_drain(out)
+
+
+def batch_drain(out):
+    return out  # plain host code: no syncs at all here

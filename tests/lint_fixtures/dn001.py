@@ -1,0 +1,14 @@
+"""Bad: donated argument referenced after the donating call."""
+import jax
+
+
+def f(x):
+    return x * 2
+
+
+g = jax.jit(f, donate_argnums=(0,))
+
+
+def caller(x):
+    y = g(x)
+    return x + y  # LINT-EXPECT: DN001

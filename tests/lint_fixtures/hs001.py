@@ -1,0 +1,11 @@
+"""Bad: per-item device_get in a host hot loop."""
+import jax
+
+LINT_HOT_ENTRY_POINTS = ["hot_loop"]
+
+
+def hot_loop(xs):
+    out = []
+    for x in xs:
+        out.append(jax.device_get(x))  # LINT-EXPECT: HS001
+    return out

@@ -1,0 +1,10 @@
+"""Bad: blocking inside a host hot loop (not a measurement)."""
+import jax
+
+LINT_HOT_ENTRY_POINTS = ["hot_loop"]
+
+
+def hot_loop(xs):
+    for x in xs:
+        jax.block_until_ready(x)  # LINT-EXPECT: HS002
+    return xs

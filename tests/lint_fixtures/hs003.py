@@ -1,0 +1,9 @@
+"""Bad: per-value .item() in a host hot loop."""
+LINT_HOT_ENTRY_POINTS = ["hot_loop"]
+
+
+def hot_loop(xs):
+    total = 0.0
+    for x in xs:
+        total += x.item()  # LINT-EXPECT: HS003
+    return total

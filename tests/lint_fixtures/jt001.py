@@ -1,0 +1,7 @@
+"""Bad: .item() inside a jitted function — a device sync per call."""
+import jax
+
+
+@jax.jit
+def f(x):
+    return x.item()  # LINT-EXPECT: JT001

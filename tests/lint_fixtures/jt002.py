@@ -1,0 +1,7 @@
+"""Bad: float() on a tracer concretizes it."""
+import jax
+
+
+@jax.jit
+def f(x):
+    return float(x)  # LINT-EXPECT: JT002

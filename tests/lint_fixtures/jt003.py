@@ -1,0 +1,8 @@
+"""Bad: np.asarray on a tracer pulls it to host."""
+import jax
+import numpy as np
+
+
+@jax.jit
+def f(x):
+    return np.asarray(x)  # LINT-EXPECT: JT003

@@ -1,0 +1,7 @@
+"""Bad: jax.device_get inside traced code."""
+import jax
+
+
+@jax.jit
+def f(x):
+    return jax.device_get(x)  # LINT-EXPECT: JT004

@@ -1,0 +1,8 @@
+"""Bad: block_until_ready inside traced code."""
+import jax
+
+
+@jax.jit
+def f(x):
+    x.block_until_ready()  # LINT-EXPECT: JT005
+    return x

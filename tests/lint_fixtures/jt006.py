@@ -1,0 +1,9 @@
+"""Bad: Python branch on a traced value."""
+import jax
+
+
+@jax.jit
+def f(x):
+    if x > 0:  # LINT-EXPECT: JT006
+        return x
+    return -x

@@ -1,0 +1,7 @@
+"""Bad: suppression comment with no justification."""
+import jax
+
+
+@jax.jit
+def f(x):
+    return jax.device_get(x)  # repro-lint: allow[JT004]  # LINT-EXPECT: LN001

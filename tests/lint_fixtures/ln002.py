@@ -1,0 +1,7 @@
+"""Bad: justified inline allow that is not mirrored in baseline.txt."""
+import jax
+
+
+@jax.jit
+def f(x):
+    return jax.device_get(x)  # repro-lint: allow[JT004] pretend this is fine  # LINT-EXPECT: LN002

@@ -1,0 +1,9 @@
+"""Bad: key consumed raw — replay would repeat the same draw."""
+import jax
+
+LINT_REPLAY_SENSITIVE = True
+
+
+def draw(shape):
+    key = jax.random.PRNGKey(0)
+    return jax.random.normal(key, shape)  # LINT-EXPECT: PR001

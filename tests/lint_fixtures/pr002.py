@@ -1,0 +1,11 @@
+"""Bad: same key consumed twice — correlated draws."""
+import jax
+
+LINT_REPLAY_SENSITIVE = True
+
+
+def draw(step, shape):
+    key = jax.random.fold_in(jax.random.PRNGKey(0), step)
+    a = jax.random.normal(key, shape)
+    b = jax.random.uniform(key, shape)  # LINT-EXPECT: PR002
+    return a + b

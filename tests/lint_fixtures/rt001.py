@@ -1,0 +1,9 @@
+"""Bad (hazard): Python branch on a traced shape — retrace per shape."""
+import jax
+
+
+@jax.jit
+def f(x):
+    if x.shape[0] > 4:  # LINT-EXPECT: RT001
+        return x[:4]
+    return x

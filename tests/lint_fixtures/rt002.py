@@ -1,0 +1,13 @@
+"""Bad: unhashable literal at a static_argnums position."""
+import jax
+
+
+def f(x, opts):
+    return x
+
+
+g = jax.jit(f, static_argnums=(1,))
+
+
+def caller(x):
+    return g(x, [1, 2])  # LINT-EXPECT: RT002

@@ -1,0 +1,9 @@
+"""Bad: f-string of a tracer inside a jitted body."""
+import jax
+
+
+@jax.jit
+def f(x):
+    msg = f"value is {x}"  # LINT-EXPECT: RT003
+    del msg
+    return x

@@ -37,6 +37,8 @@ FLAG_SOURCES = {
     "repro.launch.dryrun":
         lambda: _source_flags("src/repro/launch/dryrun.py"),
     "benchmarks.run": lambda: _source_flags("benchmarks/run.py"),
+    "repro.analysis.lint":
+        lambda: _source_flags("src/repro/analysis/lint/__main__.py"),
 }
 
 # launchers whose module docstring (usage examples) is checked too;

@@ -1,0 +1,55 @@
+"""Smoke-run every examples/*.py on a tiny configuration.
+
+Each example runs in its own subprocess: constellation_design and
+formation_flight flip `jax_enable_x64` globally, and a fresh process is
+the only honest way to test the documented `python examples/...`
+invocation anyway. Examples that train or serve accept flags to shrink
+the workload; the assertions inside each example (loss decreased,
+controller beats free fall, all requests served) still run.
+"""
+import os
+import subprocess
+import sys
+from pathlib import Path
+
+import pytest
+
+REPO = Path(__file__).resolve().parents[1]
+EXAMPLES = REPO / "examples"
+
+# script -> (smoke args, sentinel expected on stdout)
+SMOKE = {
+    "constellation_design.py": ([], "launch economics"),
+    "formation_flight.py": (["--iters", "6", "--intervals", "8"],
+                            "OK: learned controller beats free fall"),
+    "quickstart.py": (["--steps", "30"],
+                      "OK: loss decreased under injected radiation faults"),
+    "serve_batch.py": (["--requests", "4", "--max-new", "6"],
+                       "OK: 4 requests served"),
+    "train_100m.py": (["--steps", "10", "--inner", "5"],
+                      "OK: DiLoCo training complete"),
+}
+
+
+def test_every_example_has_a_smoke_entry():
+    on_disk = {p.name for p in EXAMPLES.glob("*.py")}
+    assert on_disk == set(SMOKE), (
+        "examples/ and SMOKE table drifted; add a smoke entry for new examples"
+    )
+
+
+@pytest.mark.parametrize("script", sorted(SMOKE), ids=lambda s: s[:-3])
+def test_example_runs(script):
+    args, sentinel = SMOKE[script]
+    env = dict(os.environ)
+    env["PYTHONPATH"] = str(REPO / "src") + os.pathsep + env.get("PYTHONPATH", "")
+    proc = subprocess.run(
+        [sys.executable, str(EXAMPLES / script), *args],
+        capture_output=True,
+        text=True,
+        env=env,
+        cwd=REPO,
+        timeout=600,
+    )
+    assert proc.returncode == 0, proc.stdout[-2000:] + proc.stderr[-2000:]
+    assert sentinel in proc.stdout, proc.stdout[-2000:]

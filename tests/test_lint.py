@@ -1,0 +1,182 @@
+"""repro-lint self-tests.
+
+Three layers of guarantees:
+  1. every bad fixture in tests/lint_fixtures/ fires EXACTLY the one rule
+     its `# LINT-EXPECT: <RULE>` marker names, at that line, and the CLI
+     exits nonzero on it;
+  2. the clean fixture (near-miss patterns the real code relies on) and
+     the post-triage src/ tree both lint clean — false-positive creep and
+     baseline rot are test failures;
+  3. the budget layer fails when an entry exceeds its declared wire
+     budget — demonstrated by the hidden regression entry that
+     re-introduces the PR 5 full-f32 outer all-gather.
+"""
+import json
+import os
+import re
+import subprocess
+import sys
+from pathlib import Path
+
+import pytest
+
+from repro.analysis.lint import BASELINE_PATH, lint_paths
+from repro.analysis.lint.findings import ALLOW_RE, BASELINE_RE, load_baseline
+from repro.analysis.lint.rules import RULE_CATALOG
+from repro.analysis.hlo import host_callbacks
+
+REPO = Path(__file__).resolve().parents[1]
+FIXTURES = REPO / "tests" / "lint_fixtures"
+MARKER_RE = re.compile(r"#\s*LINT-EXPECT:\s*([A-Z]{2}\d{3})")
+
+BAD_FIXTURES = sorted(p for p in FIXTURES.glob("*.py") if p.stem != "clean")
+
+
+def _expected(path: Path) -> tuple[str, int]:
+    for i, line in enumerate(path.read_text().splitlines(), start=1):
+        m = MARKER_RE.search(line)
+        if m:
+            return m.group(1), i
+    raise AssertionError(f"{path} has no LINT-EXPECT marker")
+
+
+def _run_cli(*args: str) -> subprocess.CompletedProcess:
+    env = dict(os.environ)
+    env["PYTHONPATH"] = str(REPO / "src") + os.pathsep + env.get("PYTHONPATH", "")
+    return subprocess.run(
+        [sys.executable, "-m", "repro.analysis.lint", *args],
+        capture_output=True,
+        text=True,
+        env=env,
+        cwd=REPO,
+    )
+
+
+class TestFixtures:
+    @pytest.mark.parametrize("fixture", BAD_FIXTURES, ids=lambda p: p.stem)
+    def test_bad_fixture_fires_exactly_its_rule(self, fixture):
+        rule, line = _expected(fixture)
+        findings, _ = lint_paths([fixture])
+        assert len(findings) == 1, [f.render() for f in findings]
+        f = findings[0]
+        assert f.rule == rule
+        assert f.line == line
+        assert f.path == f"tests/lint_fixtures/{fixture.name}"
+
+    @pytest.mark.parametrize("fixture", BAD_FIXTURES, ids=lambda p: p.stem)
+    def test_cli_exits_nonzero_on_bad_fixture(self, fixture):
+        rule, line = _expected(fixture)
+        proc = _run_cli("--paths", str(fixture), "--json")
+        assert proc.returncode == 1, proc.stdout + proc.stderr
+        payload = json.loads(proc.stdout)
+        assert [(f["rule"], f["line"]) for f in payload] == [(rule, line)]
+
+    def test_clean_fixture_zero_findings(self):
+        findings, _ = lint_paths([FIXTURES / "clean.py"])
+        assert findings == [], [f.render() for f in findings]
+
+    def test_cli_exits_zero_on_clean_fixture(self):
+        proc = _run_cli("--paths", str(FIXTURES / "clean.py"))
+        assert proc.returncode == 0, proc.stdout + proc.stderr
+
+    def test_every_rule_has_a_fixture_or_budget_coverage(self):
+        covered = {_expected(p)[0] for p in BAD_FIXTURES}
+        budget_rules = {"BG001", "BG002", "BG003"}  # exercised via --budgets
+        assert covered | budget_rules == set(RULE_CATALOG)
+
+
+class TestSrcTree:
+    def test_src_lints_clean_with_baseline(self):
+        findings, suppressed = lint_paths(None)
+        assert findings == [], [f.render() for f in findings]
+        # the intentional drains are suppressed, not silently absent
+        assert suppressed > 0
+
+    def test_baseline_entries_are_well_formed(self):
+        for raw in BASELINE_PATH.read_text().splitlines():
+            line = raw.strip()
+            if not line or line.startswith("#"):
+                continue
+            m = BASELINE_RE.match(line)
+            assert m, f"malformed baseline line: {line!r}"
+            assert m.group("why"), f"baseline entry without reason: {line!r}"
+
+    def test_baseline_is_loaded(self):
+        entries = load_baseline(BASELINE_PATH)
+        assert entries, "baseline.txt parsed to zero entries"
+        for (rule, key), why in entries.items():
+            assert rule in RULE_CATALOG
+            assert "::" in key
+
+
+class TestSuppressionParsing:
+    def test_trailing_comment_is_not_a_justification(self):
+        m = ALLOW_RE.search("x = 1  # repro-lint: allow[JT004]  # other marker")
+        assert m and m.group("rule") == "JT004"
+        assert not m.group("why").strip()
+
+    def test_justification_parses(self):
+        m = ALLOW_RE.search("x = 1  # repro-lint: allow[HS001] the one drain")
+        assert m and m.group("why").strip() == "the one drain"
+
+
+class TestHostCallbacks:
+    def test_counts_callback_custom_calls(self):
+        hlo = (
+            'ENTRY %main (p0: f32[4]) -> f32[4] {\n'
+            '  %cc = f32[4]{0} custom-call(f32[4]{0} %p0), '
+            'custom_call_target="xla_ffi_python_cpu_callback"\n'
+            '  %inf = (f32[2]) infeed()\n'
+            "}\n"
+        )
+        cb = host_callbacks(hlo)
+        assert cb["count"] == 2
+        assert cb["feeds"] == 1
+        assert sum(cb["targets"].values()) == 1
+
+    def test_fused_hlo_is_clean(self):
+        hlo = "ENTRY %main {\n  %add = f32[4]{0} add(%a, %b)\n}\n"
+        assert host_callbacks(hlo)["count"] == 0
+
+
+class TestBenchSchemas:
+    """benchmarks/run.py gates BENCH_*.json key sets (exit 1 on drift)."""
+
+    def _run_mod(self):
+        if str(REPO) not in sys.path:
+            sys.path.insert(0, str(REPO))
+        import benchmarks.run as benchrun
+        return benchrun
+
+    def test_checked_in_bench_files_match_schema(self):
+        benchrun = self._run_mod()
+        assert benchrun.check_bench_schemas() == []
+
+    def test_drift_is_reported(self, tmp_path, monkeypatch):
+        benchrun = self._run_mod()
+        (tmp_path / "BENCH_serve.json").write_text(
+            json.dumps({"tokens_per_s": 1.0, "rogue_metric": 2.0})
+        )
+        (tmp_path / "BENCH_mystery.json").write_text("{}")
+        monkeypatch.setattr(benchrun, "REPO_ROOT", str(tmp_path))
+        problems = "\n".join(benchrun.check_bench_schemas())
+        assert "missing keys" in problems
+        assert "rogue_metric" in problems
+        assert "BENCH_mystery.json: no schema" in problems
+
+
+class TestBudgets:
+    """Lower-never-execute checks: compile, never run. Slowest tests here."""
+
+    def test_outer_sync_within_declared_budget(self):
+        proc = _run_cli("--budgets", "--only", "diloco-outer-sync")
+        assert proc.returncode == 0, proc.stdout + proc.stderr
+
+    def test_full_f32_outer_allgather_regression_fails_budget(self):
+        # re-introduces the PR 5 finding: an int8-"compressed" outer sync
+        # whose lowered graph all-gathers the full f32 delta. The wire
+        # budget (2x its own compressed prediction) must catch it.
+        proc = _run_cli("--budgets", "--only", "diloco-outer-sync-regression")
+        assert proc.returncode == 1, proc.stdout + proc.stderr
+        assert "BG002" in proc.stdout
+        assert "all-gather" in proc.stdout
