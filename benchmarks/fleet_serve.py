@@ -10,7 +10,11 @@ Four phases on the same smoke model and workload distribution:
      rejoins trigger background rebalancing;
   4. full-drain + chaos — the identical chaos schedule replayed against
      a plane with replication disabled (GridConfig(replicate=False), the
-     PR 5 behavior): every failover pays the full export/import drain.
+     PR 5 behavior): every failover pays the full export/import drain;
+  5. mixed-arch + chaos — transformer pods and recurrent-carry (RG-LRU)
+     pods behind ONE router (two arch groups), same strike grammar:
+     failover and replication resolve within each group, carry standbys
+     ship the whole O(1) state per sync and are always flip-ready.
 
 The headline number is the FAILOVER STALL: wall time spent inside the
 router's failover phase on ticks that moved >= 1 slot (device work
@@ -46,13 +50,14 @@ N_REQUESTS = 24
 CHAOS = "2:*:3,6:*:3,10:*:3"     # three strike/repair cycles, busiest pod
 
 
-def _requests(cfg, rng, n=N_REQUESTS):
-    return [Request(uid=i,
+def _requests(cfg, rng, n=N_REQUESTS, arch=None, uid0=0):
+    return [Request(uid=uid0 + i,
                     prompt=rng.integers(
                         0, cfg.vocab_size,
                         size=int(rng.integers(4, 40))).astype(np.int32),
                     max_new_tokens=MAX_NEW,
-                    temperature=0.0 if i % 2 == 0 else 0.8)
+                    temperature=0.0 if i % 2 == 0 else 0.8,
+                    arch=arch)
             for i in range(n)]
 
 
@@ -161,6 +166,33 @@ def run():
         drain, _requests(cfg, np.random.default_rng(4)))
     fail_d = drain.failover_stalls
 
+    # ---- phase 5: mixed-arch plane (KV + carry groups) + chaos ---------
+    rcfg = registry.get_reduced_config("recurrentgemma-2b")
+    rfns = registry.model_fns(rcfg)
+    rparams = rfns.init(jax.random.PRNGKey(0), rcfg)
+    r_engines = [ServingEngine(rcfg, rfns, rparams, ecfg)
+                 for _ in range(2)]
+    for e in r_engines:
+        _warm_engine(e, rcfg)
+    _wipe(engines)
+    mixed_engines = engines[:2] + r_engines
+
+    def _mixed_reqs(seed):
+        rng = np.random.default_rng(seed)
+        kv = _requests(cfg, rng, n=N_REQUESTS // 2, arch=cfg.name)
+        carry = _requests(rcfg, rng, n=N_REQUESTS // 2, arch=rcfg.name,
+                          uid0=1000)
+        return [r for pair in zip(kv, carry) for r in pair]
+
+    _drain(ConstellationRouter(mixed_engines,
+                               forced_outage=parse_outage_spec(CHAOS)),
+           _mixed_reqs(5))                      # warm the mixed plane
+    _wipe(mixed_engines)
+    mixed = ConstellationRouter(mixed_engines,
+                                forced_outage=parse_outage_spec(CHAOS))
+    done_m, dt_m, steps_m, _, tok_m = _drain(mixed, _mixed_reqs(5))
+    occ = mixed.plane_stats()["arch_occupancy"]
+
     # the contracts the grid exists for — checked, not just recorded
     if len(done_g) != N_REQUESTS or len(done_d) != N_REQUESTS:
         raise RuntimeError(
@@ -172,6 +204,14 @@ def run():
         raise RuntimeError("grid chaos run produced no rebalances")
     if drain.stats["migrated_slots"] < 1 or drain.stats["pointer_flips"]:
         raise RuntimeError("full-drain phase did not drain-migrate")
+    if len(done_m) != N_REQUESTS or mixed.dropped:
+        raise RuntimeError(
+            f"mixed-arch chaos dropped requests: {len(done_m)}/"
+            f"{N_REQUESTS}")
+    if mixed.stats["pointer_flips"] < 1:
+        raise RuntimeError("mixed-arch chaos run produced no pointer flips")
+    if set(occ) != {cfg.name, rcfg.name}:
+        raise RuntimeError(f"mixed plane lost an arch group: {set(occ)}")
 
     g50, g99 = _p(fail_g, 50), _p(fail_g, 99)
     d50, d99 = _p(fail_d, 50), _p(fail_d, 99)
@@ -213,6 +253,16 @@ def run():
         "masked_pod_ticks": grid.stats["masked_pod_ticks"],
         "zero_drops_under_chaos": True,
         "traces": grid.trace_count(),
+        # mixed-arch phase: two DecodeState families behind one router
+        "mixed_archs": "+".join(sorted(occ)),
+        "mixed_chaos_tokens_per_s": round(tok_m / dt_m, 1),
+        "mixed_p50_step_ms": round(_p(steps_m, 50), 2),
+        "mixed_pointer_flips": mixed.stats["pointer_flips"],
+        "mixed_full_migrations": mixed.stats["full_migrations"],
+        "mixed_replicated_rows": mixed.stats["replicated_rows"],
+        "mixed_full_rows_equiv": mixed.stats["full_rows_equiv"],
+        "mixed_arch_occupancy": occ,
+        "mixed_zero_drops_under_chaos": True,
     }
     with open(os.path.join(os.path.dirname(__file__), "..",
                            "BENCH_fleet.json"), "w") as f:
@@ -238,6 +288,11 @@ def run():
          f"same chaos, replication off: {drain.stats['migrated_slots']} "
          f"slots full-drained, failover stall p50 {d50:.1f} ms (grid = "
          f"{extras['failover_p50_impact_vs_full_drain']}x of this)"),
+        ("fleet_mixed_arch_chaos", dt_m * 1e6,
+         f"{extras['mixed_archs']} on one router, chaos '{CHAOS}': zero "
+         f"drops, {mixed.stats['pointer_flips']} pointer flips + "
+         f"{mixed.stats['full_migrations']} full drains, "
+         f"{tok_m / dt_m:.0f} tok/s"),
     ]
     return out, extras
 

@@ -49,6 +49,10 @@ BENCH_SCHEMAS = {
         "failover_p50_impact_vs_full_drain", "grid_replicated_rows",
         "grid_full_rows_equiv", "replication_savings_ratio",
         "masked_pod_ticks", "zero_drops_under_chaos", "traces",
+        "mixed_archs", "mixed_chaos_tokens_per_s", "mixed_p50_step_ms",
+        "mixed_pointer_flips", "mixed_full_migrations",
+        "mixed_replicated_rows", "mixed_full_rows_equiv",
+        "mixed_arch_occupancy", "mixed_zero_drops_under_chaos",
     }),
 }
 

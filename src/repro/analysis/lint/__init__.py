@@ -25,8 +25,10 @@ from .rules import (
     check_hot,
     check_jit_callsites,
     check_prng,
+    check_state_layout,
     check_traced,
     replay_sensitive,
+    state_scoped,
 )
 
 REPO_ROOT = Path(__file__).resolve().parents[4]
@@ -94,6 +96,8 @@ def lint_paths(
                 raw.extend(check_hot(mod, fn))
             if replay_sensitive(mod):
                 raw.extend(check_prng(mod, fn))
+            if state_scoped(mod):
+                raw.extend(check_state_layout(mod, fn))
             raw.extend(check_jit_callsites(proj, mod, fn))
 
     baseline = load_baseline(BASELINE_PATH) if use_baseline else {}

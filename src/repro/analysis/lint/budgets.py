@@ -200,10 +200,14 @@ def _run_engine(spec: BudgetSpec) -> list[Finding]:
     spec.max_host_callbacks = LINT_BUDGET["host_callbacks"]
     spec.max_traces = LINT_BUDGET["max_traces"]
     arch = spec.params.get("arch", "suncatcher-lm-100m")
-    cfg = registry.get_reduced_config(
-        arch, n_layers=2, d_model=32, n_heads=2, n_kv_heads=1, d_ff=64,
-        vocab_size=256,
+    # reduced-config shrink is per-family (the transformer dims below
+    # would degenerate a 1:2-pattern RG-LRU stack); entries override it
+    overrides = spec.params.get(
+        "overrides",
+        dict(n_layers=2, d_model=32, n_heads=2, n_kv_heads=1, d_ff=64,
+             vocab_size=256),
     )
+    cfg = registry.get_reduced_config(arch, **overrides)
     fns = registry.model_fns(cfg)
     params = fns.init(jax.random.PRNGKey(0), cfg)
     ecfg = EngineConfig(max_batch=2, max_len=64)
@@ -262,10 +266,33 @@ def _run_engine(spec: BudgetSpec) -> list[Finding]:
         .compile()
         .as_text()
     )
+    # ... and the replication jits (delta gather + standby scatter) it
+    # drives every sync tick — generic DecodeState tree ops, so both the
+    # KV entry and the carry entry must lower callback-free
+    starts = jnp.zeros((nb,), jnp.int32)
+    width = ecfg.max_len
+    delta_hlo = (
+        eng._delta_export.lower(eng.cache, eng.state, b_idx, starts, width)
+        .compile()
+        .as_text()
+    )
+    bcache, bstate = jax.eval_shape(
+        lambda c, s, i, st: eng._delta_export_impl(c, s, i, st, width),
+        eng.cache, eng.state, b_idx, starts,
+    )
+    standby_hlo = (
+        eng._standby_apply.lower(
+            eng.cache, eng.state, bcache, bstate, b_idx, starts, b_mask
+        )
+        .compile()
+        .as_text()
+    )
     saved = spec.max_host_callbacks
     spec.max_host_callbacks = ROUTER_BUDGET["host_callbacks"]
     findings += _check_callbacks(spec, export_hlo, "slot export (migration)")
     findings += _check_callbacks(spec, import_hlo, "slot import (migration)")
+    findings += _check_callbacks(spec, delta_hlo, "delta export (replication)")
+    findings += _check_callbacks(spec, standby_hlo, "standby apply (replication)")
     spec.max_host_callbacks = saved
 
     if spec.max_traces is not None and lowerings > spec.max_traces:
@@ -330,6 +357,16 @@ BUDGETS: dict[str, BudgetSpec] = {
             runner=_run_engine,
             max_host_callbacks=0,
             max_traces=4,  # 3 pow2 prefill buckets (16/32/64) + 1 decode block
+        ),
+        BudgetSpec(
+            name="engine-serve-rglru",
+            runner=_run_engine,
+            max_host_callbacks=0,
+            max_traces=4,
+            # a CARRY family through the same serving/replication jits:
+            # the reduced recurrentgemma config as-is (its 1:2 recurrent/
+            # attention pattern needs the full 5-layer stack)
+            params={"arch": "recurrentgemma-2b", "overrides": {}},
         ),
         BudgetSpec(
             name="publish-snapshot",

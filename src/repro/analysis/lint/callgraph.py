@@ -86,6 +86,7 @@ class ModuleInfo:
         self.jit_wrappers: list[JitWrapper] = []
         self.lint_hot_entry_points: tuple[str, ...] = ()
         self.lint_replay_sensitive = False
+        self.lint_state_scoped = False
         self._index()
 
     # -- indexing -----------------------------------------------------
@@ -104,6 +105,9 @@ class ModuleInfo:
                 if isinstance(t, ast.Name) and t.id == "LINT_REPLAY_SENSITIVE":
                     if isinstance(node.value, ast.Constant):
                         self.lint_replay_sensitive = bool(node.value.value)
+                if isinstance(t, ast.Name) and t.id == "LINT_STATE_SCOPED":
+                    if isinstance(node.value, ast.Constant):
+                        self.lint_state_scoped = bool(node.value.value)
 
     def _walk_scope(self, body: list[ast.stmt], prefix: str) -> None:
         for node in body:

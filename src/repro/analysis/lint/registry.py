@@ -16,11 +16,17 @@ repo-specific lives here:
 * ``REPLAY_SENSITIVE_MODULES`` — modules whose randomness must be a pure
   function of (seed, round/tick/request id) so chaos replay stays
   bit-exact.  PRNG rules (PR001/PR002) only fire inside these.
+* ``STATE_SCOPED_MODULES`` — serving-plane modules that must stay
+  family-agnostic: decode state is an abstract pytree there
+  (models/decode_state.py owns the layouts), so subscripting a
+  family-layout key like ``["k"]`` or ``["rec_a"]`` (DS001) would
+  silently re-couple the plane to one architecture.
 
 Fixture escape hatch: a module under lint may declare its own
-``LINT_HOT_ENTRY_POINTS = ["fn", ...]`` or ``LINT_REPLAY_SENSITIVE = True``
-as a module-level literal; the linter reads those from the AST so test
-fixtures can exercise hot-scope and PRNG rules without being imported.
+``LINT_HOT_ENTRY_POINTS = ["fn", ...]``, ``LINT_REPLAY_SENSITIVE = True``
+or ``LINT_STATE_SCOPED = True`` as a module-level literal; the linter
+reads those from the AST so test fixtures can exercise hot-scope, PRNG
+and state-layout rules without being imported.
 """
 
 from __future__ import annotations
@@ -43,11 +49,12 @@ HOT_ENTRY_POINTS: dict[str, tuple[str, ...]] = {
 JIT_ENTRY_POINTS: dict[str, tuple[str, ...]] = {
     "repro.serving.engine": (
         "ServingEngine._prefill_impl",
-        "ServingEngine._decode_block_impl",
+        "ServingEngine._engine_step_impl",
         "ServingEngine._export_impl",
         "ServingEngine._import_impl",
         "ServingEngine._delta_export_impl",
-        "ServingEngine._delta_apply_impl",
+        "ServingEngine._standby_apply_impl",
+        "ServingEngine._deactivate_impl",
     ),
     "repro.train.diloco": ("make_diloco_round.round_fn", "outer_step"),
 }
@@ -59,6 +66,23 @@ REPLAY_SENSITIVE_MODULES: tuple[str, ...] = (
     "repro.train.diloco",
     "repro.serving.engine",
     "repro.serving.router",
+)
+
+# Serving-plane modules written against the DecodeState protocol: decode
+# state there is an opaque pytree manipulated through the generic tree
+# ops (models/decode_state.py), plus the protocol-level "pos" row and the
+# engine's own sampler keys.  Subscripting a family-layout key (DS001)
+# re-couples the plane to one architecture's cache layout.
+STATE_SCOPED_MODULES: tuple[str, ...] = (
+    "repro.serving.engine",
+    "repro.serving.router",
+)
+
+# Family-private decode-state leaf names (the transformer KV cache, the
+# RG-LRU carry + local-attention ring, the xLSTM memories).  Only
+# models/decode_state.py and the model modules may address these.
+STATE_LAYOUT_KEYS: frozenset[str] = frozenset(
+    {"k", "v", "rec_a", "rec_b", "attn", "tail", "slstm", "mlstm"}
 )
 
 # Names that consume randomness from a key.  A raw (never-folded) key

@@ -27,6 +27,10 @@ Replay-sensitive modules:
          (includes np.random.default_rng with a pure-constant seed)
   PR002  same key consumed twice without reassignment
 
+State-scoped modules (the serving plane; DecodeState protocol):
+  DS001  family-layout decode-state key subscripted outside the family
+         boundary — the plane must stay an abstract-pytree consumer
+
 Meta:
   LN001  suppression comment without justification
   LN002  inline allow not mirrored in baseline.txt (or stale baseline entry)
@@ -39,7 +43,8 @@ import re
 
 from .callgraph import FuncInfo, ModuleInfo, Project, dotted
 from .findings import Finding
-from .registry import KEY_CONSUMERS, REPLAY_SENSITIVE_MODULES
+from .registry import (KEY_CONSUMERS, REPLAY_SENSITIVE_MODULES,
+                       STATE_LAYOUT_KEYS, STATE_SCOPED_MODULES)
 
 RULE_CATALOG: dict[str, str] = {
     "JT001": ".item() on a traced value inside jitted code",
@@ -57,6 +62,7 @@ RULE_CATALOG: dict[str, str] = {
     "HS003": ".item() in a host hot loop",
     "PR001": "PRNG key consumed without fold_in on a replay id",
     "PR002": "PRNG key consumed twice",
+    "DS001": "family-layout decode-state access in a state-scoped module",
     "BG001": "host-callback budget exceeded for a jitted entry point",
     "BG002": "pod-axis collective-byte budget exceeded",
     "BG003": "trace-count budget exceeded",
@@ -594,3 +600,40 @@ def check_jit_callsites(proj: Project, mod: ModuleInfo, fn: FuncInfo) -> list[Fi
 
 def replay_sensitive(mod: ModuleInfo) -> bool:
     return mod.name in REPLAY_SENSITIVE_MODULES or mod.lint_replay_sensitive
+
+
+# -- DecodeState layout discipline ------------------------------------
+
+
+def state_scoped(mod: ModuleInfo) -> bool:
+    return mod.name in STATE_SCOPED_MODULES or mod.lint_state_scoped
+
+
+def check_state_layout(mod: ModuleInfo, fn: FuncInfo) -> list[Finding]:
+    """DS001: a state-scoped module (the serving plane) subscripted a
+    family-private decode-state leaf like ``state["k"]`` or
+    ``cache["rec_a"]``.  The plane must manipulate decode state only
+    through the DecodeState spec and the generic tree ops
+    (models/decode_state.py); the protocol-level per-row ``"pos"`` and
+    the engine's own sampler keys are fine."""
+    findings: list[Finding] = []
+    rel = mod.source.relpath
+    for node in _own_nodes(fn.node):
+        if not isinstance(node, ast.Subscript):
+            continue
+        sl = node.slice
+        if isinstance(sl, ast.Constant) and isinstance(sl.value, str) \
+                and sl.value in STATE_LAYOUT_KEYS:
+            findings.append(
+                Finding(
+                    "DS001",
+                    rel,
+                    node.lineno,
+                    fn.qualname,
+                    f'family-layout key ["{sl.value}"] addressed in a '
+                    f"state-scoped module",
+                    "go through the DecodeState spec / generic tree ops; "
+                    "layout keys belong to models/decode_state.py",
+                )
+            )
+    return findings

@@ -158,7 +158,8 @@ def main():
     cfg = registry.get_reduced_config(args.arch)
     if registry.input_kind(args.arch) != "tokens":
         raise SystemExit("coserve supports token-LM archs (the serving "
-                         "half needs a KV-cache model)")
+                         "half decodes token streams; any DecodeState "
+                         "family — KV or recurrent carry — works)")
     fns = registry.model_fns(cfg)
     dcfg = DiLoCoConfig(n_pods=args.diloco_pods,
                         inner_steps=args.inner_steps)

@@ -31,6 +31,17 @@ cache hits by wave 2):
   PYTHONPATH=src python -m repro.launch.serve --replicas 2 \
       --serving-constellation --requests 8
 
+--arch also takes a comma-separated list for a HETEROGENEOUS plane:
+`--replicas N` then builds N pods PER ARCH GROUP (N >= 2 keeps same-arch
+standby flips available inside every group), requests round-robin over
+the groups, and the same chaos/zero-drop/flat-trace contracts apply to
+the mixed plane:
+
+  PYTHONPATH=src python -m repro.launch.serve \
+      --arch suncatcher-lm-100m,recurrentgemma-2b --replicas 2 \
+      --requests 8 --max-len 64 --force-outage-at "2:*:3" \
+      --expect-pointer-flip
+
 For serving WHILE training (hot-swapped DiLoCo outer params), see
 repro.launch.coserve.
 """
@@ -50,7 +61,8 @@ from repro.serving import (ConstellationRouter, EngineConfig, GridConfig,
 def build_parser():
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="suncatcher-lm-100m",
-                    choices=registry.ARCH_IDS)
+                    help="arch id, or a comma-separated list for a "
+                         "heterogeneous plane (--replicas pods per arch)")
     ap.add_argument("--requests", type=int, default=8)
     ap.add_argument("--max-new-tokens", type=int, default=16)
     ap.add_argument("--slots", type=int, default=4,
@@ -97,17 +109,19 @@ def build_parser():
     return ap
 
 
-def build_plane(cfg, fns, params, args):
-    """N engine replicas behind a ConstellationRouter (the serving grid)."""
+def build_plane(builds, args):
+    """Engine replicas behind a ConstellationRouter: `args.replicas` pods
+    per (cfg, fns, params) build — one arch group each."""
     ecfg = EngineConfig(max_batch=args.slots, max_len=args.max_len,
                         decode_block=args.decode_block)
     engines = [ServingEngine(cfg, fns, params, ecfg)
+               for cfg, fns, params in builds
                for _ in range(args.replicas)]
     mask_fn = None
     if args.serving_constellation:
         from repro.core.isl import ConstellationLinkModel, LivenessConfig
         mask_fn = liveness_mask_fn(ConstellationLinkModel(
-            cfg=LivenessConfig(n_pods=args.replicas)))
+            cfg=LivenessConfig(n_pods=len(engines))))
     forced = (parse_outage_spec(args.force_outage_at)
               if args.force_outage_at is not None else None)
     grid = GridConfig(replicate=not args.full_drain,
@@ -121,29 +135,47 @@ def main():
     args = build_parser().parse_args()
     if args.force_outage_at is not None and args.replicas < 2:
         raise SystemExit("--force-outage-at needs --replicas >= 2 (a "
-                         "one-pod plane has nowhere to migrate)")
+                         "one-pod group has nowhere to migrate)")
 
-    cfg = (registry.get_config(args.arch) if args.full
-           else registry.get_reduced_config(args.arch))
-    if registry.input_kind(args.arch) != "tokens":
-        raise SystemExit("serve CLI demo supports token-LM archs")
-    fns = registry.model_fns(cfg)
-    params = fns.init(jax.random.PRNGKey(0), cfg)
-    if args.replicas > 1 or args.serving_constellation:
-        eng = build_plane(cfg, fns, params, args)
+    archs = [a.strip() for a in args.arch.split(",") if a.strip()]
+    for a in archs:
+        if a not in registry.ARCH_IDS:
+            raise SystemExit(f"unknown --arch {a!r}; known: "
+                             f"{registry.ARCH_IDS}")
+        if registry.input_kind(a) != "tokens":
+            raise SystemExit("serve CLI demo supports token-LM archs")
+    mixed = len(archs) > 1
+    if mixed and args.replicas < 2:
+        raise SystemExit("a mixed --arch plane needs --replicas >= 2: "
+                         "standbys and failover stay inside an arch "
+                         "group, so every group needs a second pod")
+    builds = []
+    for a in archs:
+        cfg = (registry.get_config(a) if args.full
+               else registry.get_reduced_config(a))
+        fns = registry.model_fns(cfg)
+        params = fns.init(jax.random.PRNGKey(0), cfg)
+        builds.append((cfg, fns, params))
+    cfg, fns, params = builds[0]
+    if mixed or args.replicas > 1 or args.serving_constellation:
+        eng = build_plane(builds, args)
     else:
         eng = ServingEngine(cfg, fns, params,
                             EngineConfig(max_batch=args.slots,
                                          max_len=args.max_len,
                                          decode_block=args.decode_block))
     rng = np.random.default_rng(0)
-    reqs = [Request(uid=uid,
-                    prompt=rng.integers(
-                        0, cfg.vocab_size,
-                        size=int(rng.integers(4, 16))).astype(np.int32),
-                    max_new_tokens=args.max_new_tokens,
-                    temperature=args.temperature)
-            for uid in range(args.requests)]
+    reqs = []
+    for uid in range(args.requests):
+        rcfg = builds[uid % len(builds)][0]
+        reqs.append(Request(
+            uid=uid,
+            prompt=rng.integers(
+                0, rcfg.vocab_size,
+                size=int(rng.integers(4, 16))).astype(np.int32),
+            max_new_tokens=args.max_new_tokens,
+            temperature=args.temperature,
+            arch=rcfg.name if mixed else None))
     waves = max(1, args.waves)
     per_wave = -(-len(reqs) // waves)
     t0 = time.time()
@@ -161,7 +193,8 @@ def main():
     if isinstance(eng, ConstellationRouter):
         s = eng.plane_stats()
         tok = s["engines"]["tokens"]
-        print(f"{cfg.name}: grid of {args.replicas} replicas x "
+        label = "+".join(c.name for c, _, _ in builds)
+        print(f"{label}: grid of {eng.n_pods} pods x "
               f"{args.slots} slots served {len(done)} requests | "
               f"{tok / dt:.0f} tok/s | {s['pointer_flips']} pointer "
               f"flips + {s['full_migrations']} full drains "
@@ -174,6 +207,10 @@ def main():
               f"admitted/pod {s['admitted_per_pod']} "
               f"(home {s['admitted_home']}/spill {s['admitted_spill']}) | "
               f"{eng.trace_count()} traces")
+        if mixed:
+            for name, occ in s["arch_occupancy"].items():
+                print(f"  group {name} [{occ['state_kind']}]: "
+                      f"{occ['pods']} pods / {occ['slots']} slots")
         if args.force_outage_at is not None:
             check_forced_outage_contract(
                 eng, done, args.requests,

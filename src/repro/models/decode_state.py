@@ -1,0 +1,277 @@
+"""DecodeState: one per-slot decode-state abstraction for every model family.
+
+The serving engine keeps a fixed pool of `max_batch` decode slots whose
+per-slot model state used to be hard-coded to the transformer KV layout
+(cache["k"]/["v"]/["pos"]).  This module is the family boundary: each
+architecture implements one spec describing
+
+  * how to allocate the state       (`init_state`)   — per-row "pos" (B,)
+  * how to advance it one token     (`decode`)       — per-row positions
+  * how to prefill a ragged bucket  (`prefill`)      — admit-masked merge
+  * how inactive rows hold          (`freeze`)
+  * where the slot axis lives       (`batch_axes`)   — pytree of ints
+  * which leaves grow with seq len  (`length_axes`)  — pytree of ints,
+                                                       -1 = O(1) carry leaf
+
+and the engine's migration machinery (export/import, delta replication,
+standby promote, clear) becomes four generic tree operations over those
+axis declarations: `state_rows`, `merge_rows`, `delta_since`,
+`delta_apply`.  A `state_kind` tag ("kv" | "carry" | "kv+experts") plus
+the derived `windowed` flag tell the router what the replication cursor
+means: windowed KV states ship `width`-row cache deltas, carry states
+ship the whole O(1) state every sync (cursor jumps straight to pos).
+
+Everything here is shape-polymorphic but trace-static: index vectors are
+full-width (max_batch,) and the delta window width is a static argument,
+so repeated migrations/syncs of any size are jit cache hits on every
+family (`trace_count()` flat — same proof obligation as the KV plane).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from . import rglru as _rglru
+from . import transformer as _transformer
+from . import xlstm as _xlstm
+from .rglru import RGLRUConfig
+from .transformer import TransformerConfig
+from .xlstm import XLSTMConfig
+
+# The generic gather/scatters below are the bodies of the engine's jitted
+# export/import/delta/standby roots; `python -m repro.analysis.lint
+# --budgets` (entries "engine-serve" / "engine-serve-rglru") asserts they
+# lower with zero host callbacks for both a KV and a carry family.
+LINT_BUDGET = {"host_callbacks": 0}
+
+
+def _bcast(vec, ndim, ax):
+    """Reshape a (B,) vector to broadcast against a leaf with slot axis
+    `ax`."""
+    shape = [1] * ndim
+    shape[ax] = vec.shape[0]
+    return vec.reshape(shape)
+
+
+def admit_merge(state, fresh, axes, admit):
+    """Overwrite `admit`-masked slot rows of `state` with `fresh` rows."""
+    return jax.tree.map(
+        lambda o, n, ax: jnp.where(_bcast(admit, o.ndim, ax), n, o),
+        state, fresh, axes)
+
+
+def state_rows(state, axes, idx):
+    """Gather slot rows `idx` from every leaf into fresh buffers.
+
+    Full-width (`idx` is (max_batch,)): one trace covers every export
+    size, so repeated migrations are jit cache hits."""
+    return jax.tree.map(lambda x, ax: jnp.take(x, idx, axis=ax), state, axes)
+
+
+def merge_rows(state, bundle, axes, src_for_dst, mask):
+    """Scatter bundle rows into `mask`-ed slots: row d takes bundle row
+    `src_for_dst[d]`; unmasked rows are untouched, so resident
+    generations cannot be perturbed by an import."""
+    def leaf(old, b, ax):
+        g = jnp.take(b, src_for_dst, axis=ax)
+        return jnp.where(_bcast(mask, old.ndim, ax), g, old)
+    return jax.tree.map(leaf, state, bundle, axes)
+
+
+def delta_since(state, axes, laxes, idx, starts, width):
+    """Gather rows `idx`, windowed to [starts, starts + width) along each
+    leaf's length axis.  Leaves with laxis < 0 (recurrent carries, ring
+    buffers, pos) ship whole — they are O(1)/O(window) in sequence
+    length, which is the point of the carry families."""
+    def leaf(x, ax, lax_):
+        g = jnp.take(x, idx, axis=ax)
+        if lax_ < 0:
+            return g
+        assert ax < lax_, "slot axis must precede the length axis"
+        cols = starts[:, None] + jnp.arange(width)              # (B, W)
+        colc = jnp.clip(cols, 0, g.shape[lax_] - 1)
+        shape = [1] * g.ndim
+        shape[ax], shape[lax_] = colc.shape
+        return jnp.take_along_axis(g, colc.reshape(shape), axis=lax_)
+    return jax.tree.map(leaf, state, axes, laxes)
+
+
+def delta_apply(state, bundle, axes, laxes, src_for_dst, starts, mask):
+    """Scatter a `delta_since` bundle into `mask`-ed standby rows: row r
+    takes bundle row `src_for_dst[r]` — windowed leaves at
+    [starts[r], starts[r] + W) clipped to the rows the source actually
+    wrote (its pos), carry leaves whole.  The standby "pos" becomes the
+    replication cursor: min(starts + W, source pos) when any leaf is
+    windowed, the source pos itself otherwise (whole state shipped, so
+    the standby is promotable after every sync)."""
+    pos = jnp.take(bundle["pos"], src_for_dst)
+    rest = lambda t: {k: v for k, v in t.items() if k != "pos"}
+    widths = [b.shape[l] for b, l in
+              zip(jax.tree.leaves(rest(bundle)), jax.tree.leaves(rest(laxes)))
+              if l >= 0]
+
+    def leaf(old, b, ax, lax_):
+        g = jnp.take(b, src_for_dst, axis=ax)
+        if lax_ < 0:
+            return jnp.where(_bcast(mask, old.ndim, ax), g, old)
+        W = b.shape[lax_]
+        M = old.shape[lax_]
+        pend = jnp.clip(pos - starts, 0, W)                     # rows to copy
+        rel = jnp.arange(M)[None, :] - starts[:, None]          # (B, M)
+        in_win = (rel >= 0) & (rel < pend[:, None]) & mask[:, None]
+        shape = [1] * old.ndim
+        shape[ax], shape[lax_] = rel.shape
+        relc = jnp.clip(rel, 0, W - 1).reshape(shape)
+        return jnp.where(in_win.reshape(shape),
+                         jnp.take_along_axis(g, relc, axis=lax_), old)
+
+    out = jax.tree.map(leaf, rest(state), rest(bundle), rest(axes),
+                       rest(laxes))
+    cursor = jnp.minimum(starts + widths[0], pos) if widths else pos
+    out["pos"] = jnp.where(mask, cursor, state["pos"])
+    return out
+
+
+# --------------------------------------------------------------------------
+# family specs
+# --------------------------------------------------------------------------
+class DecodeStateSpec:
+    """Base: carry-family defaults; shared derived properties."""
+
+    state_kind = "carry"
+
+    def __init__(self, cfg):
+        self.cfg = cfg
+
+    @property
+    def windowed(self) -> bool:
+        """True when any leaf grows with sequence length (KV families) —
+        the router then replicates in `width`-row deltas and tracks a
+        cursor; carry planes sync whole-state and are fresh every sync."""
+        return any(l >= 0 for l in jax.tree.leaves(self.length_axes()))
+
+    def freeze(self, new, old, active):
+        """Hold inactive rows across a decode sub-step.  Recurrent
+        carries advance in place every sub-step, so inactive rows must
+        hold their whole tree — bit-stable rows are what keep exports
+        and standby syncs of neighbours deterministic."""
+        return jax.tree.map(
+            lambda n, o, ax: jnp.where(_bcast(active, n.ndim, ax), n, o),
+            new, old, self.batch_axes())
+
+
+class TransformerDecodeState(DecodeStateSpec):
+    """KV family: (L, B, M, Hkv, dh) cache rows + per-row pos.  Covers the
+    dense, MoE ("kv+experts": expert-sharded FFN via models/moe.py — the
+    decode state itself is still per-slot KV rows), VLM and audio configs.
+    """
+
+    def __init__(self, cfg: TransformerConfig):
+        super().__init__(cfg)
+        self.state_kind = "kv+experts" if cfg.is_moe else "kv"
+
+    def init_state(self, batch, max_len, dtype=None):
+        st = _transformer.init_cache(self.cfg, batch, max_len, dtype)
+        st["pos"] = jnp.zeros((batch,), jnp.int32)
+        return st
+
+    def batch_axes(self):
+        return {"k": 1, "v": 1, "pos": 0}
+
+    def length_axes(self):
+        return {"k": 2, "v": 2, "pos": -1}
+
+    def decode(self, params, state, last):
+        return _transformer.decode_step(params, state, last, self.cfg)
+
+    def prefill(self, params, state, tokens, lens, admit):
+        cfg = self.cfg
+        b, lb = tokens.shape
+        tmp = self.init_state(b, lb)
+        logits, tmp = _transformer.decode_step(
+            params, tmp, tokens, cfg, last_idx=jnp.maximum(lens - 1, 0))
+        # merge admitted rows' fresh cache prefix into the shared cache
+        w = tmp["k"].shape[2]                  # bucket len, block-aligned
+        adm5 = admit[None, :, None, None, None]
+        new = dict(state)
+        for nm in ("k", "v"):
+            new[nm] = state[nm].at[:, :, :w].set(
+                jnp.where(adm5, tmp[nm][:, :, :w], state[nm][:, :, :w]))
+        new["pos"] = jnp.where(admit, lens, state["pos"])
+        return logits, new
+
+    def freeze(self, new, old, active):
+        # KV rows of inactive slots only ever write into the masked tail
+        # (pos is held), so only pos needs the select — the full-tree
+        # where the carry families pay is skipped on the KV hot path.
+        return {**new, "pos": jnp.where(active, new["pos"], old["pos"])}
+
+
+class RGLRUDecodeState(DecodeStateSpec):
+    """Griffin/RecurrentGemma carry: per-layer (h, conv) RG-LRU states
+    plus an O(window) local-attention ring.  The ring has a length axis of
+    fixed size `window`, but its slots are position-modular, not
+    cursor-contiguous — it ships whole (laxis = -1), which is O(window),
+    not O(seq): still the sub-quadratic migration story."""
+
+    def init_state(self, batch, max_len, dtype=None):
+        st = _rglru.init_cache(self.cfg, batch, max_len, dtype)
+        st["pos"] = jnp.zeros((batch,), jnp.int32)
+        return st
+
+    def batch_axes(self):
+        ax = {"rec_a": (1, 1), "rec_b": (1, 1), "attn": (1, 1), "pos": 0}
+        if self.cfg.n_tail_rec:
+            ax["tail"] = (1, 1)
+        return ax
+
+    def length_axes(self):
+        return jax.tree.map(lambda _: -1, self.batch_axes())
+
+    def decode(self, params, state, last):
+        return _rglru.decode_step(params, state, last, self.cfg)
+
+    def prefill(self, params, state, tokens, lens, admit):
+        logits, fresh = _rglru.prefill_cells(params, tokens, lens, self.cfg)
+        return logits, admit_merge(state, fresh, self.batch_axes(), admit)
+
+
+class XLSTMDecodeState(DecodeStateSpec):
+    """xLSTM carry: sLSTM (c, n, m, h) scalar memories + mLSTM matrix
+    memory (C, n, m) per pair — all O(1) in sequence length."""
+
+    def init_state(self, batch, max_len, dtype=None):
+        st = _xlstm.init_cache(self.cfg, batch, max_len, dtype)
+        st["pos"] = jnp.zeros((batch,), jnp.int32)
+        return st
+
+    def batch_axes(self):
+        return {"slstm": (1, 1, 1, 1), "mlstm": (1, 1, 1), "pos": 0}
+
+    def length_axes(self):
+        return jax.tree.map(lambda _: -1, self.batch_axes())
+
+    def decode(self, params, state, last):
+        return _xlstm.decode_step(params, state, last, self.cfg)
+
+    def prefill(self, params, state, tokens, lens, admit):
+        logits, fresh = _xlstm.prefill_cells(params, tokens, lens, self.cfg)
+        return logits, admit_merge(state, fresh, self.batch_axes(), admit)
+
+
+_FAMILIES = {
+    TransformerConfig: TransformerDecodeState,
+    RGLRUConfig: RGLRUDecodeState,
+    XLSTMConfig: XLSTMDecodeState,
+}
+
+
+def decode_spec(cfg) -> DecodeStateSpec:
+    """Config dataclass -> its family's DecodeState spec."""
+    for klass, spec in _FAMILIES.items():
+        if isinstance(cfg, klass):
+            return spec(cfg)
+    raise KeyError(
+        f"no decode-state family registered for config type "
+        f"{type(cfg).__name__}; registered families: "
+        f"{sorted(k.__name__ for k in _FAMILIES)}")

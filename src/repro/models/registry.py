@@ -37,19 +37,36 @@ SHAPES = {
 SUBQUADRATIC = {"xlstm-350m", "recurrentgemma-2b"}
 
 
+# config dataclass -> model module; dispatch is isinstance-based so MoE /
+# VLM / audio configs (all TransformerConfig) share the transformer module
+_FAMILIES = {
+    XLSTMConfig: "repro.models.xlstm",
+    RGLRUConfig: "repro.models.rglru",
+    TransformerConfig: "repro.models.transformer",
+}
+
+
 def model_fns(cfg) -> SimpleNamespace:
-    """Dispatch config dataclass -> its model module's uniform interface."""
-    if isinstance(cfg, XLSTMConfig):
-        mod = importlib.import_module("repro.models.xlstm")
-    elif isinstance(cfg, RGLRUConfig):
-        mod = importlib.import_module("repro.models.rglru")
-    elif isinstance(cfg, TransformerConfig):
-        mod = importlib.import_module("repro.models.transformer")
+    """Dispatch config dataclass -> its model module's uniform interface.
+
+    Every family exposes: init / forward / loss_fn, the serving pair
+    init_cache(cfg, batch, max_len, dtype=None) / decode_step, and
+    decode_spec (models/decode_state.py) — the per-slot DecodeState spec
+    the serving engine and migration plane are written against."""
+    for klass, modname in _FAMILIES.items():
+        if isinstance(cfg, klass):
+            mod = importlib.import_module(modname)
+            break
     else:
-        raise TypeError(f"unknown config type {type(cfg)}")
+        raise KeyError(
+            f"no model family registered for config type "
+            f"{type(cfg).__name__}; registered families: "
+            f"{sorted(k.__name__ for k in _FAMILIES)}")
+    from repro.models.decode_state import decode_spec
     return SimpleNamespace(init=mod.init_params, forward=mod.forward,
                            loss_fn=mod.loss_fn, init_cache=mod.init_cache,
-                           decode_step=mod.decode_step)
+                           decode_step=mod.decode_step,
+                           decode_spec=decode_spec)
 
 
 def get_config(arch: str, **overrides):

@@ -148,8 +148,12 @@ def rg_lru_scan(x_in, log_a):
     return h
 
 
-def _rec_block(cfg, x, lp, state=None):
-    """Griffin recurrent block. state: (h (B,D), conv_buf (B,w-1,D))."""
+def _rec_block(cfg, x, lp, state=None, lens=None):
+    """Griffin recurrent block. state: (h (B,D), conv_buf (B,w-1,D)).
+
+    `lens` (B,) enables ragged-prefill state extraction: the returned
+    state is each row's carry at its own prompt tail (position lens-1),
+    not at the bucket tail — pad positions never leak into the carry."""
     b, s, d = x.shape
     xn = rms_norm(x, lp["norm"])
     # channel-sharded ("model") temporal mixing: the RG-LRU is elementwise
@@ -193,13 +197,30 @@ def _rec_block(cfg, x, lp, state=None):
     x = x + out
     h2 = rms_norm(x, lp["mlp_norm"])
     x = x + geglu(h2, lp["wi_gate"], lp["wi_up"], lp["wo_mlp"])
-    return x, (new_state if state is not None else
-               (h[:, -1].astype(jnp.float32) if h.ndim == 3 else h,
-                jnp.concatenate([pad, branch], 1)[:, -(cw - 1):]))
+    if state is not None:
+        ret_state = new_state
+    elif lens is not None:
+        # ragged extraction: h at each row's lens-1 (the scan is causal,
+        # so pad positions past lens-1 cannot have touched it), conv
+        # buffer = branch values at lens-cw+1 .. lens-1, zero-padded
+        last = jnp.maximum(lens - 1, 0)
+        h_last = jnp.take_along_axis(h, last[:, None, None], axis=1)[:, 0]
+        pidx = last[:, None] + (jnp.arange(cw - 1) - (cw - 2))[None]
+        pc = jnp.clip(pidx, 0, s - 1)
+        tail = jnp.take_along_axis(branch, pc[:, :, None], axis=1)
+        tail = jnp.where((pidx >= 0)[:, :, None], tail, 0)
+        ret_state = (h_last.astype(jnp.float32), tail)
+    else:
+        ret_state = (h[:, -1].astype(jnp.float32) if h.ndim == 3 else h,
+                     jnp.concatenate([pad, branch], 1)[:, -(cw - 1):])
+    return x, ret_state
 
 
-def _attn_block(cfg, x, lp, cache=None, pos0=0):
-    """Local (windowed) MQA block; decode uses a ring buffer of W slots."""
+def _attn_block(cfg, x, lp, cache=None, pos0=0, lens=None):
+    """Local (windowed) MQA block; decode uses a ring buffer of W slots.
+
+    `pos0` may be a scalar or a (B,) per-slot position vector (continuous
+    batching); `lens` (B,) enables ragged-prefill ring extraction."""
     b, s, d = x.shape
     h, hkv, hd = cfg.n_heads, cfg.n_kv_heads, cfg.hd
     xn = rms_norm(x, lp["norm"])
@@ -213,16 +234,40 @@ def _attn_block(cfg, x, lp, cache=None, pos0=0):
         attn = attention(q, k, v, impl=cfg.attn_impl, causal=True,
                          window=cfg.window)
         new_cache = None
+        if lens is not None:
+            # ragged ring extraction: slot r holds the roped k/v of the
+            # latest prompt position p < lens with p = r (mod W) — the
+            # exact layout the decode ring writes would have produced
+            W = cfg.window
+            last = jnp.maximum(lens - 1, 0)                 # (B,)
+            p_r = last[:, None] - ((last[:, None] - jnp.arange(W)[None]) % W)
+            pc = jnp.clip(p_r, 0, s - 1)
+            valid = (p_r >= 0)[:, :, None, None]
+            ck = jnp.where(valid, jnp.take_along_axis(
+                k, pc[:, :, None, None], axis=1), 0).astype(cfg.cdtype)
+            cv = jnp.where(valid, jnp.take_along_axis(
+                v, pc[:, :, None, None], axis=1), 0).astype(cfg.cdtype)
+            new_cache = (ck, cv)
     else:
         ck, cv = cache                                      # (B, W, hkv, hd)
         W = ck.shape[1]
-        pos = pos0 + jnp.arange(s)
-        cos, sin = rope_cos_sin(pos, hd, cfg.rope_base, cfg.cdtype)
-        q = apply_rope(q, cos[None], sin[None])
-        k = apply_rope(k, cos[None], sin[None])
-        slot = (pos0 % W) + jnp.arange(s)                   # s=1 decode
-        ck = ck.at[:, slot % W].set(k.astype(ck.dtype))
-        cv = cv.at[:, slot % W].set(v.astype(cv.dtype))
+        if jnp.ndim(pos0) == 1:   # per-slot positions (continuous batching)
+            pos = pos0[:, None] + jnp.arange(s)             # (B, s)
+            cos, sin = rope_cos_sin(pos, hd, cfg.rope_base, cfg.cdtype)
+            q = apply_rope(q, cos, sin)
+            k = apply_rope(k, cos, sin)
+            slot = pos % W                                  # (B, s)
+            rows = jnp.arange(b)[:, None]
+            ck = ck.at[rows, slot].set(k.astype(ck.dtype))
+            cv = cv.at[rows, slot].set(v.astype(cv.dtype))
+        else:
+            pos = pos0 + jnp.arange(s)
+            cos, sin = rope_cos_sin(pos, hd, cfg.rope_base, cfg.cdtype)
+            q = apply_rope(q, cos[None], sin[None])
+            k = apply_rope(k, cos[None], sin[None])
+            slot = (pos0 % W) + jnp.arange(s)               # s=1 decode
+            ck = ck.at[:, slot % W].set(k.astype(ck.dtype))
+            cv = cv.at[:, slot % W].set(v.astype(cv.dtype))
         # ring buffer holds the last W tokens; mask unfilled slots
         filled = jnp.minimum(pos0 + s, W)
         attn = attention(q, ck, cv, impl="ref", causal=False,
@@ -349,3 +394,38 @@ def decode_step(params, cache, tokens, cfg: RGLRUConfig, positions=None):
     x = rms_norm(x, params["final_norm"].astype(cfg.cdtype))
     logits = (x @ params["embed"].T.astype(cfg.cdtype))[:, -1]
     return logits, new_cache
+
+
+def prefill_cells(params, tokens, lens, cfg: RGLRUConfig):
+    """Ragged bucketed prefill: the full-sequence trunk (parallel
+    associative scan — the pallas `rglru_scan` kernel when
+    cfg.scan_impl == "pallas") with each row's carry extracted at its own
+    prompt tail (lens - 1).  All blocks are causal, so rows padded to a
+    shared bucket length read states identical to an unpadded run.
+
+    tokens: (B, bucket_len); lens: (B,) prompt lengths.  Returns
+    (last-token logits (B, V), per-row decode state with pos = lens)."""
+    x = params["embed"][tokens].astype(cfg.cdtype)
+
+    def group(x, lps):
+        ra, rb, at = lps
+        x, sa = _rec_block(cfg, x, _cast(ra, cfg.cdtype), lens=lens)
+        x, sb = _rec_block(cfg, x, _cast(rb, cfg.cdtype), lens=lens)
+        x, c = _attn_block(cfg, x, _cast(at, cfg.cdtype), lens=lens)
+        return x, (sa, sb, c)
+
+    x, (sa, sb, attn_c) = jax.lax.scan(
+        group, x, (params["rec_a"], params["rec_b"], params["attn"]))
+    cache = {"rec_a": sa, "rec_b": sb, "attn": attn_c,
+             "pos": lens.astype(jnp.int32)}
+    if cfg.n_tail_rec:
+        def tail(x, lp):
+            x, s_n = _rec_block(cfg, x, _cast(lp, cfg.cdtype), lens=lens)
+            return x, s_n
+        x, tail_s = jax.lax.scan(tail, x, params["tail"])
+        cache["tail"] = tail_s
+    x = rms_norm(x, params["final_norm"].astype(cfg.cdtype))
+    last = jnp.maximum(lens - 1, 0)
+    xl = jnp.take_along_axis(x, last[:, None, None], axis=1)[:, 0]
+    logits = xl @ params["embed"].T.astype(cfg.cdtype)
+    return logits, cache

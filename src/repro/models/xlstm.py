@@ -345,7 +345,10 @@ def loss_fn(params, batch, cfg: XLSTMConfig):
 
 
 def init_cache(cfg: XLSTMConfig, batch: int, max_len: int, dtype=None):
-    """Recurrent state only — O(1) in sequence length (the long_500k story)."""
+    """Recurrent state only — O(1) in sequence length (the long_500k story).
+
+    `dtype` is accepted for the uniform init_cache signature but unused:
+    the exponential-gate stabilizer math keeps every carry in float32."""
     npairs = cfg.n_layers // 2
     h, dh, dhs = cfg.n_heads, cfg.hd, cfg.d_model // cfg.n_heads
     f32 = jnp.float32
@@ -378,3 +381,38 @@ def decode_step(params, cache, tokens, cfg: XLSTMConfig, positions=None):
     logits = (x @ params["embed"].T.astype(cfg.cdtype))[:, -1]
     return logits, {"slstm": s_states, "mlstm": m_states,
                     "pos": cache["pos"] + 1}
+
+
+def prefill_cells(params, tokens, lens, cfg: XLSTMConfig):
+    """Ragged bucketed prefill by scanning the O(1) decode cell over the
+    bucket, freezing each row's carry once past its own prompt length.
+    This is exactly the decode-path recurrence (the sLSTM is strictly
+    sequential anyway, and the parallel mLSTM forms do not expose per-step
+    states), so prefill + decode is one consistent recurrence bit-for-bit.
+
+    tokens: (B, bucket_len); lens: (B,).  Returns (last-token logits
+    (B, V), per-row decode state with pos = lens)."""
+    b, lb = tokens.shape
+    state0 = init_cache(cfg, b, 0)
+    state0 = {**state0, "pos": jnp.zeros((b,), jnp.int32)}
+    axes = {"slstm": (1, 1, 1, 1), "mlstm": (1, 1, 1), "pos": 0}
+
+    def step(carry, xs):
+        state, logits = carry
+        t, tok = xs
+        lg, fresh = decode_step(params, state, tok[:, None], cfg)
+        live = t < lens
+
+        def sel(n, o, ax):
+            shape = [1] * n.ndim
+            shape[ax] = b
+            return jnp.where(live.reshape(shape), n, o)
+
+        state = jax.tree.map(sel, fresh, state, axes)
+        logits = jnp.where((t == lens - 1)[:, None], lg, logits)
+        return (state, logits), None
+
+    init = (state0, jnp.zeros((b, cfg.vocab_size), cfg.cdtype))
+    (state, logits), _ = jax.lax.scan(
+        step, init, (jnp.arange(lb), tokens.T))
+    return logits, state

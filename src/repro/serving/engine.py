@@ -42,9 +42,12 @@ run — and both directions are fixed-shape (full-width, index+mask driven),
 so repeated migrations are jit cache hits (`trace_count()` stays flat).
 serving/router.py drives this from the constellation liveness mask.
 
-The engine requires a model exposing a (k, v, pos) KV cache in the
-(L, B, M, Hkv, dh) layout (the transformer family) plus a `decode_step`
-accepting per-row positions and `last_idx` — see models/transformer.py.
+The engine speaks the DecodeState protocol (models/decode_state.py), not
+any one cache layout: every model family (transformer KV, RG-LRU carry,
+xLSTM carry, MoE) supplies a spec with `init_state`/`decode`/`prefill`/
+`freeze` plus batch/length axis declarations, and every migration
+primitive here is a generic tree gather/scatter over those declarations —
+carry migration carries the same bit-exactness proof as KV migration.
 """
 from __future__ import annotations
 
@@ -55,6 +58,8 @@ from typing import Optional
 import jax
 import jax.numpy as jnp
 import numpy as np
+
+from repro.models import decode_state as ds
 
 
 @dataclass
@@ -69,6 +74,9 @@ class Request:
       temperature: 0 = greedy argmax; > 0 samples top-k at this
         temperature from the request's own PRNG stream.
       eos_id: stop token (None = budget/max_len only).
+      arch: arch-group label (a model config name) on a heterogeneous
+        ConstellationRouter plane; None = the plane's default group.
+        Ignored by a bare ServingEngine.
       generated: output token ids (filled in by the engine).
       done: set once the request left its slot (eos/budget/out-of-room).
     """
@@ -77,6 +85,7 @@ class Request:
     max_new_tokens: int = 32
     temperature: float = 0.0        # 0 = greedy
     eos_id: Optional[int] = None
+    arch: Optional[str] = None
     # outputs
     generated: list = field(default_factory=list)
     done: bool = False
@@ -154,12 +163,11 @@ class ServingEngine:
         self.fns = fns
         self.params = params
         self.ecfg = ecfg
-        self.cache = fns.init_cache(cfg, ecfg.max_batch, ecfg.max_len)
-        if "k" not in self.cache:
-            raise ValueError(
-                "ServingEngine requires a KV-cache (transformer-family) "
-                f"model; {cfg.name} exposes {sorted(self.cache)}")
-        self.cache["pos"] = jnp.zeros((ecfg.max_batch,), jnp.int32)
+        spec_fn = getattr(fns, "decode_spec", None) or ds.decode_spec
+        self.spec = spec_fn(cfg)
+        self.cache = self.spec.init_state(ecfg.max_batch, ecfg.max_len)
+        self._axes = self.spec.batch_axes()
+        self._laxes = self.spec.length_axes()
         b = ecfg.max_batch
         self.state = {
             "last": jnp.zeros((b,), jnp.int32),
@@ -225,24 +233,25 @@ class ServingEngine:
     def _engine_step_impl(self, params, cache, state):
         """Decode up to N tokens for every active slot with zero host syncs.
 
-        Each sub-step: batched decode_step -> per-row sample -> masked
+        Each sub-step: batched spec.decode -> per-row sample -> masked
         bookkeeping. Rows that finish (eos / budget / out of room) are
-        deactivated in-scan; inactive rows hold their state (pos frozen, so
-        their stale cache writes land in the masked tail and their PRNG
-        stream idles deterministically)."""
+        deactivated in-scan; inactive rows hold their state via
+        spec.freeze (KV: pos frozen so stale cache writes land in the
+        masked tail; carry: the whole row tree holds) and their PRNG
+        stream idles deterministically."""
         n = self.ecfg.decode_block
         max_len = self.ecfg.max_len
 
         def sub(carry, _):
             cache, st = carry
-            logits, cache2 = self.fns.decode_step(
-                params, cache, st["last"][:, None], self.model_cfg)
+            logits, cache2 = self.spec.decode(params, cache,
+                                              st["last"][:, None])
             pair = jax.vmap(jax.random.split)(st["rkey"])
             tok = self._sample(logits, pair[:, 1], st["temp"])
             was = st["active"]
             tok = jnp.where(was, tok, st["last"])
-            pos = jnp.where(was, cache2["pos"], cache["pos"])
-            cache2 = {**cache2, "pos": pos}
+            cache2 = self.spec.freeze(cache2, cache, was)
+            pos = cache2["pos"]
             remaining = st["remaining"] - was.astype(jnp.int32)
             done = was & ((tok == st["eos"]) | (remaining <= 0)
                           | (pos + 1 >= max_len))
@@ -264,23 +273,11 @@ class ServingEngine:
 
         Always traced at the full engine batch: the number of distinct
         traces is bounded by the number of buckets, not by (group size x
-        prompt length) combinations."""
-        cfg = self.model_cfg
-        b, lb = tokens.shape
-        tmp = self.fns.init_cache(cfg, b, lb)
-        tmp["pos"] = jnp.zeros((b,), jnp.int32)
-        last_idx = jnp.maximum(lens - 1, 0)
-        logits, tmp = self.fns.decode_step(params, tmp, tokens, cfg,
-                                           last_idx=last_idx)
-
-        # merge admitted rows' fresh cache prefix into the shared cache
-        w = tmp["k"].shape[2]                  # bucket len, block-aligned
-        adm5 = admit[None, :, None, None, None]
-        new_cache = dict(cache)
-        for nm in ("k", "v"):
-            new_cache[nm] = cache[nm].at[:, :, :w].set(
-                jnp.where(adm5, tmp[nm][:, :, :w], cache[nm][:, :, :w]))
-        new_cache["pos"] = jnp.where(admit, lens, cache["pos"])
+        prompt length) combinations. The model half (ragged prefill +
+        admit-masked merge into the shared state) is the family's
+        spec.prefill; the sampler half below is family-agnostic."""
+        logits, new_cache = self.spec.prefill(params, cache, tokens, lens,
+                                              admit)
 
         # per-request PRNG streams: fold_in(base, submit_seq) — admission
         # order and slot placement cannot perturb sampling
@@ -306,14 +303,13 @@ class ServingEngine:
 
     # --- slot migration (constellation serving plane) ----------------------
     def _export_impl(self, cache, state, idx, drop):
-        """Gather rows `idx` of the slot state + KV cache into fresh device
-        buffers and deactivate `drop`-masked rows on the source.
+        """Gather rows `idx` of the slot state + model state tree into
+        fresh device buffers and deactivate `drop`-masked rows on the
+        source. One generic tree gather over the spec's batch axes.
 
         Always full-width (idx/drop are (max_batch,)): one trace covers
         every export size, so repeated migrations are jit cache hits."""
-        bundle_cache = {"k": jnp.take(cache["k"], idx, axis=1),
-                        "v": jnp.take(cache["v"], idx, axis=1),
-                        "pos": jnp.take(cache["pos"], idx, axis=0)}
+        bundle_cache = ds.state_rows(cache, self._axes, idx)
         bundle_state = jax.tree.map(lambda x: jnp.take(x, idx, axis=0),
                                     state)
         new_state = {**state, "active": state["active"] & ~drop}
@@ -321,17 +317,11 @@ class ServingEngine:
 
     def _import_impl(self, cache, state, bcache, bstate, src_for_dst, mask):
         """Scatter bundle rows into `mask`-ed destination slots; row d
-        receives bundle row `src_for_dst[d]`. Unmasked rows are untouched,
-        so resident generations cannot be perturbed by an import."""
-        m5 = mask[None, :, None, None, None]
-        new_cache = {
-            "k": jnp.where(m5, jnp.take(bcache["k"], src_for_dst, axis=1),
-                           cache["k"]),
-            "v": jnp.where(m5, jnp.take(bcache["v"], src_for_dst, axis=1),
-                           cache["v"]),
-            "pos": jnp.where(mask, jnp.take(bcache["pos"], src_for_dst),
-                             cache["pos"]),
-        }
+        receives bundle row `src_for_dst[d]`. One generic tree scatter
+        over the spec's batch axes; unmasked rows are untouched, so
+        resident generations cannot be perturbed by an import."""
+        new_cache = ds.merge_rows(cache, bcache, self._axes, src_for_dst,
+                                  mask)
 
         def sel(b, old):
             g = jnp.take(b, src_for_dst, axis=0)
@@ -416,48 +406,29 @@ class ServingEngine:
 
     # --- warm-standby replication (tuple-space serving grid) ---------------
     def _delta_export_impl(self, cache, state, idx, starts, width):
-        """Gather a `width`-wide window of KV rows starting at per-row
-        `starts` (the replication cursor) plus the full per-slot state
-        rows, for the slots in `idx`. This is the grid's delta shipper:
-        only rows written since the last sync cross the (simulated) wire,
-        not the whole max_len cache row. Full-width (idx/starts are
-        (max_batch,)) so every sync size shares one trace."""
-        k = jnp.take(cache["k"], idx, axis=1)          # (L, B, M, Hkv, dh)
-        v = jnp.take(cache["v"], idx, axis=1)
-        pos = jnp.take(cache["pos"], idx)
-        cols = starts[:, None] + jnp.arange(width)     # (B, W)
-        colc = jnp.clip(cols, 0, k.shape[2] - 1)[None, :, :, None, None]
-        kw = jnp.take_along_axis(k, colc, axis=2)      # (L, B, W, Hkv, dh)
-        vw = jnp.take_along_axis(v, colc, axis=2)
+        """Gather each `idx` slot's state delta: leaves with a length axis
+        (KV rows) windowed to [starts, starts + width) from the per-row
+        replication cursor, carry leaves whole (they are O(1)/O(window) —
+        the whole carry IS the delta). Only rows written since the last
+        sync cross the (simulated) wire, not the whole max_len cache row.
+        Full-width (idx/starts are (max_batch,)) so every sync size
+        shares one trace."""
+        bcache = ds.delta_since(cache, self._axes, self._laxes, idx,
+                                starts, width)
         bstate = jax.tree.map(lambda x: jnp.take(x, idx, axis=0), state)
-        return kw, vw, pos, bstate
+        return bcache, bstate
 
-    def _standby_apply_impl(self, sb_cache, sb_state, kw, vw, bpos, bstate,
+    def _standby_apply_impl(self, sb_cache, sb_state, bcache, bstate,
                             src_for_dst, starts, mask):
         """Scatter a delta bundle into `mask`-ed standby rows: row r takes
-        bundle row `src_for_dst[r]`'s KV window at [starts[r],
-        starts[r] + W) (clipped to the rows actually written, i.e. the
-        source's kv pos) and its full state row. standby `pos` tracks the
-        replication cursor — when it reaches the source's pos the standby
-        is promotable (a pointer-flip failover target)."""
-        W = kw.shape[2]
-        M = sb_cache["k"].shape[2]
-        kw = jnp.take(kw, src_for_dst, axis=1)
-        vw = jnp.take(vw, src_for_dst, axis=1)
-        pos = jnp.take(bpos, src_for_dst)
-        pend = jnp.clip(pos - starts, 0, W)            # rows to copy
-        rel = jnp.arange(M)[None, :] - starts[:, None]  # (B, M)
-        in_win = (rel >= 0) & (rel < pend[:, None]) & mask[:, None]
-        relc = jnp.clip(rel, 0, W - 1)[None, :, :, None, None]
-        w5 = in_win[None, :, :, None, None]
-        new_cache = {
-            "k": jnp.where(w5, jnp.take_along_axis(kw, relc, axis=2),
-                           sb_cache["k"]),
-            "v": jnp.where(w5, jnp.take_along_axis(vw, relc, axis=2),
-                           sb_cache["v"]),
-            "pos": jnp.where(mask, jnp.minimum(starts + W, pos),
-                             sb_cache["pos"]),
-        }
+        bundle row `src_for_dst[r]` — windowed leaves at [starts[r],
+        starts[r] + W) clipped to the rows actually written (the source's
+        pos), carry leaves whole. standby `pos` tracks the replication
+        cursor — when it reaches the source's pos the standby is
+        promotable (a pointer-flip failover target); carry planes land
+        there after every sync."""
+        new_cache = ds.delta_apply(sb_cache, bcache, self._axes,
+                                   self._laxes, src_for_dst, starts, mask)
 
         def sel(b, old):
             g = jnp.take(b, src_for_dst, axis=0)
@@ -476,18 +447,17 @@ class ServingEngine:
         the memory."""
         if self.standby is None:
             self.standby = {
-                "cache": {"k": jnp.zeros_like(self.cache["k"]),
-                          "v": jnp.zeros_like(self.cache["v"]),
-                          "pos": jnp.zeros_like(self.cache["pos"])},
+                "cache": jax.tree.map(jnp.zeros_like, self.cache),
                 "state": jax.tree.map(jnp.zeros_like, self.state),
             }
 
     def export_delta(self, entries, width: int) -> dict:
-        """Delta-export `entries` = [(slot, cursor), ...]: each slot's KV
-        window [cursor, cursor + width) + its state row, in ONE jitted
-        gather. Unlike `export_slots` this does NOT deactivate or free
-        anything — the source keeps decoding; this is the background
-        replication feed, off the decode critical path (no host sync)."""
+        """Delta-export `entries` = [(slot, cursor), ...]: each slot's
+        windowed state delta [cursor, cursor + width) (whole carry for
+        carry families) + its sampler state row, in ONE jitted gather.
+        Unlike `export_slots` this does NOT deactivate or free anything —
+        the source keeps decoding; this is the background replication
+        feed, off the decode critical path (no host sync)."""
         b = self.ecfg.max_batch
         if not 0 < len(entries) <= b:
             raise ValueError(f"export_delta: {len(entries)} entries for "
@@ -499,10 +469,10 @@ class ServingEngine:
                 raise ValueError(f"export_delta: slot {s} is empty")
             idx[j] = s
             starts[j] = c
-        kw, vw, pos, bstate = self._delta_export(
+        bcache, bstate = self._delta_export(
             self.cache, self.state, jnp.asarray(idx), jnp.asarray(starts),
             int(width))
-        return {"kw": kw, "vw": vw, "pos": pos, "state": bstate,
+        return {"cache": bcache, "state": bstate,
                 "starts": starts, "params_version": self.params_version,
                 "max_len": self.ecfg.max_len}
 
@@ -532,9 +502,9 @@ class ServingEngine:
             starts[r] = bundle["starts"][j]
             mask[r] = True
         sc, ss = self._standby_apply(
-            self.standby["cache"], self.standby["state"], bundle["kw"],
-            bundle["vw"], bundle["pos"], bundle["state"],
-            jnp.asarray(src), jnp.asarray(starts), jnp.asarray(mask))
+            self.standby["cache"], self.standby["state"], bundle["cache"],
+            bundle["state"], jnp.asarray(src), jnp.asarray(starts),
+            jnp.asarray(mask))
         self.standby = {"cache": sc, "state": ss}
         self.stats["standby_syncs"] += 1
 

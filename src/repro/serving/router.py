@@ -59,6 +59,18 @@ plane admissions, lets every in-flight generation drain (migrations
 included), and only then fans the swap out to all replicas at once —
 every replica is always on the same params_version, so a standby or a
 migration can never cross param snapshots.
+
+**Heterogeneous planes.** Replicas are grouped by model-config name into
+ARCH GROUPS (a KV-transformer group and an RG-LRU carry group can share
+one plane): a request lands in its arch's group (`Request.arch`, None =
+the default group), home-pod hashing / spill / standby placement /
+failover drains / rebalance quotas all stay inside the group — a
+session's decode state only ever moves between same-arch pods — and
+param swaps stage and drain PER GROUP. The replication cursor follows
+each group's `DecodeStateSpec.state_kind`: windowed KV groups ship
+`repl_chunk`-row deltas, carry groups ship their O(1) state whole and
+are promotable after every sync. `plane_stats()["arch_occupancy"]`
+reports the per-group live view.
 """
 from __future__ import annotations
 
@@ -185,11 +197,30 @@ class ConstellationRouter:
             raise ValueError("ConstellationRouter needs >= 1 engine")
         if len({e.ecfg.max_len for e in engines}) != 1:
             raise ValueError("replicas must share max_len (migration "
-                             "moves raw KV rows between caches)")
-        if len({e.params_version for e in engines}) != 1:
-            raise ValueError("replicas must start on one param snapshot")
+                             "moves raw state rows between caches)")
         self.engines = engines
         self.n_pods = len(engines)
+        # arch groups: pods hosting the same model config are mutual
+        # migration/standby targets; sessions never cross groups
+        self._group_of: list[int] = []
+        self._groups: list[list[int]] = []
+        self._group_label: list[str] = []
+        self._group_by_label: dict[str, int] = {}
+        for i, e in enumerate(engines):
+            label = e.model_cfg.name
+            g = self._group_by_label.get(label)
+            if g is None:
+                g = len(self._groups)
+                self._group_by_label[label] = g
+                self._groups.append([])
+                self._group_label.append(label)
+            self._group_of.append(g)
+            self._groups[g].append(i)
+        for g, pods in enumerate(self._groups):
+            if len({engines[i].params_version for i in pods}) != 1:
+                raise ValueError(
+                    f"replicas of arch group {self._group_label[g]!r} "
+                    f"must start on one param snapshot")
         self.mask_fn = mask_fn
         self.chaos: Optional[ChaosSchedule] = as_chaos_schedule(forced_outage)
         self._chaos_state: dict = {}
@@ -202,8 +233,7 @@ class ConstellationRouter:
         self.dropped: list[Request] = []
         self._next_seq = 0
         self._credits = np.zeros(self.n_pods)
-        self._pending_params = None
-        self.params_version = engines[0].params_version
+        self._pending_params: dict[int, object] = {}   # by arch group
         self._last_alive = None
         self._sessions: dict[int, _Session] = {}       # by Request._seq
         self._sb_free = [list(range(e.ecfg.max_batch)) for e in engines]
@@ -255,15 +285,25 @@ class ConstellationRouter:
             raise ValueError(
                 f"request {req.uid}: prompt length {len(req.prompt)} "
                 f"exceeds max_len {self.engines[0].ecfg.max_len}")
+        if req.arch is not None and req.arch not in self._group_by_label:
+            raise KeyError(
+                f"request {req.uid}: no arch group {req.arch!r} on this "
+                f"plane; groups: {sorted(self._group_by_label)}")
         if req._seq < 0:
             req._seq = self._next_seq
             self._next_seq += 1
         self.queue.append(req)
 
+    def _group_for(self, req) -> int:
+        """Arch group of a request (None = the default group: the one
+        engines[0] belongs to)."""
+        return 0 if req.arch is None else self._group_by_label[req.arch]
+
     def _home(self, req) -> int:
         """Key partition: a Knuth multiplicative hash of the request uid
-        picks the session's home pod."""
-        return ((int(req.uid) * 2654435761) & 0xFFFFFFFF) % self.n_pods
+        picks the session's home pod WITHIN its arch group."""
+        pods = self._groups[self._group_for(req)]
+        return pods[((int(req.uid) * 2654435761) & 0xFFFFFFFF) % len(pods)]
 
     def _free_cap(self, pod: int) -> int:
         return sum(s is None for s in self.engines[pod].slots)
@@ -271,36 +311,46 @@ class ConstellationRouter:
     def _admit(self, alive, weights):
         """Partitioned admission: each request goes to its key's home pod
         while that pod is alive with unreserved capacity; otherwise it
-        spills via smooth weighted round-robin over live pods' free
-        slots (each admission adds `weights` to every pod's credit and
-        picks the live argmax — deterministic, bandwidth-proportional
-        over time). Capacity reserved for deferred failovers is never
-        admitted into."""
+        spills via smooth weighted round-robin over its arch group's live
+        pods' free slots (each admission adds `weights` to every pod's
+        credit and picks the group-live argmax — deterministic,
+        bandwidth-proportional over time). Capacity reserved for deferred
+        failovers is never admitted into. Head-of-line blocking is
+        per-group: a full transformer group never stalls admissions into
+        an idle recurrent group (or vice versa), and a group draining for
+        a staged param swap holds only its own requests."""
         self._credits = np.where(alive, self._credits, 0.0)
         free = [self._free_cap(i) - int(self._reserved[i])
                 for i in range(self.n_pods)]
-        while self.queue:
-            req = self.queue[0]
+        blocked = set(self._pending_params)   # groups draining for a swap
+        admitted = []
+        for qi, req in enumerate(self.queue):
+            g = self._group_for(req)
+            if g in blocked:
+                continue
             home = self._home(req)
             if alive[home] and free[home] > 0:
                 i = home
                 self.stats["admitted_home"] += 1
             else:
-                avail = [i for i in range(self.n_pods)
+                avail = [i for i in self._groups[g]
                          if alive[i] and free[i] > 0]
                 if not avail:
-                    return
+                    blocked.add(g)   # keep the group's queue order
+                    continue
                 self._credits += weights
                 i = max(avail,
                         key=lambda k: (self._credits[k], weights[k], -k))
                 self._credits[i] -= 1.0
                 self.stats["admitted_spill"] += 1
-            self.queue.pop(0)
+            admitted.append(qi)
             self.engines[i].submit(req)
             free[i] -= 1
             self.stats["admitted_per_pod"][i] += 1
             self._sessions[req._seq] = _Session(
-                req, home, i, self.params_version)
+                req, home, i, self.engines[i].params_version)
+        for qi in reversed(admitted):
+            self.queue.pop(qi)
 
     # --- session bookkeeping ------------------------------------------------
     @staticmethod
@@ -433,8 +483,11 @@ class ConstellationRouter:
         for i in sorted(by_src):
             pending = by_src[i]
             while pending:
+                # a drain may only land on a same-arch pod: the bundle is
+                # raw decode-state rows in the source family's layout
                 dests = [(j, self._free_cap(j))
-                         for j in range(self.n_pods) if alive[j]]
+                         for j in self._groups[self._group_of[i]]
+                         if alive[j]]
                 dests = [(j, f) for j, f in dests if f > 0]
                 if not dests:
                     break
@@ -523,14 +576,28 @@ class ConstellationRouter:
         sitting on its OWN home pod is never moved — only displaced
         (failed-over or spilled) sessions rebalance."""
         budget = self.grid.rebalance_per_tick
-        live = [i for i in range(self.n_pods) if alive[i]]
-        if budget <= 0 or len(live) < 2:
+        if budget <= 0:
             return
+        moved = 0
+        for g in range(len(self._groups)):
+            moved += self._rebalance_group(g, alive, weights,
+                                           budget - moved)
+            if moved >= budget:
+                break
+        if moved:
+            self.stats["rebalances"] += 1
+
+    def _rebalance_group(self, g, alive, weights, budget) -> int:
+        """Rebalance one arch group (moves never cross groups: the
+        exported bundle is family-layout state rows)."""
+        live = [i for i in self._groups[g] if alive[i]]
+        if budget <= 0 or len(live) < 2:
+            return 0
         active = {i: sum(s is not None for s in self.engines[i].slots)
                   for i in live}
         total = sum(active.values())
         if total == 0:
-            return
+            return 0
         quota = self._quotas(live, weights, total)
         moved = 0
         while moved < budget:
@@ -571,8 +638,7 @@ class ConstellationRouter:
             active[dst] += 1
             moved += 1
             self.stats["rebalanced_slots"] += 1
-        if moved:
-            self.stats["rebalances"] += 1
+        return moved
 
     # --- incremental background replication ---------------------------------
     def _replicate(self, alive):
@@ -594,8 +660,12 @@ class ConstellationRouter:
                 self._free_standby(sess)
                 self.stats["standby_rehomed"] += 1
             if sess.sb_pod is None:
-                has_room = [bool(self._sb_free[p]) for p in
-                            range(self.n_pods)]
+                # a standby must hold the same family's state layout, so
+                # only same-arch pods have room for this session
+                grp = self._group_of[sess.pod]
+                has_room = [bool(self._sb_free[p])
+                            and self._group_of[p] == grp
+                            for p in range(self.n_pods)]
                 weights = self._last_weights
                 p = choose_standby_pod(sess.pod, alive, weights, has_room)
                 if p is None:
@@ -617,40 +687,67 @@ class ConstellationRouter:
             self.engines[dst].standby_apply(
                 bundle, [(j, sess.sb_row) for j, sess in enumerate(group)])
             self.stats["replication_syncs"] += 1
+            # carry groups ship the whole O(1) state every sync, so the
+            # cursor jumps straight to pos (fresh after every sync); the
+            # rows accounting charges 1 row either way so the KV savings
+            # ratio is never inflated by carry traffic
+            windowed = self.engines[src].spec.windowed
             for sess in group:
                 pos = self._kv_pos(sess.req)
-                new_cursor = min(sess.cursor + width, pos)
-                self.stats["replicated_rows"] += new_cursor - sess.cursor
-                self.stats["full_rows_equiv"] += pos
+                if windowed:
+                    new_cursor = min(sess.cursor + width, pos)
+                    self.stats["replicated_rows"] += new_cursor - sess.cursor
+                    self.stats["full_rows_equiv"] += pos
+                else:
+                    new_cursor = pos
+                    self.stats["replicated_rows"] += 1
+                    self.stats["full_rows_equiv"] += 1
                 sess.cursor = new_cursor
                 sess.synced_len = (len(sess.req.generated)
                                    if new_cursor == pos else -1)
 
-    # --- plane-wide param swap ---------------------------------------------
-    def swap_params(self, new_params):
-        """Stage `new_params` for the WHOLE plane (the ParamPublisher
-        sink). Admissions are held plane-wide; in-flight generations —
-        including ones migrating off a masked pod — drain on the snapshot
-        they were admitted under; once every replica is simultaneously
-        empty the swap fans out to all of them in one step, keeping
-        params_version in lockstep across the plane (the invariant that
-        makes any live replica a bit-exact failover target)."""
-        check_swap_compatible(self.engines[0].params, new_params)
-        self._pending_params = new_params
+    # --- group-wide param swap ---------------------------------------------
+    @property
+    def params_version(self) -> int:
+        """The default arch group's lockstep version (the engine-
+        compatible surface launchers poll; heterogeneous planes keep one
+        version PER GROUP, readable off any of the group's engines)."""
+        return self.engines[self._groups[0][0]].params_version
+
+    def swap_params(self, new_params, arch: Optional[str] = None):
+        """Stage `new_params` for one arch GROUP — the whole plane when
+        homogeneous (the ParamPublisher sink). Admissions into the group
+        are held; in-flight generations — including ones migrating off a
+        masked pod — drain on the snapshot they were admitted under; once
+        every replica OF THE GROUP is simultaneously empty the swap fans
+        out to all of them in one step, keeping params_version in
+        lockstep across the group (the invariant that makes any live
+        same-arch replica a bit-exact failover target)."""
+        if arch is None:
+            g = 0
+        elif arch not in self._group_by_label:
+            raise KeyError(f"no arch group {arch!r} on this plane; "
+                           f"groups: {sorted(self._group_by_label)}")
+        else:
+            g = self._group_by_label[arch]
+        lead = self.engines[self._groups[g][0]]
+        check_swap_compatible(lead.params, new_params)
+        self._pending_params[g] = new_params
         self._maybe_apply_swap()
-        return self.params_version + (self._pending_params is not None)
+        return lead.params_version + (g in self._pending_params)
 
     def _maybe_apply_swap(self):
-        if self._pending_params is None:
-            return
-        if any(s is not None for e in self.engines for s in e.slots):
-            return
-        for e in self.engines:
-            e.swap_params(self._pending_params)   # idle => applies now
-            assert e._pending_params is None
-        self._pending_params = None
-        self.params_version += 1
-        self.stats["swaps"] += 1
+        for g in sorted(self._pending_params):
+            pods = self._groups[g]
+            if any(s is not None for i in pods
+                   for s in self.engines[i].slots) \
+                    or any(self.engines[i].queue for i in pods):
+                continue
+            new_params = self._pending_params.pop(g)
+            for i in pods:
+                self.engines[i].swap_params(new_params)  # idle: applies now
+                assert self.engines[i]._pending_params is None
+            self.stats["swaps"] += 1
 
     # --- stepping -----------------------------------------------------------
     def step(self) -> int:
@@ -675,18 +772,17 @@ class ConstellationRouter:
                 s is not None for i in np.nonzero(~alive)[0]
                 for s in self.engines[int(i)].slots):
             for e in self.engines:     # drain async backlog off the clock
-                jax.block_until_ready(e.cache["k"])  # repro-lint: allow[HS002] deliberate pre-failover settle so the stall clock starts clean
+                jax.block_until_ready(e.cache)  # repro-lint: allow[HS002] deliberate pre-failover settle so the stall clock starts clean
             stall_t = time.perf_counter()
         m0 = self.stats["migrated_slots"]
         self._failover(alive, weights)
         if stall_t is not None and self.stats["migrated_slots"] > m0:
             for e in self.engines:
-                jax.block_until_ready(e.cache["k"])  # repro-lint: allow[HS002] the device-blocked stall IS the failover measurement
+                jax.block_until_ready(e.cache)  # repro-lint: allow[HS002] the device-blocked stall IS the failover measurement
             self.failover_stalls.append(time.perf_counter() - stall_t)
         self._rebalance(alive, weights)
         self._maybe_apply_swap()
-        if self._pending_params is None:
-            self._admit(alive, weights)
+        self._admit(alive, weights)   # holds groups with a staged swap
         n_active = 0
         for i, e in enumerate(self.engines):
             if alive[i] and (e.queue or any(s is not None
@@ -742,6 +838,15 @@ class ConstellationRouter:
         ages = [s.defer_age for s in sessions if s.defer_age > 0]
         out["deferred_now"] = len(ages)
         out["deferred_max_age_now"] = max(ages, default=0)
+        out["arch_occupancy"] = {
+            self._group_label[g]: {
+                "pods": len(pods),
+                "slots": sum(self.engines[i].ecfg.max_batch for i in pods),
+                "active": sum(s is not None for i in pods
+                              for s in self.engines[i].slots),
+                "state_kind": self.engines[pods[0]].spec.state_kind,
+            }
+            for g, pods in enumerate(self._groups)}
         agg = {}
         for e in self.engines:
             for k, v in e.stats.items():

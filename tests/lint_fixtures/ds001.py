@@ -1,0 +1,10 @@
+"""Bad: a serving-plane function reaching through the DecodeState
+abstraction and addressing one family's private cache layout directly."""
+import jax.numpy as jnp
+
+LINT_STATE_SCOPED = True
+
+
+def rows_written(cache, idx):
+    kv = cache["k"]  # LINT-EXPECT: DS001
+    return jnp.take(kv, idx, axis=1)

@@ -1,0 +1,340 @@
+"""DecodeState protocol tests: one serving/migration plane for KV-cache,
+recurrent-carry, and MoE models.
+
+The load-bearing invariants:
+
+* fused decode (decode_block > 1) is bit-identical to per-token decode
+  for EVERY registered family (transformer, RG-LRU, xLSTM, MoE), greedy
+  and temperature-sampled — the DecodeState prefill/decode/freeze path
+  cannot depend on the host round-trip cadence;
+* a CARRY-state session survives a pointer-flip failover bit-identically
+  (the PR 6 guarantee, previously proven only for KV rows);
+* a heterogeneous plane (transformer + RG-LRU pods behind one router)
+  survives a chaos schedule with zero drops, in-group failover only, and
+  a flat trace count;
+* param swaps stage and drain per arch group;
+* the fused DiLoCo round is not transformer-only: recurrent families run
+  the same device-resident round bit-identically to the unfused path.
+"""
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.models import registry
+from repro.models.decode_state import decode_spec
+from repro.serving import (ConstellationRouter, EngineConfig, ForcedOutage,
+                           GridConfig, Request, ServingEngine,
+                           parse_outage_spec)
+
+ARCHS = ["suncatcher-lm-100m", "recurrentgemma-2b", "xlstm-350m",
+         "qwen3-moe-30b-a3b"]
+CARRY_ARCHS = ["recurrentgemma-2b", "xlstm-350m"]
+
+_SETUP_CACHE = {}
+
+
+def _setup(arch):
+    if arch not in _SETUP_CACHE:
+        cfg = registry.get_reduced_config(arch)
+        fns = registry.model_fns(cfg)
+        params = fns.init(jax.random.PRNGKey(0), cfg)
+        _SETUP_CACHE[arch] = (cfg, fns, params)
+    return _SETUP_CACHE[arch]
+
+
+def _ecfg(**kw):
+    base = dict(max_batch=2, max_len=64, decode_block=4)
+    base.update(kw)
+    return EngineConfig(**base)
+
+
+def _reqs(cfg, n=6, max_new=10, seed=0, arch=None):
+    rng = np.random.default_rng(seed)
+    return [Request(uid=i,
+                    prompt=rng.integers(0, cfg.vocab_size,
+                                        size=int(rng.integers(3, 24))
+                                        ).astype(np.int32),
+                    max_new_tokens=max_new,
+                    temperature=0.0 if i % 2 == 0 else 0.8,
+                    arch=arch)
+            for i in range(n)]
+
+
+def _clone(reqs, arch=None):
+    return [Request(uid=r.uid, prompt=r.prompt,
+                    max_new_tokens=r.max_new_tokens,
+                    temperature=r.temperature, eos_id=r.eos_id, arch=arch)
+            for r in reqs]
+
+
+def _serve_single(cfg, fns, params, reqs, **kw):
+    eng = ServingEngine(cfg, fns, params, _ecfg(**kw))
+    for r in _clone(reqs):
+        eng.submit(r)
+    return {r.uid: r.generated for r in eng.run()}
+
+
+# --------------------------------------------------------------------------
+# the spec registry
+# --------------------------------------------------------------------------
+def test_decode_spec_kinds_and_windowed():
+    kinds = {}
+    for arch in ARCHS:
+        cfg, _, _ = _setup(arch)
+        spec = decode_spec(cfg)
+        kinds[arch] = (spec.state_kind, spec.windowed)
+    assert kinds["suncatcher-lm-100m"] == ("kv", True)
+    assert kinds["qwen3-moe-30b-a3b"] == ("kv+experts", True)
+    assert kinds["recurrentgemma-2b"] == ("carry", False)
+    assert kinds["xlstm-350m"] == ("carry", False)
+
+
+def test_unknown_config_type_raises_named_keyerror():
+    class NotAModelConfig:
+        pass
+
+    with pytest.raises(KeyError, match="NotAModelConfig"):
+        decode_spec(NotAModelConfig())
+    with pytest.raises(KeyError, match="registered families"):
+        registry.model_fns(NotAModelConfig())
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_init_cache_uniform_signature(arch):
+    """Every family accepts init_cache(cfg, batch, max_len, dtype=None)."""
+    cfg, fns, _ = _setup(arch)
+    c1 = fns.init_cache(cfg, 2, 32)
+    c2 = fns.init_cache(cfg, 2, 32, dtype=jnp.float32)
+    assert jax.tree.structure(c1) == jax.tree.structure(c2)
+
+
+# --------------------------------------------------------------------------
+# fused vs per-token decode: the cadence-independence proof, per family
+# --------------------------------------------------------------------------
+@pytest.mark.parametrize("arch", ARCHS)
+def test_fused_decode_bit_identical_to_per_token(arch):
+    """decode_block=4 and decode_block=1 must produce identical tokens
+    (greedy AND sampled): prefill/freeze/sampling cannot depend on the
+    host round-trip cadence for any state family."""
+    cfg, fns, params = _setup(arch)
+    reqs = _reqs(cfg)
+    fused = _serve_single(cfg, fns, params, reqs, decode_block=4)
+    single = _serve_single(cfg, fns, params, reqs, decode_block=1)
+    assert fused == single
+    assert all(len(g) > 0 for g in fused.values())
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_trace_count_flat_across_waves(arch):
+    """A second wave of requests must be all jit cache hits."""
+    cfg, fns, params = _setup(arch)
+    eng = ServingEngine(cfg, fns, params, _ecfg())
+    for r in _reqs(cfg, n=3, seed=1):
+        eng.submit(r)
+    eng.run()
+    t1 = eng.trace_count()
+    for r in _reqs(cfg, n=3, seed=2):
+        eng.submit(r)
+    eng.run()
+    assert eng.trace_count() == t1
+
+
+# --------------------------------------------------------------------------
+# carry-state migration: pointer-flip failover bit-identity
+# --------------------------------------------------------------------------
+def _greq(cfg, uid, max_new=12, plen=8, temp=None, arch=None):
+    rng = np.random.default_rng(100 + uid)
+    t = (0.0 if uid % 2 == 0 else 0.8) if temp is None else temp
+    return Request(uid=uid,
+                   prompt=rng.integers(0, cfg.vocab_size,
+                                       size=plen).astype(np.int32),
+                   max_new_tokens=max_new, temperature=t, arch=arch)
+
+
+@pytest.mark.parametrize("arch", CARRY_ARCHS)
+def test_carry_pointer_flip_bit_identical(arch):
+    """A pod holding recurrent-carry sessions is struck mid-decode; the
+    warm standbys (whole-state syncs, fresh after every replication tick)
+    are promoted by pointer flip and the continuations — greedy and
+    temperature-sampled — are bit-identical to an uninterrupted run."""
+    cfg, fns, params = _setup(arch)
+    # uids 1 and 2 both hash-home onto pod 1 of 3
+    reqs = [_greq(cfg, 1, temp=0.8), _greq(cfg, 2, temp=0.0)]
+    plane = ConstellationRouter(
+        [ServingEngine(cfg, fns, params, _ecfg()) for _ in range(3)],
+        forced_outage=ForcedOutage(at_tick=2, pod=1))
+    for r in _clone(reqs):
+        plane.submit(r)
+    plane.step()
+    ps = plane.plane_stats()
+    # carry standbys go fresh on the FIRST sync: the whole O(1) state
+    # ships every tick, so the cursor lands on pos immediately
+    assert ps["standby_covered"] == 2
+    assert ps["standby_fresh"] == 2
+    done = plane.run()
+    assert len(done) == 2 and all(r.done for r in done)
+    assert plane.stats["pointer_flips"] == 2
+    assert plane.stats["full_migrations"] == 0
+    assert plane.stats["dropped_deferred"] == 0
+    got = {r.uid: r.generated for r in done}
+    assert got == _serve_single(cfg, fns, params, reqs)
+
+
+@pytest.mark.parametrize("arch", CARRY_ARCHS)
+def test_carry_full_drain_bit_identical(arch):
+    """The replicate=False plane (PR 5 drain) also moves carry state
+    bit-exactly through the generic export/import tree ops."""
+    cfg, fns, params = _setup(arch)
+    reqs = [_greq(cfg, 1, temp=0.8), _greq(cfg, 2, temp=0.0)]
+    plane = ConstellationRouter(
+        [ServingEngine(cfg, fns, params, _ecfg()) for _ in range(3)],
+        forced_outage=ForcedOutage(at_tick=2, pod=1),
+        grid=GridConfig(replicate=False))
+    for r in _clone(reqs):
+        plane.submit(r)
+    done = plane.run()
+    assert len(done) == 2
+    assert plane.stats["full_migrations"] >= 1
+    assert plane.stats["pointer_flips"] == 0
+    got = {r.uid: r.generated for r in done}
+    assert got == _serve_single(cfg, fns, params, reqs)
+
+
+# --------------------------------------------------------------------------
+# heterogeneous plane: transformer + carry pods behind one router
+# --------------------------------------------------------------------------
+def _mixed_plane(slots=2, **kw):
+    cfg_t, fns_t, p_t = _setup("suncatcher-lm-100m")
+    cfg_r, fns_r, p_r = _setup("recurrentgemma-2b")
+    ecfg = _ecfg(max_batch=slots)
+    engines = ([ServingEngine(cfg_t, fns_t, p_t, ecfg) for _ in range(2)]
+               + [ServingEngine(cfg_r, fns_r, p_r, ecfg)
+                  for _ in range(2)])
+    return (cfg_t, fns_t, p_t), (cfg_r, fns_r, p_r), \
+        ConstellationRouter(engines, **kw)
+
+
+def test_mixed_plane_group_isolation_and_occupancy():
+    """Requests land in their arch's group only; plane_stats reports
+    per-arch occupancy; an unknown arch label is rejected."""
+    (cfg_t, _, _), (cfg_r, _, _), plane = _mixed_plane()
+    for r in _reqs(cfg_t, n=3, seed=3, arch=cfg_t.name):
+        plane.submit(r)
+    for r in _reqs(cfg_r, n=3, seed=4, arch=cfg_r.name):
+        r.uid += 100
+        plane.submit(r)
+    plane.step()
+    occ = plane.plane_stats()["arch_occupancy"]
+    assert occ[cfg_t.name]["state_kind"] == "kv"
+    assert occ[cfg_r.name]["state_kind"] == "carry"
+    assert occ[cfg_t.name]["pods"] == occ[cfg_r.name]["pods"] == 2
+    # every admitted session sits on a pod of its own group
+    for i, e in enumerate(plane.engines):
+        for req in e.slots:
+            if req is not None:
+                want = cfg_t.name if i < 2 else cfg_r.name
+                assert req.arch == want
+    done = plane.run()
+    assert len(done) == 6
+    with pytest.raises(KeyError, match="no arch group"):
+        plane.submit(Request(uid=999, prompt=np.zeros(4, np.int32),
+                             arch="nope"))
+
+
+def test_mixed_plane_chaos_zero_drops_flat_traces():
+    """The PR 6 chaos contract on a heterogeneous plane: two strikes on
+    the carry pod (uids are chosen so carry sessions provably home
+    there: home index = uid % 2 within the group's pod list), zero
+    drops, carry pointer flips, the second cycle a pure jit cache hit,
+    outputs bit-identical to solo engines of each arch."""
+    (cfg_t, fns_t, p_t), (cfg_r, fns_r, p_r), plane = _mixed_plane(
+        forced_outage=parse_outage_spec("2:2:3,9:2:3"), slots=3)
+    # transformer pods are 0/1, rglru pods are 2/3; even uid -> first
+    # pod of the group, so 100 and 102 both home on rglru pod 2
+    reqs_t = [_greq(cfg_t, u, max_new=32, arch=cfg_t.name)
+              for u in (0, 1, 3)]
+    reqs_r = [_greq(cfg_r, u, max_new=32, arch=cfg_r.name)
+              for u in (100, 101, 102)]
+    for r in reqs_t + reqs_r:
+        plane.submit(r)
+    # settle cycle 1: strike t2, repair t5, rebalance home
+    while plane.tick < 8 and (plane.queue or any(
+            s is not None for s in plane.slots)):
+        plane.step()
+    t0 = plane.trace_count()
+    done = plane.run()
+    assert len(done) == 6 and not plane.dropped
+    assert plane.stats["dropped_deferred"] == 0
+    assert plane.stats["pointer_flips"] >= 2      # both pod-2 sessions
+    if t0 >= 0:
+        assert plane.trace_count() == t0          # cycle 2 = cache hits
+    # bit-identity per arch vs an uninterrupted solo engine
+    got = {r.uid: list(r.generated) for r in done}
+    assert set(got) == {0, 1, 3, 100, 101, 102}
+    for (cfg, fns, params), rs in (((cfg_t, fns_t, p_t), reqs_t),
+                                   ((cfg_r, fns_r, p_r), reqs_r)):
+        solo = ServingEngine(cfg, fns, params, _ecfg(max_batch=3))
+        for r in rs:
+            r2 = Request(uid=r.uid, prompt=r.prompt,
+                         max_new_tokens=r.max_new_tokens,
+                         temperature=r.temperature)
+            r2._seq = r._seq
+            solo.submit(r2)
+        for r2 in solo.run():
+            assert list(r2.generated) == got[r2.uid]
+
+
+def test_mixed_plane_per_group_param_swap():
+    """swap_params(arch=...) stages for ONE group: the other group keeps
+    serving and its version is untouched."""
+    (cfg_t, fns_t, p_t), (cfg_r, fns_r, p_r), plane = _mixed_plane()
+    new_r = fns_r.init(jax.random.PRNGKey(7), cfg_r)
+    v = plane.swap_params(new_r, arch=cfg_r.name)
+    assert v == 1                                   # idle group: applied
+    assert all(e.params_version == 1 for e in plane.engines[2:])
+    assert all(e.params_version == 0 for e in plane.engines[:2])
+    assert plane.params_version == 0                # default group surface
+    # cross-group params are shape-incompatible and must be rejected
+    with pytest.raises(ValueError):
+        plane.swap_params(fns_t.init(jax.random.PRNGKey(8), cfg_t),
+                          arch=cfg_r.name)
+    with pytest.raises(KeyError, match="no arch group"):
+        plane.swap_params(new_r, arch="nope")
+
+
+# --------------------------------------------------------------------------
+# DiLoCo rounds are not transformer-only
+# --------------------------------------------------------------------------
+@pytest.mark.parametrize("arch", CARRY_ARCHS)
+def test_recurrent_fused_diloco_round_bit_identical(arch):
+    """The fused device-resident DiLoCo round runs recurrent families and
+    matches the unfused inner-steps + outer-step sequence bit-exactly."""
+    from repro.train import (AdamWConfig, DataConfig, DiLoCoConfig,
+                             SyntheticLM, TrainConfig, diloco_init,
+                             make_diloco_round, make_inner_steps,
+                             outer_step)
+
+    cfg, fns, params = _setup(arch)
+    tcfg = TrainConfig(adamw=AdamWConfig(lr=3e-3), warmup_steps=2,
+                       total_steps=100)
+    dcfg = DiLoCoConfig(n_pods=2, inner_steps=2)
+    data = SyntheticLM(DataConfig(vocab_size=cfg.vocab_size, seq_len=8,
+                                  global_batch=2))
+    batches = data.batch_block(
+        np.arange(dcfg.n_pods * dcfg.inner_steps).reshape(dcfg.n_pods, -1))
+    pod_mask = jnp.asarray([1.0, 1.0], jnp.float32)
+    thr = jnp.asarray([3.0, 10.0], jnp.float32)
+
+    inner = jax.jit(make_inner_steps(cfg, fns, tcfg, dcfg))
+    outer = jax.jit(partial(outer_step, dcfg=dcfg))
+    ref, _ = inner(diloco_init(params, dcfg), batches)
+    ref = outer(ref, pod_mask=pod_mask)
+
+    rnd = make_diloco_round(cfg, fns, tcfg, dcfg, donate=False)
+    got, metrics = rnd(diloco_init(params, dcfg), batches, pod_mask, thr)
+    for a, b in zip(jax.tree.leaves(got), jax.tree.leaves(ref)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    assert np.isfinite(np.asarray(metrics["loss"])).all()
