@@ -25,7 +25,9 @@ BENCH_SCHEMAS = {
         "fused_round_ms", "seed_loop_round_ms", "speedup_vs_seed_loop",
         "fused_tokens_per_s", "seed_loop_tokens_per_s",
         "host_syncs_per_step", "seed_host_syncs_per_step", "n_pods",
-        "inner_steps",
+        "inner_steps", "outer_sync_compress", "outer_wire_predicted_bytes",
+        "outer_wire_measured_bytes", "outer_wire_measured_over_predicted",
+        "outer_wire_within_budget",
     }),
     "BENCH_coserve.json": frozenset({
         "coserve_tokens_per_s", "coserve_tokens_per_engine_active_s",

@@ -15,10 +15,19 @@ The smoke config is deliberately tiny (d_model=32, seq 8): the quantity
 being measured is the eliminated per-step host overhead (dispatch + sync +
 eager outer), which a large model's compute would mask. Results land in
 BENCH_train.json (repo root) next to the serving baseline.
+
+The outer_wire_* keys measure the WIRE-format outer sync: a subprocess
+(8 forced CPU devices, (2,2,2) pod/data/model mesh — this process pinned
+the single real device at jax import) lowers the shard_map int8 hop and
+reads the pod-axis collective bytes out of the compiled HLO next to the
+`outer_wire_bytes` prediction — the headline artifact records that the
+compressed payload, not the f32 delta, is what crosses the pod axis.
 """
 import collections
 import json
 import os
+import subprocess
+import sys
 import time
 
 import jax
@@ -37,6 +46,64 @@ BATCH = 2                # per pod
 WARM_ROUNDS = 1
 FUSED_ROUNDS = 10
 SEED_ROUNDS = 4
+
+
+# Lowered in a fresh subprocess because the forced device count must be
+# set before the first jax import (same pattern as the lint budget
+# worker). Prints one JSON line on the last stdout line.
+_WIRE_WORKER = """
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+os.environ["JAX_PLATFORMS"] = "cpu"
+import json
+from functools import partial
+import jax
+from repro.analysis.hlo import collective_bytes
+from repro.distributed.compression import wire_format_for
+from repro.distributed.sharding import diloco_specs, param_specs, \\
+    shardings_for
+from repro.launch.dryrun import _mesh_ctx
+from repro.launch.mesh import make_production_mesh
+from repro.models import registry
+from repro.train.diloco import (LINT_BUDGET, DiLoCoConfig, diloco_init,
+                                outer_step, outer_wire_bytes)
+compress = "int8"
+cfg = registry.get_reduced_config("suncatcher-lm-100m")
+fns = registry.model_fns(cfg)
+dcfg = DiLoCoConfig(n_pods=2)
+mesh = make_production_mesh(multi_pod=True, shape=(2, 2, 2))
+params_sds = jax.eval_shape(lambda: fns.init(jax.random.PRNGKey(0), cfg))
+d_sds = jax.eval_shape(
+    partial(diloco_init, dcfg=dcfg, compress=compress), params_sds)
+pspecs = param_specs(cfg, fsdp=True, multi_pod=True)
+state_sh = shardings_for(
+    diloco_specs(pspecs, compress=True, screen=False), d_sds, mesh)
+wire = wire_format_for(params_sds, pspecs, mesh, dcfg.n_pods,
+                       method=compress)
+fn = jax.jit(lambda d: outer_step(d, dcfg, wire=wire),
+             in_shardings=(state_sh,), out_shardings=state_sh)
+with _mesh_ctx(mesh):
+    hlo = fn.lower(d_sds).compile().as_text()
+measured = collective_bytes(hlo)["wire_bytes"]
+predicted = outer_wire_bytes(params_sds, compress=compress, wire=wire)
+factor = LINT_BUDGET["outer_wire_budget_factor"]
+print(json.dumps({
+    "compress": compress, "predicted": predicted, "measured": measured,
+    "ratio": round(measured / predicted, 4),
+    "within_budget": bool(measured <= factor * predicted)}))
+"""
+
+
+def _measure_outer_wire():
+    env = dict(os.environ,
+               PYTHONPATH=os.path.join(os.path.dirname(__file__), "..",
+                                       "src")
+               + os.pathsep + os.environ.get("PYTHONPATH", ""))
+    out = subprocess.run([sys.executable, "-c", _WIRE_WORKER], env=env,
+                         capture_output=True, text=True, timeout=600)
+    if out.returncode != 0:
+        raise RuntimeError(f"wire worker failed: {out.stderr[-2000:]}")
+    return json.loads(out.stdout.strip().splitlines()[-1])
 
 
 def _bench_setup():
@@ -125,6 +192,8 @@ def run():
     syncs_per_step_fused = fused_syncs / (FUSED_ROUNDS * H)
     syncs_per_step_seed = seed_syncs / (SEED_ROUNDS * H)
 
+    wire = _measure_outer_wire()
+
     extras = {
         "fused_round_ms": round(dt_fused * 1e3, 2),
         "seed_loop_round_ms": round(dt_seed * 1e3, 2),
@@ -135,6 +204,11 @@ def run():
         "seed_host_syncs_per_step": round(syncs_per_step_seed, 2),
         "n_pods": N_PODS,
         "inner_steps": H,
+        "outer_sync_compress": wire["compress"],
+        "outer_wire_predicted_bytes": wire["predicted"],
+        "outer_wire_measured_bytes": wire["measured"],
+        "outer_wire_measured_over_predicted": wire["ratio"],
+        "outer_wire_within_budget": wire["within_budget"],
     }
     with open(os.path.join(os.path.dirname(__file__), "..",
                            "BENCH_train.json"), "w") as f:
@@ -150,6 +224,11 @@ def run():
          f"(per-step jit + host screens + eager outer)"),
         ("train_diloco_speedup", 0.0,
          f"{speedup:.2f}x fused round over seed-style per-step loop"),
+        ("train_outer_wire_bytes", 0.0,
+         f"wire-format {wire['compress']} outer sync moves "
+         f"{wire['measured']:.0f} collective bytes/device vs "
+         f"{wire['predicted']} predicted payload/pod "
+         f"({wire['ratio']:.2f}x, within_budget={wire['within_budget']})"),
     ]
     return out, extras
 

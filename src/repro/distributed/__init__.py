@@ -1,6 +1,8 @@
 """Distribution: mesh sharding specs, ISL-aware compression."""
-from .compression import (decompress_tree, ef_compress_tree, ef_init,
+from .compression import (WireFormat, WireLeaf, decompress_tree,
+                          ef_compress_tree, ef_init, ef_wire_roundtrip,
                           int8_compress, int8_decompress, topk_compress,
-                          topk_decompress, tree_bytes_f32)
+                          topk_decompress, tree_bytes_f32, wire_format_for,
+                          wire_leaf_bytes, wire_tree_bytes)
 from .sharding import (batch_axes, batch_specs, cache_specs, opt_state_specs,
                        param_specs)

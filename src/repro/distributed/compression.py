@@ -3,16 +3,37 @@
 DiLoCo already cuts pod-axis traffic by the inner-step factor H; these
 compressors cut the remaining outer-sync bytes further:
 
-  - int8: per-row absmax quantization (4x vs f32). With error feedback the
-    quantization residual re-enters the next outer delta, so the scheme
-    stays unbiased over time.
+  - int8: per-block absmax quantization (4x vs f32). With error feedback
+    the quantization residual re-enters the next outer delta, so the
+    scheme stays unbiased over time.
   - top-k: magnitude sparsification (values + int32 indices), also with
     error feedback.
 
-Both are pure-jnp and jit-safe; `bytes_compressed` reports the wire size the
-ISL budget model charges.
+Two layouts share the same numerics:
+
+  - the legacy single-lane layout (`int8_compress`/`topk_compress`):
+    flatten the whole leaf, pad at the end. Fine pod-locally, but the
+    padding reshapes straddle shard boundaries, so on a sharded mesh the
+    partitioner all-gathers the full f32 delta before quantizing — the
+    PR 5 dryrun finding.
+  - the WIRE format (`WireFormat` + `*_wire_*` below): the leaf is first
+    split into its SPMD tiles (one lane per device shard, exactly the
+    blocks `shard_map` hands each device) and every lane is padded
+    INSIDE the shard, so no quantization block ever straddles a shard
+    boundary. The s8 payload + f32 scales (or top-k values + s32
+    indices) are then what actually crosses the pod axis; the decode
+    happens after the hop. A single-lane WireFormat is bit-identical to
+    the legacy layout, which is what makes the wire hop a layout change
+    rather than a numerics change (proven in tests/test_wire_format.py).
+
+`int8_bytes`/`topk_bytes`/`wire_leaf_bytes` report the wire sizes the ISL
+budget model charges.
 """
 from __future__ import annotations
+
+import math
+from dataclasses import dataclass, replace
+from typing import Any
 
 import jax
 import jax.numpy as jnp
@@ -59,7 +80,208 @@ def topk_decompress(c):
 
 
 def topk_bytes(c) -> int:
-    return int(c["values"].size * 4 + c["indices"].size * 4)
+    """Wire bytes of a top-k payload: values at their OWN dtype width plus
+    the s32 indices. The old formula hard-coded 4 bytes for both, which
+    mischarged non-f32 values and was the accounting gap the ISL budget
+    model could not see (tests/test_compression.py pins both formulas)."""
+    return int(c["values"].size * c["values"].dtype.itemsize
+               + c["indices"].size * c["indices"].dtype.itemsize)
+
+
+# --------------------------------------------------------------------------
+# wire format: shard-aligned lanes, padded inside the shard
+# --------------------------------------------------------------------------
+@dataclass(frozen=True)
+class WireLeaf:
+    """Per-leaf wire layout: `counts[i]` shards along dim i (the SPMD tile
+    grid), `spec` the sanitized per-dim mesh axis names the counts came
+    from. counts of all ones == the legacy single-lane layout."""
+    counts: tuple
+    spec: tuple = ()
+
+
+@dataclass(frozen=True)
+class WireFormat:
+    """The outer-sync wire contract: method + per-leaf lane layout.
+
+    With `mesh` set, the hop runs as a shard_map — each device quantizes
+    its own shard and the compressed payload is all-gathered over the
+    "pod" axis (the FSO wire). With mesh=None the SAME layout runs as a
+    pod-local simulation (vmap over pods, no collectives) — bit-identical
+    output, different bytes on the wire; that pairing is the
+    layout-not-numerics proof.
+    """
+    method: str                 # "int8" | "topk"
+    layout: Any                 # pytree with WireLeaf leaves (matches params)
+    n_pods: int
+    mesh: Any = None
+    block: int = 256
+    topk_frac: float = 0.01
+
+    def simulated(self) -> "WireFormat":
+        return replace(self, mesh=None)
+
+
+def is_wire_leaf(x) -> bool:
+    return isinstance(x, WireLeaf)
+
+
+def wire_format_for(params, pspecs, mesh, n_pods: int, *, method: str,
+                    block: int = 256, topk_frac: float = 0.01) -> WireFormat:
+    """Derive the shard-aligned WireFormat from the param partition specs.
+
+    Lane counts come from the SANITIZED specs (axes that don't divide are
+    dropped, exactly as `shardings_for` would), so the lanes are precisely
+    the tiles shard_map hands each device. If the mesh cannot host the
+    pod axis (no "pod" axis, or n_pods not divisible by its size), the
+    format degrades to the simulated hop (mesh=None) with the same
+    layout."""
+    from repro.distributed.sharding import sanitize_specs
+
+    sds = jax.tree.map(lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype),
+                       params)
+    specs = sanitize_specs(pspecs, sds, mesh)
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+
+    def leaf(spec, x):
+        spec = spec if spec is not None else ()
+        parts = list(spec) + [None] * (len(x.shape) - len(spec))
+        counts = []
+        for ax in parts:
+            if ax is None:
+                counts.append(1)
+                continue
+            axs = ax if isinstance(ax, tuple) else (ax,)
+            counts.append(math.prod(sizes[a] for a in axs))
+        return WireLeaf(counts=tuple(counts), spec=tuple(parts))
+
+    from jax.sharding import PartitionSpec as P
+    layout = jax.tree.map(leaf, specs, sds,
+                          is_leaf=lambda s: s is None or isinstance(s, P))
+    pod_ok = "pod" in sizes and n_pods % sizes["pod"] == 0
+    return WireFormat(method=method, layout=layout, n_pods=n_pods,
+                      mesh=mesh if pod_ok else None, block=block,
+                      topk_frac=topk_frac)
+
+
+def tiles_of(x, counts):
+    """(S, m) lane view of x matching the SPMD tile grid: dim i splits
+    into counts[i] contiguous blocks, shard indices move to the front —
+    lane j holds exactly the elements device j's shard holds."""
+    if x.ndim == 0:
+        return x.reshape(1, 1)
+    shape2, front, back = [], [], []
+    for i, (dim, s) in enumerate(zip(x.shape, counts)):
+        shape2 += [s, dim // s]
+        front.append(2 * i)
+        back.append(2 * i + 1)
+    t = x.reshape(shape2).transpose(front + back)
+    return t.reshape(math.prod(counts), -1)
+
+
+def untile(t, counts, shape):
+    """Inverse of tiles_of."""
+    if len(shape) == 0:
+        return t.reshape(())
+    locals_ = [d // s for d, s in zip(shape, counts)]
+    t = t.reshape(tuple(counts) + tuple(locals_))
+    perm = []
+    for i in range(len(shape)):
+        perm += [i, len(shape) + i]
+    return t.transpose(perm).reshape(shape)
+
+
+def int8_wire_compress(t, block: int = 256):
+    """Quantize (S, m) lanes: pad INSIDE each lane to a block multiple —
+    no quantization block straddles a lane (= shard) boundary. Returns
+    (q (S, R, block) int8, scale (S, R, 1) f32)."""
+    s_lanes, m = t.shape
+    rows = -(-m // block)
+    pad = rows * block - m
+    r = jnp.pad(t, ((0, 0), (0, pad))).reshape(s_lanes, rows, block)
+    scale = jnp.max(jnp.abs(r), axis=2, keepdims=True) / 127.0
+    scale = jnp.maximum(scale, 1e-12)
+    q = jnp.clip(jnp.round(r / scale), -127, 127).astype(jnp.int8)
+    return q, scale.astype(jnp.float32)
+
+
+def int8_wire_decompress(q, scale, m: int):
+    r = q.astype(jnp.float32) * scale
+    return r.reshape(q.shape[0], -1)[:, :m]
+
+
+def topk_wire_k(m: int, frac: float) -> int:
+    return 0 if m == 0 else max(1, int(m * frac))
+
+
+def topk_wire_compress(t, frac: float = 0.01):
+    """Per-lane top-k over (S, m) lanes. Indices are LANE-LOCAL (they
+    never cross a shard boundary). Returns (values (S, k), indices (S, k)
+    s32)."""
+    s_lanes, m = t.shape
+    k = topk_wire_k(m, frac)
+    if k == 0:
+        return (jnp.zeros((s_lanes, 0), t.dtype),
+                jnp.zeros((s_lanes, 0), jnp.int32))
+    _, idx = jax.lax.top_k(jnp.abs(t), k)
+    vals = jnp.take_along_axis(t, idx, axis=1)
+    return vals, idx.astype(jnp.int32)
+
+
+def topk_wire_decompress(vals, idx, m: int):
+    s_lanes = vals.shape[0]
+    flat = jnp.zeros((s_lanes, m), vals.dtype)
+    if vals.shape[1] == 0:
+        return flat
+    return flat.at[jnp.arange(s_lanes)[:, None], idx].set(vals)
+
+
+def ef_wire_roundtrip(x, ef, counts, method: str = "int8",
+                      block: int = 256, topk_frac: float = 0.01):
+    """One error-feedback hop for a single leaf in the wire layout —
+    the simulated twin of the shard_map hop. Returns (payload, sent,
+    new_residual); with counts all ones this is bit-identical to the
+    legacy `ef_roundtrip`."""
+    target = x.astype(jnp.float32) + ef
+    t = tiles_of(target, counts)
+    m = t.shape[1]
+    if method == "int8":
+        q, scale = int8_wire_compress(t, block)
+        sent_t = int8_wire_decompress(q, scale, m)
+        payload = {"q": q, "scale": scale, "shape": target.shape, "n": m}
+    elif method == "topk":
+        vals, idx = topk_wire_compress(t, topk_frac)
+        sent_t = topk_wire_decompress(vals, idx, m)
+        payload = {"values": vals, "indices": idx, "shape": target.shape,
+                   "n": m}
+    else:
+        raise ValueError(f"unknown wire method {method!r}")
+    sent = untile(sent_t, counts, target.shape)
+    return payload, sent, target - sent
+
+
+def wire_leaf_bytes(shape, counts, method: str | None, block: int = 256,
+                    topk_frac: float = 0.01) -> int:
+    """Static per-pod wire bytes for one leaf in the lane layout. The
+    per-lane padding is charged (that is what the links carry)."""
+    n = math.prod(shape) if shape else 1
+    s_lanes = math.prod(counts) if counts else 1
+    m = n // s_lanes
+    if method == "int8":
+        rows = -(-m // block)
+        return s_lanes * rows * (block + 4)      # s8 payload + f32 scales
+    if method == "topk":
+        return s_lanes * topk_wire_k(m, topk_frac) * 8   # f32 + s32 pairs
+    return 4 * n
+
+
+def wire_tree_bytes(params, fmt: WireFormat) -> int:
+    total = 0
+    for x, lay in zip(jax.tree.leaves(params),
+                      jax.tree.leaves(fmt.layout, is_leaf=is_wire_leaf)):
+        total += wire_leaf_bytes(x.shape, lay.counts, fmt.method,
+                                 fmt.block, fmt.topk_frac)
+    return total
 
 
 # --------------------------------------------------------------------------

@@ -28,7 +28,15 @@ Nesterov outer step — the FSO pod-axis hop — on the (2,16,16) multi-pod
 mesh, with the int8 / top-k error-feedback compressor in the graph, and
 record the per-collective / per-dtype byte accounting next to the
 `outer_wire_bytes` static prediction:
-  python -m repro.launch.dryrun --outer-sync --compress int8
+  python -m repro.launch.dryrun --outer-sync --compress int8 [--check]
+
+By default the compressed cell lowers the WIRE-format shard_map hop (the
+path make_diloco_round takes on a mesh): the s8 payload + f32 scales (or
+top-k f32 values + s32 indices) are what the pod-axis all-gather
+carries. --simulated lowers the legacy pod-local compressor instead,
+reproducing the PR 5 finding (full-f32 delta all-gather, ~100x the
+payload). --check exits nonzero when measured bytes exceed
+`budget_factor` x the prediction — the CI gate.
 """
 import argparse
 import json
@@ -258,20 +266,25 @@ def run_cell(arch: str, shape_name: str, multi_pod: bool,
 def run_outer_sync_cell(arch: str = "suncatcher-lm-100m",
                         compress: str | None = "int8",
                         topk_frac: float = 0.01, n_pods: int = 2,
-                        out_dir: str = RESULTS_DIR, verbose: bool = True):
+                        out_dir: str = RESULTS_DIR, verbose: bool = True,
+                        simulated: bool = False):
     """Dry-run the DiLoCo outer sync (the pod-axis FSO hop) on the
     (2,16,16) production mesh and account its collective bytes.
 
     The inner H steps are pod-local by construction, so the outer step is
     lowered ALONE: its pod-axis collectives are exactly the wire traffic
     `train/diloco.py:outer_wire_bytes` predicts from static shapes. With
-    compress="int8"/"topk" the error-feedback compressor runs in-graph,
-    and `collective_bytes`'s per-dtype split shows the s8 payload (+ f32
-    scales) / top-k f32+s32 pairs crossing the mesh instead of the f32
-    baseline. Zero device allocation (eval_shape + AOT lower/compile)."""
-    from repro.train.diloco import (DiLoCoConfig, diloco_init, outer_step,
-                                    outer_wire_bytes)
+    compress="int8"/"topk" the WIRE-format shard_map hop runs in-graph
+    (each device quantizes its own shard; blocks padded inside the
+    shard), and `collective_bytes`'s per-dtype split shows the s8 payload
+    (+ f32 scales) / top-k f32+s32 pairs crossing the mesh instead of the
+    f32 baseline. simulated=True lowers the legacy pod-local compressor
+    instead — the PR 5 regression, preserved as a measurable artifact.
+    Zero device allocation (eval_shape + AOT lower/compile)."""
+    from repro.distributed.compression import wire_format_for
     from repro.distributed.sharding import diloco_specs
+    from repro.train.diloco import (LINT_BUDGET, DiLoCoConfig, diloco_init,
+                                    outer_step, outer_wire_bytes)
 
     comp = None if compress in (None, "none") else compress
     cfg = registry.get_config(arch)
@@ -286,8 +299,13 @@ def run_outer_sync_cell(arch: str = "suncatcher-lm-100m",
     state_sh = shardings_for(
         diloco_specs(pspecs, compress=comp is not None, screen=False),
         d_sds, mesh)
+    wire = None
+    if comp is not None and not simulated:
+        wire = wire_format_for(params_sds, pspecs, mesh, n_pods,
+                               method=comp, topk_frac=topk_frac)
     fn = jax.jit(
-        lambda d: outer_step(d, dcfg, compress=comp, topk_frac=topk_frac),
+        lambda d: outer_step(d, dcfg, compress=comp, topk_frac=topk_frac,
+                             wire=wire),
         in_shardings=(state_sh,), out_shardings=state_sh)
 
     t0 = time.time()
@@ -298,43 +316,52 @@ def run_outer_sync_cell(arch: str = "suncatcher-lm-100m",
     coll = collective_bytes(hlo_txt)
     coll_la = collective_bytes_loop_aware(hlo_txt)
     predicted = outer_wire_bytes(params_sds, compress=comp,
-                                 topk_frac=topk_frac)
+                                 topk_frac=topk_frac, wire=wire)
+    factor = LINT_BUDGET["outer_wire_budget_factor"]
+    measured = coll["wire_bytes"]
+    ratio = measured / predicted if predicted else float("inf")
     result = {
         "arch": arch, "compress": compress or "none", "n_pods": n_pods,
+        "wire_format": wire is not None or comp is None,
         "mesh": dict(zip(mesh.axis_names, mesh.devices.shape)),
         "lower_compile_s": round(dt, 2),
         "params": cfg.param_count(),
         "predicted_outer_wire_bytes_per_pod": predicted,
+        "measured_over_predicted": round(ratio, 4),
+        "budget_factor": factor,
+        "within_budget": bool(measured <= factor * predicted),
         "collectives": coll,
         "collectives_loop_aware": coll_la,
     }
-    if comp is not None:
-        # the accounting's finding, made explicit: ef_roundtrip quantizes
+    if comp is not None and simulated:
+        # the PR 5 finding, preserved: the legacy ef_roundtrip quantizes
         # AND dequantizes pod-locally in-graph (a numerics simulation, not
-        # a wire format), so no s8/top-k payload ever crosses a
-        # collective — and its row-padding reshapes defeat the
+        # a wire format) and its row-padding reshapes defeat the
         # partitioner, so the lowered graph ALL-GATHERS the full f32
-        # delta per device before compressing. On the real mesh the
-        # "compressed" variant currently moves MORE collective bytes than
-        # the uncompressed masked mean; the gap to
-        # predicted_outer_wire_bytes_per_pod is what a sharded wire-format
-        # transfer would reclaim.
+        # delta per device before compressing — more collective bytes
+        # than the uncompressed masked mean.
         result["note"] = (
-            "measured collectives are f32 (and include a full-delta "
-            "all-gather per device): the in-graph error-feedback "
-            "roundtrip is a quantization simulation whose padding breaks "
-            "the pod-axis sharding; predicted_outer_wire_bytes_per_pod "
-            "is what a wire-format s8/top-k transfer would ship")
+            "legacy simulated compressor: measured collectives are f32 "
+            "(full-delta all-gather per device); the wire-format hop "
+            "(default) ships predicted_outer_wire_bytes_per_pod instead")
+    elif comp is not None:
+        result["note"] = (
+            "wire format: each device quantizes its own shard and the "
+            "compressed payload (s8 q + f32 scales for int8; f32 values "
+            "+ s32 lane-local indices for topk) is what the pod-axis "
+            "all-gather carries")
     os.makedirs(out_dir, exist_ok=True)
     tag = f"diloco_outer_{arch}_{compress or 'none'}_multi"
+    if simulated and comp is not None:
+        tag += "_simulated"
     with open(os.path.join(out_dir, tag + ".json"), "w") as f:
         json.dump(result, f, indent=1)
     if verbose:
         dts = coll["bytes_by_dtype"]
         print(f"[OK] {tag}: compile {dt:.0f}s, "
-              f"collective wire ~{coll['wire_bytes'] / 2**20:.1f} MiB "
-              f"(predicted payload/pod "
-              f"{predicted / 2**20:.1f} MiB), by dtype "
+              f"collective wire ~{measured / 2**20:.2f} MiB "
+              f"(predicted payload/pod {predicted / 2**20:.2f} MiB, "
+              f"{ratio:.2f}x, budget {factor}x), by dtype "
               + "; ".join(f"{k}: " + ", ".join(
                   f"{d}={b / 2**20:.2f}MiB" for d, b in sorted(v.items()))
                   for k, v in sorted(dts.items())),
@@ -358,11 +385,26 @@ def main():
     ap.add_argument("--compress", default="int8",
                     choices=["none", "int8", "topk"],
                     help="outer-sync wire compression (--outer-sync only)")
+    ap.add_argument("--simulated", action="store_true",
+                    help="lower the legacy pod-local simulated compressor "
+                         "instead of the wire-format hop (reproduces the "
+                         "PR 5 full-f32 regression; --outer-sync only)")
+    ap.add_argument("--check", action="store_true",
+                    help="exit nonzero if measured collective bytes exceed "
+                         "the declared budget factor x the outer_wire_bytes "
+                         "prediction (--outer-sync only; the CI gate)")
     args = ap.parse_args()
 
     if args.outer_sync:
-        run_outer_sync_cell(arch=args.arch or "suncatcher-lm-100m",
-                            compress=args.compress, out_dir=args.out)
+        result = run_outer_sync_cell(arch=args.arch or "suncatcher-lm-100m",
+                                     compress=args.compress,
+                                     out_dir=args.out,
+                                     simulated=args.simulated)
+        if args.check and not result["within_budget"]:
+            raise SystemExit(
+                f"outer-sync wire budget EXCEEDED: measured "
+                f"{result['measured_over_predicted']}x the predicted "
+                f"payload (budget {result['budget_factor']}x)")
         return
 
     if args.all:

@@ -1,0 +1,236 @@
+"""Compression unit + property tests: byte-formula pinning, roundtrip
+error bounds, EF behavior over repeated jitted rounds, and the padding
+edge cases (empty / sub-block / non-block-multiple / non-divisible top-k
+frac) — the padding edge is precisely what defeated the SPMD partitioner
+in the legacy single-lane layout (the PR 5 finding)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from _hyp import given, settings, st
+
+from repro.distributed.compression import (ef_roundtrip, ef_wire_roundtrip,
+                                           int8_bytes, int8_compress,
+                                           int8_decompress,
+                                           int8_wire_compress,
+                                           int8_wire_decompress, tiles_of,
+                                           topk_bytes, topk_compress,
+                                           topk_decompress, topk_wire_k,
+                                           untile, wire_leaf_bytes)
+
+
+class TestByteFormulas:
+    """Pin both byte formulas against hand-computed values — the ISL
+    budget model charges exactly these."""
+
+    def test_int8_bytes_hand_computed(self):
+        # 600 elements pad to 3 rows of 256: 768 s8 + 3 f32 scales
+        c = int8_compress(jnp.ones((600,), jnp.float32))
+        assert int8_bytes(c) == 3 * 256 + 3 * 4 == 780
+
+    def test_int8_bytes_exact_block_multiple(self):
+        c = int8_compress(jnp.ones((512,), jnp.float32))
+        assert int8_bytes(c) == 2 * 256 + 2 * 4
+
+    def test_topk_bytes_hand_computed_f32(self):
+        # k = max(1, int(600 * 0.01)) = 6: 6 f32 values + 6 s32 indices
+        c = topk_compress(jnp.ones((600,), jnp.float32), frac=0.01)
+        assert c["values"].shape == (6,)
+        assert topk_bytes(c) == 6 * 4 + 6 * 4 == 48
+
+    def test_topk_bytes_charges_value_dtype(self):
+        # the fixed accounting: bf16 values are 2 bytes each, indices
+        # stay s32 — the old hard-coded 4+4 formula overcharged this
+        c = topk_compress(jnp.ones((600,), jnp.bfloat16), frac=0.01)
+        assert c["values"].dtype == jnp.bfloat16
+        assert topk_bytes(c) == 6 * 2 + 6 * 4 == 36
+
+    def test_topk_bytes_min_one_element(self):
+        c = topk_compress(jnp.ones((10,), jnp.float32), frac=0.01)
+        assert c["values"].shape == (1,)
+        assert topk_bytes(c) == 8
+
+    def test_wire_leaf_bytes_int8_lanes(self):
+        # (2, 300) split into 2 lanes of 300: each pads to 2 rows of 256
+        # -> 2 lanes x 2 rows x (256 s8 + 4 scale)
+        assert wire_leaf_bytes((2, 300), (2, 1), "int8") == 2 * 2 * 260
+        # single lane: 600 pads to 3 rows (the per-lane padding differs
+        # from the whole-leaf padding — that IS the layout change)
+        assert wire_leaf_bytes((2, 300), (1, 1), "int8") == 3 * 260
+
+    def test_wire_leaf_bytes_topk_lanes(self):
+        # per-lane k: 2 lanes x max(1, int(150*0.01)) = 2x1 pairs of 8B
+        assert wire_leaf_bytes((2, 150), (2, 1), "topk",
+                               topk_frac=0.01) == 16
+        # single lane: k = int(300*0.01) = 3
+        assert wire_leaf_bytes((2, 150), (1, 1), "topk",
+                               topk_frac=0.01) == 24
+
+    def test_wire_leaf_bytes_none_is_f32(self):
+        assert wire_leaf_bytes((7, 11), (1, 1), None) == 4 * 77
+
+    def test_topk_wire_k(self):
+        assert topk_wire_k(0, 0.01) == 0
+        assert topk_wire_k(5, 0.01) == 1          # non-divisible frac
+        assert topk_wire_k(256, 0.01) == 2
+        assert topk_wire_k(1000, 0.013) == 13
+
+
+class TestRoundtripBounds:
+    @given(st.integers(min_value=1, max_value=1500),
+           st.integers(min_value=0, max_value=2**31 - 1))
+    @settings(max_examples=25, deadline=None)
+    def test_int8_roundtrip_error_bound(self, n, seed):
+        x = jax.random.normal(jax.random.PRNGKey(seed), (n,), jnp.float32)
+        sent = int8_decompress(int8_compress(x))
+        # absmax block quantization: |err| <= scale/2 = blockmax/254
+        bound = float(jnp.max(jnp.abs(x))) / 254.0 * (1.0 + 1e-5) + 1e-9
+        assert float(jnp.max(jnp.abs(sent - x))) <= bound
+
+    @given(st.integers(min_value=1, max_value=1500),
+           st.integers(min_value=0, max_value=2**31 - 1))
+    @settings(max_examples=25, deadline=None)
+    def test_topk_keeps_largest_magnitudes(self, n, seed):
+        x = jax.random.normal(jax.random.PRNGKey(seed), (n,), jnp.float32)
+        sent = np.asarray(topk_decompress(topk_compress(x, frac=0.05)))
+        k = max(1, int(n * 0.05))
+        kept = sent != 0
+        assert kept.sum() <= k       # ties/zeros can only reduce the count
+        if kept.sum() and (~kept).any():
+            assert np.abs(np.asarray(x))[kept].min() >= \
+                np.abs(np.asarray(x))[~kept].max() - 1e-7
+
+    @given(st.integers(min_value=1, max_value=1024),
+           st.sampled_from([(1,), (2,), (4,)]),
+           st.integers(min_value=0, max_value=2**31 - 1))
+    @settings(max_examples=25, deadline=None)
+    def test_wire_int8_error_bound_any_lanes(self, m_per_lane, counts, seed):
+        n = m_per_lane * counts[0]
+        x = jax.random.normal(jax.random.PRNGKey(seed), (n,), jnp.float32)
+        _, sent, resid = ef_wire_roundtrip(x, jnp.zeros_like(x), counts,
+                                           "int8")
+        bound = float(jnp.max(jnp.abs(x))) / 254.0 * (1.0 + 1e-5) + 1e-9
+        assert float(jnp.max(jnp.abs(sent - x))) <= bound
+        np.testing.assert_array_equal(np.asarray(resid),
+                                      np.asarray(x - sent))
+
+
+class TestErrorFeedback:
+    @pytest.mark.parametrize("method", ["int8", "topk"])
+    def test_ef_unbiased_over_repeated_rounds_under_jit(self, method):
+        """EF makes the compressor unbiased over time: transmitting the
+        SAME value repeatedly, the running mean of what was decoded
+        converges to the true value (the residual is bounded, so its
+        telescoped contribution vanishes as 1/N)."""
+        x = jax.random.normal(jax.random.PRNGKey(0), (700,), jnp.float32)
+
+        @jax.jit
+        def one_round(ef):
+            _, sent, resid = ef_wire_roundtrip(x, ef, (4,), method,
+                                               topk_frac=0.05)
+            return sent, resid
+
+        n_rounds = 64
+        ef = jnp.zeros_like(x)
+        acc = jnp.zeros_like(x)
+        for _ in range(n_rounds):
+            sent, ef = one_round(ef)
+            acc = acc + sent
+        # telescoping: sum(sent) = N*x - ef_N exactly (up to fp summation)
+        np.testing.assert_allclose(np.asarray(acc + ef),
+                                   np.asarray(n_rounds * x),
+                                   rtol=1e-4, atol=1e-3)
+        err = np.abs(np.asarray(acc / n_rounds - x)).max()
+        assert err <= np.abs(np.asarray(ef)).max() / n_rounds + 1e-5
+
+    @pytest.mark.parametrize("method", ["int8", "topk"])
+    def test_ef_invariant_sent_plus_resid(self, method):
+        x = jax.random.normal(jax.random.PRNGKey(1), (33, 12), jnp.float32)
+        e = 0.1 * jax.random.normal(jax.random.PRNGKey(2), (33, 12),
+                                    jnp.float32)
+        _, sent, resid = ef_wire_roundtrip(x, e, (3, 2), method)
+        np.testing.assert_array_equal(np.asarray(resid),
+                                      np.asarray(x + e - sent))
+
+
+class TestPaddingEdges:
+    """The edges that broke the partitioner, now explicit contracts."""
+
+    @pytest.mark.parametrize("n", [0, 1, 5, 255, 256, 257, 300, 512, 1000])
+    def test_int8_wire_any_size(self, n):
+        x = jnp.arange(n, dtype=jnp.float32) - n / 2
+        q, scale = int8_wire_compress(x.reshape(1, -1))
+        rows = -(-n // 256)
+        assert q.shape == (1, rows, 256) and scale.shape == (1, rows, 1)
+        sent = int8_wire_decompress(q, scale, n)
+        assert sent.shape == (1, n)
+        if n:
+            bound = float(jnp.max(jnp.abs(x))) / 254.0 * (1 + 1e-5) + 1e-9
+            assert float(jnp.max(jnp.abs(sent[0] - x))) <= bound
+
+    @pytest.mark.parametrize("method", ["int8", "topk"])
+    def test_empty_leaf_roundtrip(self, method):
+        x = jnp.zeros((0,), jnp.float32)
+        _, sent, resid = ef_wire_roundtrip(x, jnp.zeros_like(x), (1,),
+                                           method)
+        assert sent.shape == (0,) and resid.shape == (0,)
+
+    def test_topk_nondivisible_frac(self):
+        # 5 elements at frac=0.01 -> k clamps to 1, never 0
+        x = jnp.asarray([0.1, -3.0, 0.2, 0.0, 1.0], jnp.float32)
+        _, sent, _ = ef_wire_roundtrip(x, jnp.zeros_like(x), (1,), "topk",
+                                       topk_frac=0.01)
+        np.testing.assert_array_equal(np.asarray(sent),
+                                      [0.0, -3.0, 0.0, 0.0, 0.0])
+
+    def test_scalar_leaf(self):
+        x = jnp.asarray(2.5, jnp.float32)
+        _, sent, resid = ef_wire_roundtrip(x, jnp.zeros_like(x), (), "int8")
+        assert sent.shape == ()
+        assert abs(float(sent) - 2.5) <= 2.5 / 254.0 * (1 + 1e-5) + 1e-9
+
+
+class TestLaneLayout:
+    @given(st.sampled_from([((4,), (2,)), ((6, 4), (3, 2)),
+                            ((6, 4), (1, 4)), ((2, 3, 8), (2, 1, 4)),
+                            ((8,), (1,)), ((5, 7), (1, 1))]),
+           st.integers(min_value=0, max_value=2**31 - 1))
+    @settings(max_examples=20, deadline=None)
+    def test_untile_inverts_tiles(self, shape_counts, seed):
+        shape, counts = shape_counts
+        x = jax.random.normal(jax.random.PRNGKey(seed), shape, jnp.float32)
+        t = tiles_of(x, counts)
+        assert t.shape == (int(np.prod(counts)),
+                           int(np.prod(shape) // np.prod(counts)))
+        np.testing.assert_array_equal(np.asarray(untile(t, counts, shape)),
+                                      np.asarray(x))
+
+    def test_lane_matches_shard_slice(self):
+        # lane j must hold exactly device j's shard of a P("x", None) leaf
+        x = jnp.arange(24, dtype=jnp.float32).reshape(4, 6)
+        t = tiles_of(x, (2, 1))
+        np.testing.assert_array_equal(np.asarray(t[0]),
+                                      np.asarray(x[:2].reshape(-1)))
+        np.testing.assert_array_equal(np.asarray(t[1]),
+                                      np.asarray(x[2:].reshape(-1)))
+        # and of a P(None, "x") leaf
+        t2 = tiles_of(x, (1, 2))
+        np.testing.assert_array_equal(np.asarray(t2[0]),
+                                      np.asarray(x[:, :3].reshape(-1)))
+
+    @pytest.mark.parametrize("method", ["int8", "topk"])
+    @pytest.mark.parametrize("n", [5, 256, 300, 1000])
+    def test_single_lane_wire_matches_legacy_bitwise(self, method, n):
+        """counts=(1,) wire == the legacy single-lane compressor, bit for
+        bit — the wire hop is a layout change, not a numerics change."""
+        x = jax.random.normal(jax.random.PRNGKey(n), (n,), jnp.float32)
+        e = 0.01 * jax.random.normal(jax.random.PRNGKey(n + 1), (n,),
+                                     jnp.float32)
+        kw = {"frac": 0.01} if method == "topk" else {}
+        _, sent_l, resid_l = ef_roundtrip(x, e, method, **kw)
+        _, sent_w, resid_w = ef_wire_roundtrip(x, e, (1,), method,
+                                               topk_frac=0.01)
+        np.testing.assert_array_equal(np.asarray(sent_l),
+                                      np.asarray(sent_w))
+        np.testing.assert_array_equal(np.asarray(resid_l),
+                                      np.asarray(resid_w))

@@ -180,3 +180,14 @@ class TestBudgets:
         assert proc.returncode == 1, proc.stdout + proc.stderr
         assert "BG002" in proc.stdout
         assert "all-gather" in proc.stdout
+
+    def test_wire_format_int8_outer_sync_passes_budget(self):
+        # the ENFORCED flip of the regression above: the wire-format
+        # shard_map hop ships the s8 payload, so the same 2x-of-compressed
+        # budget that catches the legacy path passes here.
+        proc = _run_cli("--budgets", "--only", "diloco-outer-sync-int8")
+        assert proc.returncode == 0, proc.stdout + proc.stderr
+
+    def test_wire_format_topk_outer_sync_passes_budget(self):
+        proc = _run_cli("--budgets", "--only", "diloco-outer-sync-topk")
+        assert proc.returncode == 0, proc.stdout + proc.stderr

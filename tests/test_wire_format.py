@@ -1,0 +1,206 @@
+"""Wire-format outer sync: the compressed payload is THE thing that
+crosses the pod axis, and switching to it changes the layout, never the
+numerics.
+
+Three layers of proof:
+  - in-process (1 CPU device): the meshed fused round — which takes the
+    wire-format shard_map hop — is bit-identical to the legacy pod-local
+    simulated-compression round, masked pods included (single-lane wire
+    == legacy, by construction);
+  - subprocess on 8 forced devices, (2,2,2) mesh: multi-lane (S>1) wire
+    hop vs the lane-layout simulation, executed, bit-identical across
+    consecutive EF rounds (tests/_wire_workers.py);
+  - subprocess on 512 forced devices, the (2,16,16) production mesh:
+    `dryrun --outer-sync --check` measures pod-axis collective bytes out
+    of the compiled HLO and holds them to 2x the `outer_wire_bytes`
+    prediction for int8 AND topk AND none — the PR 5 dryrun archaeology
+    as a permanent tier-1 gate — while the legacy simulated path still
+    EXCEEDS the budget (the regression stays demonstrable).
+"""
+import json
+import os
+import subprocess
+import sys
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.models import registry
+from repro.train import (DiLoCoConfig, SyntheticLM, TrainConfig, diloco_init,
+                         make_diloco_round, outer_step)
+from repro.train.diloco import outer_wire_bytes
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def _micro_setup(n_pods=2, inner_steps=4):
+    from repro.train import AdamWConfig, DataConfig
+    cfg = registry.get_reduced_config(
+        "suncatcher-lm-100m", n_layers=2, d_model=32, n_heads=2,
+        n_kv_heads=1, d_ff=64, vocab_size=256)
+    fns = registry.model_fns(cfg)
+    tcfg = TrainConfig(adamw=AdamWConfig(lr=3e-3), warmup_steps=2,
+                       total_steps=100)
+    dcfg = DiLoCoConfig(n_pods=n_pods, inner_steps=inner_steps)
+    data = SyntheticLM(DataConfig(vocab_size=cfg.vocab_size, seq_len=8,
+                                  global_batch=2))
+    params = fns.init(jax.random.PRNGKey(0), cfg)
+    return cfg, fns, tcfg, dcfg, data, params
+
+
+def _assert_trees_equal(a, b, keys=None):
+    if keys is not None:
+        a = {k: a[k] for k in keys}
+        b = {k: b[k] for k in keys}
+    la, lb = jax.tree.leaves(a), jax.tree.leaves(b)
+    assert len(la) == len(lb)
+    for x, y in zip(la, lb):
+        np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
+
+
+def _sub_env():
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(REPO, "src") + os.pathsep + \
+        env.get("PYTHONPATH", "")
+    return env
+
+
+class TestWireRoundBitIdentity:
+    """Satellite 3: wire-format compressed round vs the old pod-local
+    simulated-compression round decode to IDENTICAL outer params."""
+
+    @pytest.mark.parametrize("method", ["int8", "topk"])
+    @pytest.mark.parametrize("mask", [(1.0, 1.0), (1.0, 0.0)])
+    def test_meshed_wire_round_matches_legacy_round(self, method, mask):
+        from repro.launch.mesh import make_test_mesh
+        cfg, fns, tcfg, dcfg, data, params = _micro_setup()
+        batches = data.batch_block(
+            np.arange(dcfg.n_pods * dcfg.inner_steps).reshape(dcfg.n_pods,
+                                                              -1))
+        pod_mask = jnp.asarray(mask, jnp.float32)
+        thr = jnp.asarray([3.0, 10.0], jnp.float32)
+
+        # legacy: mesh=None routes outer_step through the old pod-local
+        # simulated compressor (single-lane layout)
+        legacy = make_diloco_round(cfg, fns, tcfg, dcfg, compress=method,
+                                   donate=False)
+        ref, _ = legacy(diloco_init(params, dcfg, compress=method), batches,
+                        pod_mask, thr)
+
+        # meshed: make_diloco_round builds a WireFormat and takes the
+        # shard_map wire hop — on the container's test mesh the lanes are
+        # single-lane, so bitwise equality to legacy is the contract
+        meshed = make_diloco_round(cfg, fns, tcfg, dcfg, compress=method,
+                                   mesh=make_test_mesh(), donate=False)
+        got, _ = meshed(diloco_init(params, dcfg, compress=method), batches,
+                        pod_mask, thr)
+        _assert_trees_equal(got, ref)
+        # EF engaged on both paths
+        assert any(float(jnp.abs(x).max()) > 0
+                   for x in jax.tree.leaves(got["pod_ef"]))
+
+    @pytest.mark.parametrize("method", ["int8", "topk"])
+    def test_outer_step_wire_sim_matches_legacy(self, method):
+        """The lane-layout simulation (wire with mesh=None) equals the
+        legacy compressor whenever the layout is single-lane — outer_step
+        level, masked pod included."""
+        from repro.distributed.compression import wire_format_for
+        from repro.distributed.sharding import param_specs
+        from repro.launch.mesh import make_test_mesh
+        cfg, fns, _, dcfg, _, params = _micro_setup()
+        mesh = make_test_mesh()
+        fmt = wire_format_for(params, param_specs(cfg, fsdp=True), mesh,
+                              dcfg.n_pods, method=method)
+        assert all(all(c == 1 for c in l.counts) for l in jax.tree.leaves(
+            fmt.layout, is_leaf=lambda x: hasattr(x, "counts")))
+
+        d0 = diloco_init(params, dcfg, compress=method)
+        key = jax.random.PRNGKey(5)
+        d0 = {**d0, "pod_params": jax.tree.map(
+            lambda x: x + 0.01 * jax.random.normal(
+                jax.random.fold_in(key, x.size), x.shape,
+                jnp.float32).astype(x.dtype), d0["pod_params"])}
+        mask = jnp.asarray([1.0, 0.0])
+        legacy = jax.jit(partial(outer_step, dcfg=dcfg, pod_mask=mask,
+                                 compress=method))(d0)
+        wired = jax.jit(partial(outer_step, dcfg=dcfg, pod_mask=mask,
+                                wire=fmt.simulated()))(d0)
+        _assert_trees_equal(wired, legacy)
+        # the masked pod's EF residual came through untouched
+        for a, b in zip(jax.tree.leaves(d0["pod_ef"]),
+                        jax.tree.leaves(wired["pod_ef"])):
+            np.testing.assert_array_equal(np.asarray(a)[1],
+                                          np.asarray(b)[1])
+
+    def test_wire_prediction_matches_single_lane_legacy(self):
+        """On an all-single-lane layout the wire byte accounting must
+        agree with the legacy static formula exactly."""
+        from repro.distributed.compression import wire_format_for
+        from repro.distributed.sharding import param_specs
+        from repro.launch.mesh import make_test_mesh
+        cfg, fns, _, dcfg, _, params = _micro_setup()
+        mesh = make_test_mesh()
+        for method in ("int8", "topk"):
+            fmt = wire_format_for(params, param_specs(cfg, fsdp=True), mesh,
+                                  dcfg.n_pods, method=method)
+            assert outer_wire_bytes(params, compress=method, wire=fmt) == \
+                outer_wire_bytes(params, compress=method)
+
+
+class TestWireMultiDevice:
+    """S>1 lanes need real shards: 8 forced CPU devices in a subprocess
+    (the device count pins at first jax import in this process)."""
+
+    def test_wire_vs_sim_exec_bit_identity_2x2x2(self):
+        proc = subprocess.run(
+            [sys.executable, os.path.join(REPO, "tests", "_wire_workers.py")],
+            capture_output=True, text=True, env=_sub_env(), timeout=580)
+        assert proc.returncode == 0, proc.stdout + proc.stderr
+        assert "WIRE-WORKER-OK" in proc.stdout, proc.stdout
+
+
+class TestWireBytesRegression:
+    """Satellite 2: the (2,16,16) production-mesh lowering, measured —
+    pod-axis collective bytes <= 2x `outer_wire_bytes` for every mode."""
+
+    @pytest.mark.parametrize("compress", ["none", "int8", "topk"])
+    def test_dryrun_outer_sync_within_budget(self, compress, tmp_path):
+        proc = subprocess.run(
+            [sys.executable, "-m", "repro.launch.dryrun", "--outer-sync",
+             "--compress", compress, "--check", "--out", str(tmp_path)],
+            capture_output=True, text=True, env=_sub_env(), timeout=580)
+        assert proc.returncode == 0, proc.stdout + proc.stderr
+        tag = f"diloco_outer_suncatcher-lm-100m_{compress}_multi.json"
+        result = json.load(open(tmp_path / tag))
+        assert result["within_budget"] is True
+        assert result["measured_over_predicted"] <= result["budget_factor"]
+        assert result["wire_format"] is True
+        gathered = result["collectives"]["bytes_by_dtype"].get(
+            "all-gather", {})
+        if compress == "int8":
+            # the s8 payload is what crosses the wire, and it dominates
+            # its f32 scale sidecar
+            assert gathered.get("s8", 0) > gathered.get("f32", 0) > 0
+        elif compress == "topk":
+            assert gathered.get("s32", 0) > 0
+
+    def test_dryrun_simulated_regression_exceeds_budget(self, tmp_path):
+        """The legacy path must KEEP failing the same gate — losing this
+        failure means the budget no longer measures anything."""
+        proc = subprocess.run(
+            [sys.executable, "-m", "repro.launch.dryrun", "--outer-sync",
+             "--compress", "int8", "--simulated", "--check", "--out",
+             str(tmp_path)],
+            capture_output=True, text=True, env=_sub_env(), timeout=580)
+        assert proc.returncode != 0
+        assert "EXCEEDED" in proc.stdout + proc.stderr
+        tag = "diloco_outer_suncatcher-lm-100m_int8_multi_simulated.json"
+        result = json.load(open(tmp_path / tag))
+        assert result["within_budget"] is False
+        assert result["wire_format"] is False
+        gathered = result["collectives"]["bytes_by_dtype"].get(
+            "all-gather", {})
+        assert gathered.get("s8", 0) == 0      # nothing compressed moved
