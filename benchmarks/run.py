@@ -20,6 +20,9 @@ BENCH_SCHEMAS = {
     "BENCH_serve.json": frozenset({
         "tokens_per_s", "seed_loop_tokens_per_s", "speedup_vs_seed_loop",
         "host_syncs_per_token", "traces",
+        "paged_slots", "paged_tokens_per_s", "paged_vs_fused_tokens_ratio",
+        "paged_kv_bytes_ratio", "paged_peak_live_tokens_frac",
+        "paged_bit_identical", "paged_admission_stalls", "paged_traces",
     }),
     "BENCH_train.json": frozenset({
         "fused_round_ms", "seed_loop_round_ms", "speedup_vs_seed_loop",

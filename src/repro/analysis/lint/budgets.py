@@ -226,7 +226,8 @@ def _run_engine(spec: BudgetSpec) -> list[Finding]:
     cfg = registry.get_reduced_config(arch, **overrides)
     fns = registry.model_fns(cfg)
     params = fns.init(jax.random.PRNGKey(0), cfg)
-    ecfg = EngineConfig(max_batch=2, max_len=64)
+    ecfg = EngineConfig(max_batch=2, max_len=64,
+                        **spec.params.get("engine", {}))
     eng = ServingEngine(cfg, fns, params, ecfg)
 
     findings: list[Finding] = []
@@ -255,11 +256,13 @@ def _run_engine(spec: BudgetSpec) -> list[Finding]:
     for b in eng.buckets():
         toks = jnp.zeros((nb, b), jnp.int32)
         i32 = lambda: jnp.zeros((nb,), jnp.int32)
+        page_ops = {"pf_entry": i32(), "pf_n": i32(),
+                    "pf_store": i32(), "pf_store_n": i32()}
         prefill_hlo = (
             eng._prefill.lower(
                 eng.params, eng.cache, eng.state, toks, i32(),
                 jnp.zeros((nb,), bool), jnp.zeros((nb,), jnp.float32),
-                i32(), i32(), i32(),
+                i32(), i32(), i32(), page_ops,
             )
             .compile()
             .as_text()
@@ -274,7 +277,7 @@ def _run_engine(spec: BudgetSpec) -> list[Finding]:
     export_hlo = (
         eng._export.lower(eng.cache, eng.state, b_idx, b_mask).compile().as_text()
     )
-    bcache, bstate, _ = jax.eval_shape(
+    bcache, bstate, _, _ = jax.eval_shape(
         eng._export_impl, eng.cache, eng.state, b_idx, b_mask
     )
     import_hlo = (
@@ -296,9 +299,12 @@ def _run_engine(spec: BudgetSpec) -> list[Finding]:
         lambda c, s, i, st: eng._delta_export_impl(c, s, i, st, width),
         eng.cache, eng.state, b_idx, starts,
     )
+    # the standby store mirrors the WIRE format (dense rows even for a
+    # paged engine), so lower against spec.init_standby's shape
+    sb_cache = jax.eval_shape(eng.spec.init_standby, eng.cache)
     standby_hlo = (
         eng._standby_apply.lower(
-            eng.cache, eng.state, bcache, bstate, b_idx, starts, b_mask
+            sb_cache, eng.state, bcache, bstate, b_idx, starts, b_mask
         )
         .compile()
         .as_text()
@@ -390,6 +396,18 @@ BUDGETS: dict[str, BudgetSpec] = {
             runner=_run_engine,
             max_host_callbacks=0,
             max_traces=4,  # 3 pow2 prefill buckets (16/32/64) + 1 decode block
+        ),
+        BudgetSpec(
+            name="engine-serve-paged",
+            runner=_run_engine,
+            max_host_callbacks=0,
+            max_traces=4,
+            # the PAGED KV layout through the same jit roots: the
+            # in-graph page allocator (free-list pops in advance/prefill,
+            # refcounted frees in release) must lower with ZERO host
+            # callbacks — allocation decisions never round-trip to the
+            # host — and the pow2 trace bound is unchanged
+            params={"engine": {"page_size": 16, "prefix_cache": 4}},
         ),
         BudgetSpec(
             name="engine-serve-rglru",

@@ -79,10 +79,12 @@ STATE_SCOPED_MODULES: tuple[str, ...] = (
 )
 
 # Family-private decode-state leaf names (the transformer KV cache, the
-# RG-LRU carry + local-attention ring, the xLSTM memories).  Only
-# models/decode_state.py and the model modules may address these.
+# RG-LRU carry + local-attention ring, the xLSTM memories, the paged
+# KV pool + page-table/allocator leaves).  Only models/decode_state.py
+# and the model modules may address these.
 STATE_LAYOUT_KEYS: frozenset[str] = frozenset(
-    {"k", "v", "rec_a", "rec_b", "attn", "tail", "slstm", "mlstm"}
+    {"k", "v", "rec_a", "rec_b", "attn", "tail", "slstm", "mlstm",
+     "kp", "vp", "ptab", "free", "top", "ref", "pf_tab", "pf_len"}
 )
 
 # Names that consume randomness from a key.  A raw (never-folded) key

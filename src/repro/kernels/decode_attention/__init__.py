@@ -1,4 +1,7 @@
 from .ops import decode_attention
+from .paged import (gather_pages, paged_decode_attention,
+                    paged_decode_attention_reference)
 from .ref import decode_attention_reference
 
-__all__ = ["decode_attention", "decode_attention_reference"]
+__all__ = ["decode_attention", "decode_attention_reference", "gather_pages",
+           "paged_decode_attention", "paged_decode_attention_reference"]

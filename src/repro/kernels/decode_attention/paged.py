@@ -1,0 +1,177 @@
+"""Paged decode attention: the kernel walks a per-row page table instead of
+a contiguous per-slot cache row.
+
+KV lives in a shared pool of physical pages (P+1, page_size, Hkv, dh) — the
+last page id (P) is a trash page that absorbs writes/reads for unmapped
+table entries. Each batch row owns a (max_pages,) int32 row of the page
+table; entries past ceil(kv_len / page_size) are the trash id. HBM cost now
+tracks *allocated* pages, not max_len: the pool is sized for live tokens
+across the whole batch, and prefix-shared pages appear in several rows'
+tables at once.
+
+Grid = (B, H, max_pages) with the page axis innermost/sequential. kv_lens
+and the page table ride in as scalar-prefetch operands
+(`PrefetchScalarGridSpec`), so the k/v index_map resolves the physical page
+id *before* the DMA is issued — the pool is streamed through the same
+online-softmax VMEM scratch as the dense kernel. `pl.when` skips pages past
+a row's kv_len, and because every unmapped entry aliases the one trash
+page, the pipeline's consecutive-identical-block dedup collapses the
+unmapped tail into a single redundant fetch.
+
+Masking is bit-compatible with the dense kernel: scores past kv_len go to
+-1e30 before the exp, so trash-page garbage contributes exact 0.0 to the
+softmax and paged output == dense output bitwise for the same cache
+contents.
+
+Hardware caveat (same as kernel.py): this container only executes interpret
+mode; on real TPU the (1, page_size, 1, dh) block wants page_size >= the
+sublane tile and the scalar-prefetch table in SMEM, which needs validation
+before trusting pool-streaming throughput.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.kernels._compat import CompilerParams as _CompilerParams
+
+from .ref import decode_attention_reference
+
+NEG_INF = -1e30
+
+
+def _paged_decode_kernel(lens_ref, ptab_ref, q_ref, k_ref, v_ref, o_ref,
+                         acc_ref, m_ref, l_ref, *, page_size: int,
+                         sm_scale: float):
+    bi = pl.program_id(0)
+    pi = pl.program_id(2)
+    npg = pl.num_programs(2)
+
+    @pl.when(pi == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    kv_len = lens_ref[bi]                  # this row's valid logical prefix
+    k_start = pi * page_size
+
+    @pl.when(k_start < kv_len)             # skip pages past the row's length
+    def _compute():
+        q = q_ref[0, 0].astype(jnp.float32) * sm_scale      # (1, dh)
+        k = k_ref[0, :, 0].astype(jnp.float32)              # (ps, dh)
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32)  # (1,ps)
+        kpos = k_start + jax.lax.broadcasted_iota(jnp.int32, (1, page_size),
+                                                  1)
+        s = jnp.where(kpos < kv_len, s, NEG_INF)
+        m_prev = m_ref[...]
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=1))
+        p = jnp.exp(s - m_new[:, None])
+        alpha = jnp.exp(m_prev - m_new)
+        l_ref[...] = l_ref[...] * alpha + jnp.sum(p, axis=1)
+        v = v_ref[0, :, 0].astype(jnp.float32)
+        acc_ref[...] = acc_ref[...] * alpha[:, None] + jax.lax.dot_general(
+            p, v, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)
+        m_ref[...] = m_new
+
+    @pl.when(pi == npg - 1)
+    def _finalize():
+        # kv_len == 0 rows never ran _compute: emit exact zeros, not 0/eps
+        out = acc_ref[...] / jnp.maximum(l_ref[...], 1e-30)[:, None]
+        o_ref[0, 0] = jnp.where(kv_len > 0, out, 0.0).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def paged_decode_attention_fwd(q, k_pages, v_pages, page_table, kv_lens, *,
+                               interpret: bool = False):
+    """q: (B, H, dh); k/v_pages: (P+1, page_size, Hkv, dh) pool (last page
+    is trash); page_table: (B, max_pages) int32 physical page ids (unmapped
+    entries point at the trash page); kv_lens: (B,) int32 logical lengths
+    (a scalar broadcasts to all rows)."""
+    b, h, dh = q.shape
+    ps, hkv = k_pages.shape[1], k_pages.shape[2]
+    max_pages = page_table.shape[1]
+    assert h % hkv == 0
+    group = h // hkv
+    q4 = q.reshape(b, h, 1, dh)
+    kv_lens = jnp.broadcast_to(
+        jnp.asarray(kv_lens, jnp.int32).reshape(-1), (b,))
+    page_table = page_table.astype(jnp.int32)
+
+    kernel = functools.partial(_paged_decode_kernel, page_size=ps,
+                               sm_scale=dh ** -0.5)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(b, h, max_pages),
+        in_specs=[
+            pl.BlockSpec((1, 1, 1, dh),
+                         lambda bi, hi, pi, lens, ptab: (bi, hi, 0, 0)),
+            pl.BlockSpec((1, ps, 1, dh),
+                         lambda bi, hi, pi, lens, ptab:
+                         (ptab[bi, pi], 0, hi // group, 0)),
+            pl.BlockSpec((1, ps, 1, dh),
+                         lambda bi, hi, pi, lens, ptab:
+                         (ptab[bi, pi], 0, hi // group, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, 1, dh),
+                               lambda bi, hi, pi, lens, ptab:
+                               (bi, hi, 0, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((1, dh), jnp.float32),
+            pltpu.VMEM((1,), jnp.float32),
+            pltpu.VMEM((1,), jnp.float32),
+        ],
+    )
+    out = pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((b, h, 1, dh), q.dtype),
+        compiler_params=_CompilerParams(
+            dimension_semantics=("parallel", "parallel", "arbitrary")),
+        interpret=interpret,
+    )(kv_lens, page_table, q4.reshape(b, h, 1, dh),
+      k_pages.reshape(-1, ps, hkv, dh), v_pages.reshape(-1, ps, hkv, dh))
+    return out.reshape(b, h, dh)
+
+
+def gather_pages(pool, page_table):
+    """Materialize the logical dense layout from a pool + page table.
+
+    pool: (P+1, page_size, Hkv, dh); page_table: (B, max_pages) int32.
+    Returns (B, max_pages * page_size, Hkv, dh) — the reference/CPU path;
+    the pallas kernel never builds this.
+    """
+    b, mp = page_table.shape
+    ps = pool.shape[1]
+    dense = jnp.take(pool, page_table, axis=0)      # (B, MP, ps, Hkv, dh)
+    return dense.reshape(b, mp * ps, *pool.shape[2:])
+
+
+def paged_decode_attention_reference(q, k_pages, v_pages, page_table,
+                                     kv_len):
+    """Pure-jnp oracle: gather pages to the logical dense layout and run the
+    dense reference. Positions >= kv_len (incl. all trash-page content) are
+    masked to exact-zero probability, so the result is independent of pool
+    garbage."""
+    return decode_attention_reference(
+        q, gather_pages(k_pages, page_table),
+        gather_pages(v_pages, page_table), kv_len)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def paged_decode_attention(q, k_pages, v_pages, page_table, kv_len, *,
+                           interpret: bool = False):
+    """q: (B, 1, H, dh) or (B, H, dh); pools: (P+1, page_size, Hkv, dh);
+    page_table: (B, max_pages); kv_len: scalar or (B,)."""
+    squeeze = q.ndim == 4
+    if squeeze:  # repro-lint: allow[RT001] rank normalization is trace-time static; two shapes total
+        q = q[:, 0]
+    out = paged_decode_attention_fwd(q, k_pages, v_pages, page_table,
+                                     kv_len, interpret=interpret)
+    return out[:, None] if squeeze else out

@@ -71,6 +71,19 @@ def build_parser():
                     help="KV-cache length per slot")
     ap.add_argument("--decode-block", type=int, default=8,
                     help="tokens decoded per host round-trip")
+    ap.add_argument("--page-size", type=int, default=0,
+                    help="paged KV cache page size in tokens (0 = dense "
+                         "per-slot rows); > 0 stores KV in a shared pool "
+                         "of pages behind per-row page tables so HBM "
+                         "tracks live tokens, not slots x max-len")
+    ap.add_argument("--pool-pages", type=int, default=None,
+                    help="physical page-pool size (paged only; default "
+                         "sizes the pool dense-equivalent) — undersize "
+                         "it to oversubscribe slots against live tokens")
+    ap.add_argument("--prefix-cache", type=int, default=0,
+                    help="prefix-cache entries (paged only; 0 = off): "
+                         "identical whole-page prompt heads share "
+                         "physical pages via refcounts")
     ap.add_argument("--temperature", type=float, default=0.0)
     ap.add_argument("--full", action="store_true")
     ap.add_argument("--replicas", type=int, default=1,
@@ -113,7 +126,10 @@ def build_plane(builds, args):
     """Engine replicas behind a ConstellationRouter: `args.replicas` pods
     per (cfg, fns, params) build — one arch group each."""
     ecfg = EngineConfig(max_batch=args.slots, max_len=args.max_len,
-                        decode_block=args.decode_block)
+                        decode_block=args.decode_block,
+                        page_size=args.page_size,
+                        pool_pages=args.pool_pages,
+                        prefix_cache=args.prefix_cache)
     engines = [ServingEngine(cfg, fns, params, ecfg)
                for cfg, fns, params in builds
                for _ in range(args.replicas)]
@@ -163,7 +179,10 @@ def main():
         eng = ServingEngine(cfg, fns, params,
                             EngineConfig(max_batch=args.slots,
                                          max_len=args.max_len,
-                                         decode_block=args.decode_block))
+                                         decode_block=args.decode_block,
+                                         page_size=args.page_size,
+                                         pool_pages=args.pool_pages,
+                                         prefix_cache=args.prefix_cache))
     rng = np.random.default_rng(0)
     reqs = []
     for uid in range(args.requests):
@@ -227,6 +246,15 @@ def main():
               f"{s['host_syncs'] / max(s['tokens'], 1):.3f} "
               f"host-syncs/token | {eng.trace_count()} traces "
               f"(buckets={eng.buckets()}, decode_block={args.decode_block})")
+        if args.page_size:
+            ps = eng.page_stats()
+            print(f"  paged KV: {ps['pool_pages']} pool pages x "
+                  f"{ps['page_size']} toks | "
+                  f"{s['pages_reserved']} reserved, "
+                  f"{s['pages_shared']} prefix-shared | "
+                  f"{s['prefix_hits']} prefix hits / "
+                  f"{s['prefix_stores']} stores | "
+                  f"{s['admission_stalls']} admission stalls")
     if waves > 1 and trace_marks[0] >= 0 \
             and trace_marks[-1] != trace_marks[0]:
         raise SystemExit(

@@ -203,7 +203,27 @@ def attention_chunked(q, k, v, *, causal: bool = True,
     return out.transpose(0, 2, 1, 3).astype(v.dtype)
 
 
-def attention(q, k, v, *, impl: str = "ref", **kw):
+def attention(q, k, v, *, impl: str = "ref", page_table=None, **kw):
+    if page_table is not None:
+        # paged decode: k/v are (P+1, page_size, Hkv, dh) pools and
+        # page_table is the (B, max_pages) per-row physical map. The pallas
+        # kernel walks the table directly (cost tracks allocated pages);
+        # the ref fallback gathers the logical dense layout — positions
+        # >= kv_len mask to exact-zero probability either way, so paged ==
+        # dense bitwise for identical cache contents.
+        assert q.shape[1] == 1 and kw.get("window") is None \
+            and kw.get("kv_len") is not None
+        mode = os.environ.get("REPRO_DECODE_ATTN", "auto")
+        if impl == "pallas" and (mode == "interpret" or (
+                mode == "auto" and jax.default_backend() == "tpu")):
+            from repro.kernels.decode_attention.paged import \
+                paged_decode_attention
+            return paged_decode_attention(q, k, v, page_table, kw["kv_len"],
+                                          interpret=mode == "interpret")
+        from repro.kernels.decode_attention.paged import gather_pages
+        kw.pop("kv_block", None)
+        return attention_ref(q, gather_pages(k, page_table),
+                             gather_pages(v, page_table), **kw)
     if q.shape[1] == 1:
         # decode: one query row. impl == "pallas" on TPU streams the cache
         # through the ragged decode kernel (per-row kv_len, model layout —

@@ -241,7 +241,21 @@ def _block(cfg: TransformerConfig, x, lp, cos, sin, *, q_offset=0,
         q, k = apply_rope(q, cos, sin), apply_rope(k, cos, sin)
 
     new_cache = None
-    if cache is not None:
+    page_table = None
+    if cache is not None and len(cache) == 3:
+        # paged decode (s == 1): k/v pools (P+1, ps, Hkv, dh) + per-row
+        # page table. Each row writes its token at (table[pos // ps],
+        # pos % ps); rows with no mapped page there (inactive slots) land
+        # on the trash page. Active rows always write distinct pages —
+        # prefix-shared pages only cover positions < prompt_len, below any
+        # decode write.
+        kp, vp, page_table = cache
+        ps = kp.shape[1]
+        pids = page_table[jnp.arange(b), q_offset // ps]
+        kp = kp.at[pids, q_offset % ps].set(k[:, 0].astype(kp.dtype))
+        vp = vp.at[pids, q_offset % ps].set(v[:, 0].astype(vp.dtype))
+        k, v, new_cache = kp, vp, (kp, vp)
+    elif cache is not None:
         ck, cv = cache
         if jnp.ndim(q_offset) == 1:   # per-slot positions (continuous batching)
             rows = jnp.arange(b)[:, None]
@@ -267,7 +281,7 @@ def _block(cfg: TransformerConfig, x, lp, cos, sin, *, q_offset=0,
         # mask still needs each query's absolute position
         attn = attention(q, k, v, impl=cfg.attn_impl, causal=s > 1,
                          window=cfg.window, kv_len=kv_len,
-                         q_offset=q_offset)
+                         q_offset=q_offset, page_table=page_table)
     else:
         attn = attention(q, k, v, impl=cfg.attn_impl, causal=True,
                          window=cfg.window, q_offset=q_offset, kv_len=kv_len)
@@ -465,3 +479,57 @@ def decode_step(params, cache, tokens, cfg: TransformerConfig,
     else:
         logits = logits[:, -1]     # (B, V)
     return logits, {"k": nk, "v": nv, "pos": pos0 + s}
+
+
+def init_paged_pool(cfg: TransformerConfig, pool_pages: int, page_size: int,
+                    dtype=None):
+    """Paged KV pool in layout (L, P+1, page_size, Hkv, dh). The last page
+    id (pool_pages) is the trash page absorbing unmapped reads/writes —
+    allocatable pages are 0..pool_pages-1."""
+    dtype = dtype or cfg.cdtype
+    shape = (cfg.n_layers, pool_pages + 1, page_size, cfg.n_kv_heads,
+             cfg.hd)
+    return jnp.zeros(shape, dtype)
+
+
+def paged_decode_step(params, cache, tokens, cfg: TransformerConfig):
+    """One paged decode step: tokens (B, 1). cache carries "kp"/"vp" pools
+    (L, P+1, ps, Hkv, dh), "ptab" (B, max_pages) int32 and "pos" (B,).
+    Returns (logits (B, V), new cache). Positions/rope/sinusoidal handling
+    mirrors decode_step exactly so paged == dense bitwise."""
+    x = _embed(cfg, params, tokens)
+    b, s = x.shape[0], x.shape[1]
+    assert s == 1 and cfg.n_codebooks == 1
+    pos0 = cache["pos"]                      # (B,) per-slot positions
+    if cfg.pos_embed == "sinusoidal":
+        d = cfg.d_model
+        p = _qpos(pos0, s).astype(jnp.float32)
+        if p.ndim == 1:
+            p = p[None]
+        dim = jnp.arange(0, d, 2).astype(jnp.float32)
+        ang = p[..., None] / (10000.0 ** (dim / d))
+        x = x + jnp.concatenate([jnp.sin(ang), jnp.cos(ang)],
+                                -1).astype(x.dtype)
+    pos_ids = _qpos(pos0, s)
+    if cfg.mrope_sections is not None:
+        p = jnp.broadcast_to(pos_ids, (b, s))
+        positions = jnp.stack([p, p, p])
+    else:
+        positions = pos_ids
+    cos, sin = _positions_to_cos_sin(cfg, positions, b, s, cfg.cdtype)
+    kv_len = pos0 + s
+    ptab = cache["ptab"]
+
+    def body(x, xs):
+        lp, kp, vp = xs
+        x, new_cache = _block(cfg, x, lp, cos, sin, q_offset=pos0,
+                              cache=(kp, vp, ptab), kv_len=kv_len)
+        return x, new_cache
+
+    x, (nkp, nvp) = jax.lax.scan(body, x,
+                                 (params["layers"], cache["kp"],
+                                  cache["vp"]))
+    x = _norm(cfg, x, params["final_norm"].astype(cfg.cdtype),
+              params.get("final_norm_bias"))
+    logits = _unembed(cfg, params, x[:, -1:])[:, -1]
+    return logits, {**cache, "kp": nkp, "vp": nvp, "pos": pos0 + s}

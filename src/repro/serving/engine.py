@@ -125,6 +125,19 @@ class EngineConfig:
         round-trip) — host syncs per token are ~1/decode_block.
       min_bucket: smallest power-of-two prefill bucket; prompts pad up
         to their bucket so traces stay bounded by len(buckets) + 1.
+      page_size: 0 = dense per-slot KV rows (the default); > 0 switches
+        transformer KV families to the paged layout — KV lives in a
+        shared pool of physical pages addressed through per-row page
+        tables, HBM tracks live tokens instead of max_batch * max_len,
+        and identical prompt heads share pages via refcounts.
+      pool_pages: physical page-pool size (paged only); None sizes the
+        pool dense-equivalent (max_batch * max_len worth of pages).
+        Undersizing it is the point: admission gates on free pages, so
+        slots can oversubscribe the pool safely.
+      prefix_cache: number of prefix-cache entries (paged only; 0 = off).
+        Whole-page prompt heads are published here and later prompts
+        with an identical head map the SAME physical pages (+refcount)
+        instead of recomputing/duplicating them.
     """
     max_batch: int = 8
     max_len: int = 512
@@ -132,6 +145,9 @@ class EngineConfig:
     seed: int = 0
     decode_block: int = 8           # tokens decoded per host round-trip
     min_bucket: int = 16            # smallest prefill bucket (pow2)
+    page_size: int = 0              # 0 = dense layout
+    pool_pages: Optional[int] = None
+    prefix_cache: int = 0           # prefix-cache entries (paged only)
 
     def __post_init__(self):
         if self.decode_block < 1:
@@ -140,6 +156,14 @@ class EngineConfig:
         if self.min_bucket < 1:
             raise ValueError(f"min_bucket must be >= 1, "
                              f"got {self.min_bucket}")
+        if self.page_size < 0:
+            raise ValueError(f"page_size must be >= 0, "
+                             f"got {self.page_size}")
+        if not self.page_size and self.pool_pages is not None:
+            raise ValueError("pool_pages requires page_size > 0")
+        if not self.page_size and self.prefix_cache:
+            raise ValueError("prefix_cache requires page_size > 0 "
+                             "(prefix sharing is page-granular)")
 
 
 def check_swap_compatible(old_params, new_params):
@@ -165,6 +189,12 @@ class ServingEngine:
         self.ecfg = ecfg
         spec_fn = getattr(fns, "decode_spec", None) or ds.decode_spec
         self.spec = spec_fn(cfg)
+        if ecfg.page_size:
+            self.spec = ds.paged_spec(
+                self.spec, page_size=ecfg.page_size,
+                max_batch=ecfg.max_batch, max_len=ecfg.max_len,
+                pool_pages=ecfg.pool_pages,
+                prefix_entries=ecfg.prefix_cache)
         self.cache = self.spec.init_state(ecfg.max_batch, ecfg.max_len)
         self._axes = self.spec.batch_axes()
         self._laxes = self.spec.length_axes()
@@ -188,6 +218,19 @@ class ServingEngine:
         self.stats = {"tokens": 0, "host_syncs": 0, "decode_blocks": 0,
                       "swaps": 0, "exported_slots": 0, "imported_slots": 0,
                       "standby_syncs": 0, "promoted_slots": 0}
+        # host-side conservative page accounting (paged layout only):
+        # admission reserves worst-case pages per request so the in-graph
+        # allocator's free stack can never underflow.  Invariant:
+        # device free pages >= self._pool_free >= 0.
+        self._pool_free = getattr(self.spec, "pool_pages", 0)
+        self._reserved: dict[int, tuple[int, int]] = {}  # slot -> (pages, pinned)
+        self._prefix_index: dict[bytes, tuple[int, int]] = {}  # hash -> (entry, n_pages)
+        self._prefix_staged: dict[bytes, tuple[int, int]] = {}
+        self._next_prefix_entry = 0
+        if ecfg.page_size:
+            self.stats.update(pages_reserved=0, pages_shared=0,
+                              prefix_hits=0, prefix_stores=0,
+                              admission_stalls=0)
 
         self._prefill = jax.jit(self._prefill_impl)
         self._engine_step = jax.jit(self._engine_step_impl)
@@ -233,28 +276,35 @@ class ServingEngine:
     def _engine_step_impl(self, params, cache, state):
         """Decode up to N tokens for every active slot with zero host syncs.
 
-        Each sub-step: batched spec.decode -> per-row sample -> masked
-        bookkeeping. Rows that finish (eos / budget / out of room) are
-        deactivated in-scan; inactive rows hold their state via
-        spec.freeze (KV: pos frozen so stale cache writes land in the
-        masked tail; carry: the whole row tree holds) and their PRNG
-        stream idles deterministically."""
+        Each sub-step: spec.advance (paged: map a fresh page for rows
+        crossing a page boundary; dense/carry: identity) -> batched
+        spec.decode -> per-row sample -> masked bookkeeping ->
+        spec.release (paged: finished rows' pages go back on the free
+        stack IN-SCAN, so they are admissible to the very next fill at
+        this block's boundary; dense/carry: identity). Rows that finish
+        (eos / budget / out of room) are deactivated in-scan; inactive
+        rows hold their state via spec.freeze (KV: pos frozen so stale
+        cache writes land in the masked tail — paged: in the trash page,
+        since a released row's table is all-trash; carry: the whole row
+        tree holds) and their PRNG stream idles deterministically."""
         n = self.ecfg.decode_block
         max_len = self.ecfg.max_len
 
         def sub(carry, _):
             cache, st = carry
+            was = st["active"]
+            cache = self.spec.advance(cache, was)
             logits, cache2 = self.spec.decode(params, cache,
                                               st["last"][:, None])
             pair = jax.vmap(jax.random.split)(st["rkey"])
             tok = self._sample(logits, pair[:, 1], st["temp"])
-            was = st["active"]
             tok = jnp.where(was, tok, st["last"])
             cache2 = self.spec.freeze(cache2, cache, was)
             pos = cache2["pos"]
             remaining = st["remaining"] - was.astype(jnp.int32)
             done = was & ((tok == st["eos"]) | (remaining <= 0)
                           | (pos + 1 >= max_len))
+            cache2 = self.spec.release(cache2, done)
             st2 = {"last": tok, "active": was & ~done,
                    "remaining": remaining, "temp": st["temp"],
                    "eos": st["eos"],
@@ -267,7 +317,7 @@ class ServingEngine:
 
     # --- bucketed prefill --------------------------------------------------
     def _prefill_impl(self, params, cache, state, tokens, lens, admit,
-                      temps, eos, budgets, seqs):
+                      temps, eos, budgets, seqs, page_ops):
         """Prefill `admit`-masked rows of a (max_batch, bucket_len) token
         block into the shared cache and sample each row's first token.
 
@@ -275,9 +325,12 @@ class ServingEngine:
         traces is bounded by the number of buckets, not by (group size x
         prompt length) combinations. The model half (ragged prefill +
         admit-masked merge into the shared state) is the family's
-        spec.prefill; the sampler half below is family-agnostic."""
+        spec.prefill; the sampler half below is family-agnostic.
+        `page_ops` carries the host's per-row prefix-cache plan (paged
+        layout only; the dense families ignore it): which pf entry to
+        map shared head pages from, and which rows publish theirs."""
         logits, new_cache = self.spec.prefill(params, cache, tokens, lens,
-                                              admit)
+                                              admit, page_ops=page_ops)
 
         # per-request PRNG streams: fold_in(base, submit_seq) — admission
         # order and slot placement cannot perturb sampling
@@ -287,6 +340,9 @@ class ServingEngine:
         first = self._sample(logits, pair[:, 1], temps)
         done0 = admit & ((first == eos) | (budgets <= 1)
                          | (lens + 1 >= self.ecfg.max_len))
+        # rows that finish at admission free their pages immediately
+        # (paged; identity otherwise)
+        new_cache = self.spec.release(new_cache, done0)
 
         def sel(new, old):
             return jnp.where(admit if new.ndim == 1 else admit[:, None],
@@ -308,20 +364,28 @@ class ServingEngine:
         source. One generic tree gather over the spec's batch axes.
 
         Always full-width (idx/drop are (max_batch,)): one trace covers
-        every export size, so repeated migrations are jit cache hits."""
-        bundle_cache = ds.state_rows(cache, self._axes, idx)
+        every export size, so repeated migrations are jit cache hits.
+
+        The bundle travels in the spec's WIRE format — for the paged
+        layout that is the dense logical row (gathered through the page
+        table on the way out), so physical page ids never leave the pod
+        and the receiver may run any layout with the same max_len.
+        Dropped rows hand their pages back to the pool (spec.release;
+        identity for dense/carry)."""
+        bundle_cache = self.spec.export_rows(cache, idx)
         bundle_state = jax.tree.map(lambda x: jnp.take(x, idx, axis=0),
                                     state)
+        new_cache = self.spec.release(cache, drop)
         new_state = {**state, "active": state["active"] & ~drop}
-        return bundle_cache, bundle_state, new_state
+        return bundle_cache, bundle_state, new_cache, new_state
 
     def _import_impl(self, cache, state, bcache, bstate, src_for_dst, mask):
         """Scatter bundle rows into `mask`-ed destination slots; row d
         receives bundle row `src_for_dst[d]`. One generic tree scatter
         over the spec's batch axes; unmasked rows are untouched, so
         resident generations cannot be perturbed by an import."""
-        new_cache = ds.merge_rows(cache, bcache, self._axes, src_for_dst,
-                                  mask)
+        new_cache = self.spec.import_rows(cache, bcache, src_for_dst,
+                                          mask)
 
         def sel(b, old):
             g = jnp.take(b, src_for_dst, axis=0)
@@ -354,10 +418,11 @@ class ServingEngine:
             idx[j] = s
             drop[s] = True
             reqs.append(req)
-        bcache, bstate, self.state = self._export(
+        bcache, bstate, self.cache, self.state = self._export(
             self.cache, self.state, jnp.asarray(idx), jnp.asarray(drop))
         for s in slot_ids:
             self.slots[s] = None
+            self._return_pages(s)
         self.stats["exported_slots"] += len(reqs)
         return {"cache": bcache, "state": bstate, "requests": reqs,
                 "params_version": self.params_version,
@@ -396,6 +461,7 @@ class ServingEngine:
         for j, d in enumerate(dst_slots):
             src[d] = j
             mask[d] = True
+        self._reserve_for_resume(dst_slots, reqs)
         self.cache, self.state = self._import(
             self.cache, self.state, bundle["cache"], bundle["state"],
             jnp.asarray(src), jnp.asarray(mask))
@@ -412,9 +478,9 @@ class ServingEngine:
         the whole carry IS the delta). Only rows written since the last
         sync cross the (simulated) wire, not the whole max_len cache row.
         Full-width (idx/starts are (max_batch,)) so every sync size
-        shares one trace."""
-        bcache = ds.delta_since(cache, self._axes, self._laxes, idx,
-                                starts, width)
+        shares one trace. Paged sources gather the window through the
+        page table — the delta bundle is layout-agnostic dense rows."""
+        bcache = self.spec.export_delta_rows(cache, idx, starts, width)
         bstate = jax.tree.map(lambda x: jnp.take(x, idx, axis=0), state)
         return bcache, bstate
 
@@ -427,8 +493,8 @@ class ServingEngine:
         cursor — when it reaches the source's pos the standby is
         promotable (a pointer-flip failover target); carry planes land
         there after every sync."""
-        new_cache = ds.delta_apply(sb_cache, bcache, self._axes,
-                                   self._laxes, src_for_dst, starts, mask)
+        new_cache = self.spec.apply_delta_rows(sb_cache, bcache,
+                                               src_for_dst, starts, mask)
 
         def sel(b, old):
             g = jnp.take(b, src_for_dst, axis=0)
@@ -437,8 +503,9 @@ class ServingEngine:
 
         return new_cache, jax.tree.map(sel, bstate, sb_state)
 
-    def _deactivate_impl(self, state, drop):
-        return {**state, "active": state["active"] & ~drop}
+    def _deactivate_impl(self, cache, state, drop):
+        cache = self.spec.release(cache, drop)
+        return cache, {**state, "active": state["active"] & ~drop}
 
     def ensure_standby(self):
         """Allocate the warm-standby store: a full-width mirror of the
@@ -447,7 +514,7 @@ class ServingEngine:
         the memory."""
         if self.standby is None:
             self.standby = {
-                "cache": jax.tree.map(jnp.zeros_like, self.cache),
+                "cache": self.spec.init_standby(self.cache),
                 "state": jax.tree.map(jnp.zeros_like, self.state),
             }
 
@@ -532,6 +599,7 @@ class ServingEngine:
         for (row, _), d in zip(pairs, dst_slots):
             src[d] = row
             mask[d] = True
+        self._reserve_for_resume(dst_slots, reqs)
         self.cache, self.state = self._import(
             self.cache, self.state, self.standby["cache"],
             self.standby["state"], jnp.asarray(src), jnp.asarray(mask))
@@ -549,7 +617,9 @@ class ServingEngine:
         drop = np.zeros((b,), bool)
         for s in slot_ids:
             drop[s] = True
-        self.state = self._deactivate(self.state, jnp.asarray(drop))
+            self._return_pages(s)
+        self.cache, self.state = self._deactivate(self.cache, self.state,
+                                                  jnp.asarray(drop))
 
     # --- param hot-swap (serving/training co-residency) --------------------
     def swap_params(self, new_params):
@@ -584,12 +654,124 @@ class ServingEngine:
             self.params_version += 1
             self.stats["swaps"] += 1
 
+    # --- host-side page accounting (paged layout only) ---------------------
+    @property
+    def _paged(self) -> bool:
+        return bool(self.ecfg.page_size)
+
+    def _return_pages(self, slot: int):
+        """A slot left the engine (finished / exported / cleared): its
+        worst-case reservation minus any permanently-pinned prefix pages
+        goes back to the host's free-page count."""
+        if not self._paged:
+            return
+        reserve, pinned = self._reserved.pop(slot, (0, 0))
+        self._pool_free += reserve - pinned
+
+    def _reserve_for_resume(self, dst_slots, reqs):
+        """Reserve pages for rows arriving via import/promote: worst case
+        = every page the resumed generation can still touch. Raises if
+        the pool cannot cover it (the caller keeps the bundle)."""
+        if not self._paged:
+            return
+        ps = self.ecfg.page_size
+        plans = []
+        for req in reqs:
+            kv = len(req.prompt) + len(req.generated)
+            left = req.max_new_tokens - len(req.generated)
+            need = -(-min(kv + max(left, 0), self.ecfg.max_len) // ps)
+            plans.append(need)
+        if sum(plans) > self._pool_free:
+            raise ValueError(
+                f"import: {sum(plans)} pages needed but only "
+                f"{self._pool_free} free in the pool")
+        for d, need in zip(dst_slots, plans):
+            self._reserved[d] = (need, 0)
+            self._pool_free -= need
+            self.stats["pages_reserved"] += need
+
+    def _page_plan(self, req: Request):
+        """Host half of admission for the paged layout: worst-case page
+        reservation + the prefix-cache plan.
+
+        Returns (reserve, pinned, ops) where ops = (pf_entry, pf_n,
+        pf_store, pf_store_n) for this row, or None if the pool cannot
+        cover the reservation right now.
+
+        Prefix matching is whole-page and longest-match over already
+        PUBLISHED entries (entries staged earlier in this same fill are
+        not yet resident on device, so they only become matchable after
+        their prefill call was issued). A complete miss publishes the
+        prompt's whole-page head if entries remain — pinned pages are
+        paid for by this request's reservation and never returned."""
+        ps = self.ecfg.page_size
+        s = len(req.prompt)
+        total = -(-min(s + req.max_new_tokens, self.ecfg.max_len) // ps)
+        prompt = np.asarray(req.prompt, np.int32)
+        entry, shared = -1, 0
+        store, store_n = -1, 0
+        if self.ecfg.prefix_cache:
+            for j in range(s // ps, 0, -1):
+                hit = self._prefix_index.get(prompt[:j * ps].tobytes())
+                if hit is not None:
+                    entry, shared = hit[0], j
+                    self.stats["prefix_hits"] += 1
+                    break
+            j_store = s // ps
+            if entry < 0 and j_store > 0 and \
+                    self._next_prefix_entry < self.ecfg.prefix_cache and \
+                    prompt[:j_store * ps].tobytes() not in self._prefix_staged:
+                # (a head already staged by an earlier row in this same
+                # fill is being published by THAT row — don't burn a
+                # second entry on it)
+                store = self._next_prefix_entry
+                store_n = j_store
+                self._next_prefix_entry += 1
+                for j in range(1, j_store + 1):
+                    key = prompt[:j * ps].tobytes()
+                    if key not in self._prefix_index and \
+                            key not in self._prefix_staged:
+                        self._prefix_staged[key] = (store, j)
+                self.stats["prefix_stores"] += 1
+        reserve = total - shared
+        if reserve > self._pool_free:
+            # roll back the store claim — the request stays queued
+            if store >= 0:
+                self._next_prefix_entry -= 1
+                self._prefix_staged = {
+                    k: v for k, v in self._prefix_staged.items()
+                    if v[0] != store}
+                self.stats["prefix_stores"] -= 1
+            if entry >= 0:
+                self.stats["prefix_hits"] -= 1
+            return None
+        pinned = store_n if store >= 0 else 0
+        self.stats["pages_reserved"] += reserve
+        self.stats["pages_shared"] += shared
+        return reserve, pinned, (entry, shared, store, store_n)
+
+    def page_stats(self) -> dict:
+        """Paged-pool occupancy: host-side conservative view plus the
+        device allocator's live-page count (one device scalar read — a
+        diagnostics call, not the hot path)."""
+        if not self._paged:
+            return {}
+        live = int(jax.device_get(self.spec.live_pages(self.cache)))
+        return {"pool_pages": self.spec.pool_pages,
+                "host_free": self._pool_free,
+                "device_live": live,
+                "page_size": self.ecfg.page_size,
+                "prefix_entries_used": self._next_prefix_entry}
+
     # --- host-side slot management ----------------------------------------
     def submit(self, req: Request):
-        if len(req.prompt) > self.ecfg.max_len:
+        if len(req.prompt) >= self.ecfg.max_len:
+            # == max_len is rejected too: the cache row would be full at
+            # admission with zero room for even one decoded token
             raise ValueError(
                 f"request {req.uid}: prompt length {len(req.prompt)} "
-                f"exceeds max_len {self.ecfg.max_len}")
+                f"must be < max_len {self.ecfg.max_len} (a prompt that "
+                f"fills the whole cache row leaves no room to decode)")
         if req._seq < 0:
             # a router may pre-assign plane-level seqs so each request's
             # PRNG stream is independent of which replica it lands on
@@ -598,16 +780,37 @@ class ServingEngine:
         self.queue.append(req)
 
     def _fill_slots(self):
-        """Admit queued requests into free slots via bucketed prefill."""
+        """Admit queued requests into free slots via bucketed prefill.
+
+        Paged layout: admission also gates on free PAGES — each request
+        reserves its worst-case page count (prompt + full decode budget,
+        minus prefix-shared pages) against the host's conservative pool
+        counter, so the in-graph allocator never underflows even with
+        slots oversubscribing an undersized pool. The queue is FIFO:
+        a head request that does not fit stalls admission (no reorder,
+        no starvation) until a decode block recycles enough pages."""
         free = [i for i, s in enumerate(self.slots) if s is None]
         if not free or not self.queue:
             return
         admitted = []
         while free and self.queue:
-            admitted.append((free.pop(0), self.queue.pop(0)))
+            if self._paged:
+                plan = self._page_plan(self.queue[0])
+                if plan is None:
+                    self.stats["admission_stalls"] += 1
+                    break
+                slot = free.pop(0)
+                self._reserved[slot] = plan[:2]
+                self._pool_free -= plan[0]
+                admitted.append((slot, self.queue.pop(0), plan[2]))
+            else:
+                admitted.append((free.pop(0), self.queue.pop(0), None))
+        if not admitted:
+            return
         groups = defaultdict(list)
-        for slot, req in admitted:
-            groups[self._bucket_for(len(req.prompt))].append((slot, req))
+        for slot, req, ops in admitted:
+            groups[self._bucket_for(len(req.prompt))].append(
+                (slot, req, ops))
 
         b = self.ecfg.max_batch
         results = []
@@ -620,7 +823,11 @@ class ServingEngine:
             eos = np.full((b,), -1, np.int32)
             budgets = np.ones((b,), np.int32)
             seqs = np.zeros((b,), np.int32)
-            for slot, req in grp:
+            page_ops = {"pf_entry": np.full((b,), -1, np.int32),
+                        "pf_n": np.zeros((b,), np.int32),
+                        "pf_store": np.full((b,), -1, np.int32),
+                        "pf_store_n": np.zeros((b,), np.int32)}
+            for slot, req, ops in grp:
                 req._params_version = self.params_version
                 tokens[slot, :len(req.prompt)] = req.prompt
                 lens[slot] = len(req.prompt)
@@ -630,23 +837,34 @@ class ServingEngine:
                 budgets[slot] = req.max_new_tokens
                 seqs[slot] = req._seq
                 self.slots[slot] = req
+                if ops is not None:
+                    (page_ops["pf_entry"][slot], page_ops["pf_n"][slot],
+                     page_ops["pf_store"][slot],
+                     page_ops["pf_store_n"][slot]) = ops
             self.cache, self.state, first, done0 = self._prefill(
                 self.params, self.cache, self.state, jnp.asarray(tokens),
                 jnp.asarray(lens), jnp.asarray(admit), jnp.asarray(temps),
-                jnp.asarray(eos), jnp.asarray(budgets), jnp.asarray(seqs))
+                jnp.asarray(eos), jnp.asarray(budgets), jnp.asarray(seqs),
+                jax.tree.map(jnp.asarray, page_ops))
             results.append((grp, first, done0))
+        # prefix entries published by the calls above are now resident
+        # on device — matchable from the next fill on
+        if self._prefix_staged:
+            self._prefix_index.update(self._prefix_staged)
+            self._prefix_staged.clear()
 
         # one transfer for all admission rounds in this fill
         flat = jax.device_get([(f, d) for _, f, d in results])  # repro-lint: allow[HS001] the single batched admission drain; counted in stats["host_syncs"]
         self.stats["host_syncs"] += 1
         for (grp, _, _), (first, done0) in zip(results, flat):
-            for slot, req in grp:
+            for slot, req, _ in grp:
                 req.generated.append(int(first[slot]))
                 self.stats["tokens"] += 1
                 if done0[slot]:
                     req.done = True
                     self.finished.append(req)
                     self.slots[slot] = None
+                    self._return_pages(slot)
 
     def _decode_block(self):
         """One fused device block; drain results in a single transfer."""
@@ -665,6 +883,7 @@ class ServingEngine:
                 req.done = True
                 self.finished.append(req)
                 self.slots[i] = None
+                self._return_pages(i)
 
     def step(self):
         """Admit new requests, then decode one block for all active slots.

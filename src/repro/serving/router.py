@@ -239,6 +239,7 @@ class ConstellationRouter:
         self._sb_free = [list(range(e.ecfg.max_batch)) for e in engines]
         self._pending_clear = [set() for _ in engines]  # rows to wipe on rejoin
         self._reserved = np.zeros(self.n_pods, int)
+        self._wire_bytes_cache: dict[int, tuple] = {}
         self._last_weights = np.full(self.n_pods, 1.0 / self.n_pods)
         # wall seconds of each tick's failover phase that moved >= 1 slot,
         # device work forced to completion on both edges so a pointer flip
@@ -256,6 +257,7 @@ class ConstellationRouter:
             "standby_seeded": 0, "standby_rehomed": 0,
             "replication_syncs": 0, "replicated_rows": 0,
             "full_rows_equiv": 0,
+            "replicated_bytes": 0, "full_bytes_equiv": 0,
             "dropped_deferred": 0, "deferred_max_age": 0,
             "reserved_slot_ticks": 0,
         }
@@ -281,10 +283,12 @@ class ConstellationRouter:
     def submit(self, req: Request):
         """Queue a request; the router owns the plane-level PRNG seq, so
         the request's sampling stream is identical wherever it lands."""
-        if len(req.prompt) > self.engines[0].ecfg.max_len:
+        if len(req.prompt) >= self.engines[0].ecfg.max_len:
             raise ValueError(
                 f"request {req.uid}: prompt length {len(req.prompt)} "
-                f"exceeds max_len {self.engines[0].ecfg.max_len}")
+                f"must be < max_len {self.engines[0].ecfg.max_len} (a "
+                f"prompt that fills the whole cache row leaves no room "
+                f"to decode)")
         if req.arch is not None and req.arch not in self._group_by_label:
             raise KeyError(
                 f"request {req.uid}: no arch group {req.arch!r} on this "
@@ -641,6 +645,16 @@ class ConstellationRouter:
         return moved
 
     # --- incremental background replication ---------------------------------
+    def _row_wire_bytes(self, pod: int):
+        """(full, per_pos, carry) wire bytes of one slot row on `pod`'s
+        engine, from the spec's axis declarations — computed once per
+        arch group (eval_shape only, no device work) and cached."""
+        grp = self._group_of[pod]
+        if grp not in self._wire_bytes_cache:
+            self._wire_bytes_cache[grp] = self.engines[pod].spec.\
+                row_wire_bytes(self.engines[pod].ecfg.max_len)
+        return self._wire_bytes_cache[grp]
+
     def _replicate(self, alive):
         """Keep every live session's warm standby in sync: ship the KV
         rows written since the last sync plus the state row, one jitted
@@ -690,18 +704,27 @@ class ConstellationRouter:
             # carry groups ship the whole O(1) state every sync, so the
             # cursor jumps straight to pos (fresh after every sync); the
             # rows accounting charges 1 row either way so the KV savings
-            # ratio is never inflated by carry traffic
+            # ratio is never inflated by carry traffic.  The BYTE
+            # counters come from the spec's axis declarations
+            # (row_wire_bytes), so a carry sync is charged its actual
+            # O(1) leaf bytes — not pretended to be one full KV row —
+            # and a windowed delta is charged carry + per_pos * rows.
             windowed = self.engines[src].spec.windowed
+            full_b, per_pos_b, carry_b = self._row_wire_bytes(src)
             for sess in group:
                 pos = self._kv_pos(sess.req)
                 if windowed:
                     new_cursor = min(sess.cursor + width, pos)
                     self.stats["replicated_rows"] += new_cursor - sess.cursor
                     self.stats["full_rows_equiv"] += pos
+                    self.stats["replicated_bytes"] += \
+                        carry_b + per_pos_b * (new_cursor - sess.cursor)
                 else:
                     new_cursor = pos
                     self.stats["replicated_rows"] += 1
                     self.stats["full_rows_equiv"] += 1
+                    self.stats["replicated_bytes"] += full_b
+                self.stats["full_bytes_equiv"] += full_b
                 sess.cursor = new_cursor
                 sess.synced_len = (len(sess.req.generated)
                                    if new_cursor == pos else -1)

@@ -308,6 +308,39 @@ def test_mixed_plane_per_group_param_swap():
 # --------------------------------------------------------------------------
 # DiLoCo rounds are not transformer-only
 # --------------------------------------------------------------------------
+def test_paged_spec_guards_and_allocator_identities():
+    """paged_spec wraps only dense transformer KV; the device allocator's
+    alloc/release round-trip conserves the pool and keeps refcounted
+    (shared) pages resident."""
+    from repro.models.decode_state import paged_spec
+
+    cfg, _, _ = _setup("suncatcher-lm-100m")
+    with pytest.raises(ValueError, match="does not page"):
+        carry_cfg, _, _ = _setup("recurrentgemma-2b")
+        paged_spec(decode_spec(carry_cfg), page_size=16, max_batch=2,
+                   max_len=64)
+
+    spec = paged_spec(decode_spec(cfg), page_size=16, max_batch=2,
+                      max_len=64, pool_pages=12)
+    assert spec.state_kind == "kv-paged"
+    st = spec.init_state(2, 64)
+    assert int(spec.live_pages(st)) == 0
+    # rows advance across page boundaries: pages appear one per crossing
+    st["pos"] = jnp.asarray([15, 31], jnp.int32)
+    active = jnp.asarray([True, True])
+    st = spec.advance(st, active)       # 15->16, 31->32: no boundary yet
+    assert int(spec.live_pages(st)) == 0
+    st["pos"] = st["pos"] + 1
+    st = spec.advance(st, active)       # 16 and 32 ARE boundaries
+    assert int(spec.live_pages(st)) == 2
+    st = spec.release(st, jnp.asarray([True, False]))
+    assert int(spec.live_pages(st)) == 1
+    st = spec.release(st, jnp.asarray([False, True]))
+    assert int(spec.live_pages(st)) == 0
+    # the freed pool is whole again: every id back on the stack exactly once
+    assert sorted(np.asarray(st["free"]).tolist()) == list(range(12))
+
+
 @pytest.mark.parametrize("arch", CARRY_ARCHS)
 def test_recurrent_fused_diloco_round_bit_identical(arch):
     """The fused device-resident DiLoCo round runs recurrent families and

@@ -7,7 +7,11 @@ import pytest
 from _hyp import given, settings, st
 
 from repro.kernels.decode_attention import (decode_attention,
-                                            decode_attention_reference)
+                                            decode_attention_reference,
+                                            gather_pages,
+                                            paged_decode_attention,
+                                            paged_decode_attention_reference)
+from repro.kernels.decode_attention.paged import paged_decode_attention_fwd
 from repro.kernels.flash_attention import attention_reference, flash_attention
 from repro.kernels.flash_attention.kernel import flash_attention_fwd
 from repro.kernels.rglru_scan import (rglru_scan, rglru_scan_associative,
@@ -163,6 +167,139 @@ class TestDecodeAttention:
         vc2 = vc.at[0, 100:].set(-1e4).at[1, 300:].set(-1e4)
         out2 = decode_attention_fwd(q, kc2, vc2, lens, interpret=True)
         np.testing.assert_array_equal(np.asarray(out1), np.asarray(out2))
+
+
+def _paged_setup(key, b, hkv, dh, page_size, max_pages, pool_pages,
+                 dtype=jnp.float32):
+    """Random pool + a permuted (non-contiguous) page table per row; the
+    trash page id is pool_pages and fills every unmapped entry."""
+    kk, kv, kp = jax.random.split(key, 3)
+    kpool = jax.random.normal(kk, (pool_pages + 1, page_size, hkv, dh),
+                              dtype)
+    vpool = jax.random.normal(kv, (pool_pages + 1, page_size, hkv, dh),
+                              dtype)
+    perm = jax.random.permutation(kp, pool_pages)[:b * max_pages]
+    ptab = perm.reshape(b, max_pages).astype(jnp.int32)
+    return kpool, vpool, ptab
+
+
+class TestPagedDecodeAttention:
+    """The paged kernel walks a per-row page table over a shared physical
+    pool; outputs must match the gather-to-dense oracle bitwise-closely and
+    be exactly independent of trash-page / unmapped-pool garbage."""
+
+    @pytest.mark.parametrize("b,h,hkv,ps,mp,dh", [
+        (2, 8, 8, 16, 8, 64),   # MHA
+        (3, 8, 2, 32, 4, 128),  # GQA 4:1
+        (1, 4, 1, 64, 4, 64),   # MQA
+    ])
+    @pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+    def test_sweep_vs_oracle(self, b, h, hkv, ps, mp, dh, dtype):
+        kq, kkv = jax.random.split(jax.random.PRNGKey(20))
+        q = jax.random.normal(kq, (b, h, dh), dtype)
+        kpool, vpool, ptab = _paged_setup(kkv, b, hkv, dh, ps, mp,
+                                          pool_pages=b * mp + 3, dtype=dtype)
+        kv_len = (ps * mp) // 2 + 7             # scalar broadcasts
+        out = paged_decode_attention_fwd(q, kpool, vpool, ptab, kv_len,
+                                         interpret=True)
+        ref = paged_decode_attention_reference(q, kpool, vpool, ptab,
+                                               kv_len)
+        np.testing.assert_allclose(
+            np.asarray(out, np.float32), np.asarray(ref, np.float32),
+            atol=_tol(dtype), rtol=_tol(dtype))
+
+    def test_ragged_lens_including_empty_row(self):
+        b, h, hkv, ps, mp, dh = 4, 4, 2, 16, 8, 64
+        kq, kkv = jax.random.split(jax.random.PRNGKey(21))
+        q = jax.random.normal(kq, (b, h, dh))
+        kpool, vpool, ptab = _paged_setup(kkv, b, hkv, dh, ps, mp,
+                                          pool_pages=b * mp)
+        lens = jnp.asarray([0, 1, ps * mp - 1, ps + 3], jnp.int32)
+        out = paged_decode_attention_fwd(q, kpool, vpool, ptab, lens,
+                                         interpret=True)
+        ref = paged_decode_attention_reference(q, kpool, vpool, ptab, lens)
+        np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                                   atol=2e-5, rtol=2e-5)
+        assert np.all(np.asarray(out[0]) == 0.0)    # empty row: exact zeros
+
+    def test_trash_page_poison_is_bitwise_invariant(self):
+        """Unmapped table entries alias the trash page; poisoning it (and
+        every unreferenced pool page) to huge values must not change ANY
+        output bit — masking happens before the exp."""
+        b, h, hkv, ps, mp, dh = 2, 4, 2, 16, 6, 64
+        pool_pages = 24
+        kq, kkv = jax.random.split(jax.random.PRNGKey(22))
+        q = jax.random.normal(kq, (b, h, dh))
+        kpool, vpool, ptab = _paged_setup(kkv, b, hkv, dh, ps, mp,
+                                          pool_pages=pool_pages)
+        lens = jnp.asarray([ps * 2 + 5, ps * mp - 2], jnp.int32)
+        # map entries past each row's last live page to the trash id
+        live = -(-lens // ps)                    # pages per row
+        col = jnp.arange(mp)[None, :]
+        ptab = jnp.where(col < live[:, None], ptab, pool_pages)
+        out1 = paged_decode_attention_fwd(q, kpool, vpool, ptab, lens,
+                                          interpret=True)
+        referenced = np.zeros(pool_pages + 1, bool)
+        referenced[np.asarray(ptab).ravel()] = True
+        poison = jnp.asarray(~referenced)[:, None, None, None]
+        kpool2 = jnp.where(poison, 1e4, kpool).at[pool_pages].set(1e4)
+        vpool2 = jnp.where(poison, -1e4, vpool).at[pool_pages].set(-1e4)
+        out2 = paged_decode_attention_fwd(q, kpool2, vpool2, ptab, lens,
+                                          interpret=True)
+        np.testing.assert_array_equal(np.asarray(out1), np.asarray(out2))
+
+    def test_paged_matches_dense_kernel_on_same_logical_cache(self):
+        """Gathering the paged pool to the dense layout and running the
+        dense kernel gives the same result as the paged kernel directly."""
+        b, h, hkv, ps, mp, dh = 2, 8, 2, 32, 4, 64
+        kq, kkv = jax.random.split(jax.random.PRNGKey(23))
+        q = jax.random.normal(kq, (b, h, dh))
+        kpool, vpool, ptab = _paged_setup(kkv, b, hkv, dh, ps, mp,
+                                          pool_pages=b * mp)
+        lens = jnp.asarray([ps * 3 + 9, ps * mp], jnp.int32)
+        from repro.kernels.decode_attention.kernel import decode_attention_fwd
+        dense = decode_attention_fwd(q, gather_pages(kpool, ptab),
+                                     gather_pages(vpool, ptab), lens,
+                                     block_k=ps * mp, interpret=True)
+        paged = paged_decode_attention_fwd(q, kpool, vpool, ptab, lens,
+                                           interpret=True)
+        np.testing.assert_allclose(np.asarray(paged), np.asarray(dense),
+                                   atol=2e-5, rtol=2e-5)
+
+    def test_model_layout_wrapper(self):
+        b, h, hkv, ps, mp, dh = 2, 8, 2, 16, 4, 64
+        kq, kkv = jax.random.split(jax.random.PRNGKey(24))
+        q = jax.random.normal(kq, (b, 1, h, dh))        # (B, 1, H, dh)
+        kpool, vpool, ptab = _paged_setup(kkv, b, hkv, dh, ps, mp,
+                                          pool_pages=b * mp)
+        out = paged_decode_attention(q, kpool, vpool, ptab, ps * 2 + 1,
+                                     interpret=True)
+        ref = paged_decode_attention_reference(q[:, 0], kpool, vpool, ptab,
+                                               ps * 2 + 1)
+        np.testing.assert_allclose(np.asarray(out[:, 0]), np.asarray(ref),
+                                   atol=2e-5, rtol=2e-5)
+
+    @settings(max_examples=10, deadline=None)
+    @given(st.integers(1, 3), st.sampled_from([1, 2]),
+           st.sampled_from([16, 32]), st.integers(1, 63))
+    def test_property_shared_pages_give_identical_rows(self, b, hkv, ps,
+                                                       kv_len):
+        """Prefix sharing aliases physical pages across rows: rows with
+        identical tables and lengths must produce bitwise-identical
+        outputs for identical queries."""
+        h, dh, mp = hkv * 2, 64, 2
+        kq, kkv = jax.random.split(jax.random.PRNGKey(kv_len * 31 + b))
+        q1 = jax.random.normal(kq, (1, h, dh))
+        q = jnp.broadcast_to(q1, (b, h, dh))
+        kpool, vpool, ptab = _paged_setup(kkv, 1, hkv, dh, ps, mp,
+                                          pool_pages=mp + 2)
+        shared = jnp.broadcast_to(ptab[:1], (b, mp))
+        out = paged_decode_attention_fwd(q, kpool, vpool, shared,
+                                         min(kv_len, ps * mp),
+                                         interpret=True)
+        for i in range(1, b):
+            np.testing.assert_array_equal(np.asarray(out[0]),
+                                          np.asarray(out[i]))
 
 
 class TestRGLRUScan:

@@ -440,6 +440,58 @@ def test_replication_is_incremental(setup):
     assert got == _serve_single(cfg, fns, params, reqs)
 
 
+def test_router_submit_rejects_prompt_at_max_len(setup):
+    """The plane-level intake pins the same boundary as the engine: a
+    prompt of exactly max_len has no room to decode and is rejected
+    before it can occupy a session."""
+    cfg, fns, params = setup
+    plane = _plane(cfg, fns, params, 2)
+    with pytest.raises(ValueError, match="must be < max_len"):
+        plane.submit(Request(uid=0, prompt=np.zeros(64, np.int32),
+                             max_new_tokens=1))
+    assert plane.plane_stats()["sessions_active"] == 0
+
+
+def test_replicated_bytes_track_axis_declarations(setup):
+    """Byte counters come from the spec's axis declarations, not a
+    one-KV-row-per-sync fiction: a windowed sync is charged carry bytes +
+    per_pos * rows shipped; a carry-family sync is charged its actual
+    O(1) state bytes."""
+    cfg, fns, params = setup
+    reqs = [_greq(cfg, 0, plen=16, max_new=20),
+            _greq(cfg, 1, plen=16, max_new=20)]
+    plane = _plane(cfg, fns, params, 2, grid=GridConfig(repl_chunk=4))
+    for r in _clone(reqs):
+        plane.submit(r)
+    plane.run()
+    full_b, per_pos_b, carry_b = plane.engines[0].spec.row_wire_bytes(
+        plane.engines[0].ecfg.max_len)
+    assert per_pos_b > 0                        # KV: cache grows with seq
+    st = plane.stats
+    n_syncs = st["full_bytes_equiv"] // full_b  # (session, sync) events
+    assert st["replicated_bytes"] == (carry_b * n_syncs
+                                      + per_pos_b * st["replicated_rows"])
+    assert 0 < st["replicated_bytes"] < st["full_bytes_equiv"]
+
+    # carry family: the whole state ships every sync, and its wire cost
+    # is the O(1) carry leaves — NOT one full KV row
+    ccfg = registry.get_reduced_config("recurrentgemma-2b")
+    cfns = registry.model_fns(ccfg)
+    cparams = cfns.init(jax.random.PRNGKey(0), ccfg)
+    cplane = ConstellationRouter(
+        [ServingEngine(ccfg, cfns, cparams, _ecfg()) for _ in range(2)],
+        grid=GridConfig(repl_chunk=4))
+    cplane.submit(_greq(ccfg, 0, plen=8, max_new=16))
+    cplane.run()
+    cfull, cper, ccarry = cplane.engines[0].spec.row_wire_bytes(
+        cplane.engines[0].ecfg.max_len)
+    assert cper == 0 and ccarry == cfull        # every leaf is carry
+    cst = cplane.stats
+    assert cst["replication_syncs"] >= 1
+    assert cst["replicated_bytes"] == cst["full_bytes_equiv"] > 0
+    assert cst["replicated_bytes"] % cfull == 0
+
+
 def test_full_drain_mode_is_pr5_plane(setup):
     """GridConfig(replicate=False) is the drain-only plane: outages still
     complete with zero drops and bit-identical outputs, but every

@@ -199,6 +199,150 @@ def test_max_new_tokens_one_finishes_at_prefill(setup):
     assert len(done) == 1 and len(done[0].generated) == 1
 
 
+# ------------------------------------------------------------- paged KV --
+
+def _paged_ecfg(**kw):
+    base = dict(max_batch=4, max_len=64, page_size=16, decode_block=8,
+                seed=7)
+    base.update(kw)
+    return EngineConfig(**base)
+
+
+def _serve_all(eng, prompts, max_new=9, temps=True):
+    for uid, p in enumerate(prompts):
+        eng.submit(Request(uid=uid, prompt=p, max_new_tokens=max_new,
+                           temperature=0.8 if temps and uid % 2 else 0.0))
+    return {r.uid: r.generated for r in eng.run()}
+
+
+def test_paged_engine_bit_identical_to_dense(setup):
+    """The paged layout is a storage change, not a numerics change: greedy
+    AND sampled outputs match the dense engine token-for-token."""
+    cfg, fns, params = setup
+    prompts = _mixed_workload(cfg, n=10, seed=5)
+    dense = _serve_all(ServingEngine(cfg, fns, params,
+                                     _paged_ecfg(page_size=0)), prompts)
+    paged_eng = ServingEngine(cfg, fns, params, _paged_ecfg())
+    paged = _serve_all(paged_eng, prompts)
+    assert paged == dense
+    # drained engine leaks no pages: host view full, device live zero
+    ps = paged_eng.page_stats()
+    assert ps["host_free"] == ps["pool_pages"] and ps["device_live"] == 0
+
+
+def test_paged_engine_through_pallas_kernel(setup, monkeypatch):
+    """REPRO_DECODE_ATTN=interpret drives the engine through the paged
+    pallas decode kernel (page-table walk, pl.when page skipping) in
+    interpret mode; greedy tokens must match the ref paged path."""
+    from dataclasses import replace
+
+    cfg, fns, _ = setup
+    pcfg = replace(cfg, attn_impl="pallas")
+    params = fns.init(jax.random.PRNGKey(2), pcfg)
+    prompts = _mixed_workload(cfg, n=3, seed=9)
+
+    def serve():
+        eng = ServingEngine(pcfg, fns, params, _paged_ecfg(max_batch=2))
+        return _serve_all(eng, prompts, max_new=5, temps=False)
+
+    ref = serve()
+    monkeypatch.setenv("REPRO_DECODE_ATTN", "interpret")
+    assert serve() == ref
+
+
+def test_paged_continuous_admission_undersized_pool(setup):
+    """A pool too small for all slots at once gates admission on free
+    pages (head-of-line stall), recycles a finishing request's pages into
+    later admissions, completes everything, and stays bit-identical."""
+    cfg, fns, params = setup
+    prompts = _mixed_workload(cfg, n=10, seed=5)
+    dense = _serve_all(ServingEngine(cfg, fns, params,
+                                     _paged_ecfg(page_size=0)), prompts)
+    eng = ServingEngine(cfg, fns, params, _paged_ecfg(pool_pages=8))
+    got = _serve_all(eng, prompts)
+    assert got == dense
+    assert eng.stats["admission_stalls"] > 0
+    ps = eng.page_stats()
+    assert ps["host_free"] == ps["pool_pages"] and ps["device_live"] == 0
+
+
+def test_paged_prefix_sharing_refcounts_pages(setup):
+    """Requests repeating an already-served prompt head map its whole
+    pages from the prefix cache instead of re-allocating: shared pages
+    show up in stats and in a lower live-page peak."""
+    cfg, fns, params = setup
+    head = np.arange(32, dtype=np.int32)           # two whole 16-tok pages
+    tails = [np.concatenate([head, np.full(4 + i, i, np.int32)])
+             for i in range(4)]
+    eng = ServingEngine(cfg, fns, params,
+                        _paged_ecfg(max_batch=2, prefix_cache=4))
+    # first request stores the head; later ones (separate prefill calls,
+    # since max_batch=2 < len(tails)) consume it
+    got = _serve_all(eng, tails, max_new=4, temps=False)
+    dense = _serve_all(ServingEngine(cfg, fns, params,
+                                     _paged_ecfg(max_batch=2, page_size=0)),
+                       tails, max_new=4, temps=False)
+    assert got == dense
+    assert eng.stats["prefix_stores"] >= 1
+    assert eng.stats["prefix_hits"] >= 1
+    assert eng.stats["pages_shared"] >= 2
+    ps = eng.page_stats()
+    # pinned prefix pages stay resident after drain; nothing else does
+    assert ps["device_live"] == 2 * eng.stats["prefix_stores"]
+
+
+def test_paged_trace_count_bounded(setup):
+    """Continuous admission at page granularity must not add traces: the
+    paged engine compiles at most len(buckets) + 1 (prefill buckets + one
+    fused decode block) for a mixed-length workload."""
+    cfg, fns, params = setup
+    eng = ServingEngine(cfg, fns, params, _paged_ecfg(max_batch=2))
+    got = _serve_all(eng, _mixed_workload(cfg, n=9, seed=3), max_new=6,
+                     temps=False)
+    assert len(got) == 9
+    traces = eng.trace_count()
+    if traces < 0:
+        pytest.skip("jit cache introspection unavailable in this jax")
+    assert traces <= len(eng.buckets()) + 1
+
+
+# --------------------------------------------- submit boundary + buckets --
+
+def test_submit_rejects_prompt_at_max_len(setup):
+    """A prompt of exactly max_len fills the row with no room for even one
+    decoded token: submit must reject it with a clear error, and max_len-1
+    must still be admittable."""
+    cfg, fns, params = setup
+    eng = ServingEngine(cfg, fns, params,
+                        EngineConfig(max_batch=1, max_len=32))
+    with pytest.raises(ValueError, match="must be < max_len"):
+        eng.submit(Request(uid=0, prompt=np.zeros(32, np.int32),
+                           max_new_tokens=1))
+    with pytest.raises(ValueError, match="must be < max_len"):
+        eng.submit(Request(uid=1, prompt=np.zeros(40, np.int32),
+                           max_new_tokens=1))
+    eng.submit(Request(uid=2, prompt=np.zeros(31, np.int32),
+                       max_new_tokens=4))
+    done = eng.run()
+    assert len(done) == 1 and len(done[0].generated) == 1  # row cap at 32
+
+
+def test_prefill_bucket_edges(setup):
+    cfg, fns, params = setup
+
+    def mk(min_bucket, max_len):
+        return ServingEngine(cfg, fns, params,
+                             EngineConfig(max_batch=1, max_len=max_len,
+                                          min_bucket=min_bucket))
+
+    # pow2 max_len: the doubling ladder lands exactly on it, no duplicate
+    assert mk(16, 64).buckets() == [16, 32, 64]
+    # non-pow2 max_len: final bucket is max_len itself
+    assert mk(16, 48).buckets() == [16, 32, 48]
+    # min_bucket above max_len degenerates to a single max_len bucket
+    assert mk(128, 64).buckets() == [64]
+
+
 def test_eos_frees_slot(setup):
     cfg, fns, params = setup
     eng = ServingEngine(cfg, fns, params,
